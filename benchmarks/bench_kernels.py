@@ -1,0 +1,120 @@
+"""Kernel + serving micro-benchmarks (CPU wall time; interpret=True for
+Pallas bodies — correctness-path timing, the TPU perf story lives in the
+roofline analysis)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, n=3):
+    fn()                                   # compile
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n
+
+
+def bench_kernels() -> list[tuple]:
+    r = np.random.default_rng(0)
+    rows = []
+
+    # flash attention (oracle path: the production CPU route)
+    from repro.kernels.flash_attention import ops as fa
+    q = jnp.asarray(r.normal(size=(4, 256, 8, 64)).astype(np.float32))
+    k = jnp.asarray(r.normal(size=(4, 256, 2, 64)).astype(np.float32))
+    dt = _time(lambda: fa.flash_attention(q, k, k, use_kernel=False)
+               .block_until_ready())
+    rows.append(("kernel/flash_attention_ref_b4s256", dt * 1e6, "oracle"))
+    dt = _time(lambda: fa.flash_attention(q, k, k, block_q=128,
+                                          block_kv=128)
+               .block_until_ready(), n=1)
+    rows.append(("kernel/flash_attention_interp_b4s256", dt * 1e6,
+                 "pallas-interpret"))
+
+    # impact scan
+    from repro.kernels.impact_scan import ops as isc
+    docs = jnp.asarray(r.integers(-1, 4096, (16, 2048)).astype(np.int32))
+    imps = jnp.asarray((r.random((16, 2048)) * 255).astype(np.float32))
+    dt = _time(lambda: isc.saat_accumulate(docs, imps, n_docs=4096,
+                                           rho=1024, use_kernel=False)
+               .block_until_ready())
+    rows.append(("kernel/impact_scan_ref_16q", dt * 1e6, "oracle"))
+
+    # topk
+    from repro.kernels.topk import ops as tk
+    s = jnp.asarray(r.normal(size=(16, 65536)).astype(np.float32))
+    dt = _time(lambda: tk.topk_select(s, 64, use_kernel=False)[0]
+               .block_until_ready())
+    rows.append(("kernel/topk_ref_16x64k", dt * 1e6, "oracle"))
+
+    # embedding bag
+    from repro.kernels.embedding_bag import ops as eb
+    t = jnp.asarray(r.normal(size=(100_000, 32)).astype(np.float32))
+    ids = jnp.asarray(r.integers(-1, 100_000, (1024, 8)).astype(np.int32))
+    dt = _time(lambda: eb.embedding_bag(t, ids, use_kernel=False)
+               .block_until_ready())
+    rows.append(("kernel/embedding_bag_ref_1k", dt * 1e6, "oracle"))
+
+    return rows
+
+
+def bench_cascade_latency() -> list[tuple]:
+    """The prediction overhead the paper argues is negligible."""
+    from benchmarks import common
+    from repro.core import cascade as cl
+    from repro.core import experiment as E
+    from repro.core import labeling
+
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    labels = np.asarray(labeling.envelope_labels(m, 0.05))
+    casc = cl.train_cascade(sys_.features, labels,
+                            n_cutoffs=len(sys_.k_cutoffs),
+                            forest_kwargs=common.forest_kwargs())
+    x = jnp.asarray(sys_.features[:512])
+    fn = jax.jit(lambda xx: cl.predict_batched(casc, xx, 0.75))
+    fn(x).block_until_ready()
+    t0 = time.time()
+    for _ in range(10):
+        fn(x).block_until_ready()
+    dt = (time.time() - t0) / 10
+    return [("serving/cascade_predict_512q", dt * 1e6,
+             f"{512 / dt:.0f} q/s")]
+
+
+def bench_serving() -> list[tuple]:
+    """End-to-end pipeline: dynamic vs fixed mean width + throughput."""
+    from benchmarks import common
+    from repro.core import cascade as cl
+    from repro.core import labeling
+    from repro.serving import pipeline as sp
+
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    labels = np.asarray(labeling.envelope_labels(m, 0.05))
+    casc = cl.train_cascade(sys_.features, labels,
+                            n_cutoffs=len(sys_.k_cutoffs),
+                            forest_kwargs=common.forest_kwargs())
+    cfg = sp.ServingConfig(knob="k", cutoffs=sys_.k_cutoffs,
+                           threshold=0.75, rerank_depth=100,
+                           stream_cap=sys_.cfg.stream_cap)
+    server = sp.RetrievalServer(sys_.index, casc, cfg)
+    qt = sys_.queries.terms[:256]
+    out = server.serve_batch(qt)          # includes compile
+    t0 = time.time()
+    out = server.serve_batch(qt)
+    dyn_s = time.time() - t0
+    t0 = time.time()
+    fixed = server.serve_fixed(qt, sys_.k_cutoffs[-1])
+    fix_s = time.time() - t0
+    return [
+        ("serving/dynamic_256q", dyn_s / 256 * 1e6,
+         f"mean_k={out['mean_param']:.0f}"),
+        ("serving/fixed_max_256q", fix_s / 256 * 1e6,
+         f"mean_k={fixed['mean_param']:.0f}"),
+    ]

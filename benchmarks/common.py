@@ -1,0 +1,71 @@
+"""Shared benchmark state: one system build + cached MED tables.
+
+Scale is CPU-budgeted (the paper's 40k queries x 50M docs becomes 1.2k
+queries x 12k docs by default — mechanisms identical, see DESIGN.md §9).
+Set REPRO_BENCH_SCALE=paperish for a bigger run (slow).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import experiment as E
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+_SCALES = {
+    "default": E.ExperimentConfig(
+        n_docs=12_000, vocab=20_000, n_queries=1_200, stream_cap=2048,
+        pool_depth=4_000, gold_depth=400, query_batch=128, seed=7),
+    "tiny": E.ExperimentConfig(
+        n_docs=2_000, vocab=5_000, n_queries=256, stream_cap=512,
+        pool_depth=800, gold_depth=150, query_batch=64, seed=7),
+    "paperish": E.ExperimentConfig(
+        n_docs=50_000, vocab=60_000, n_queries=8_000, stream_cap=4096,
+        pool_depth=10_000, gold_depth=1000, query_batch=128, seed=7),
+}
+
+_STATE: dict = {}
+
+
+def scale_name() -> str:
+    return os.environ.get("REPRO_BENCH_SCALE", "default")
+
+
+def get_system() -> E.System:
+    if "system" not in _STATE:
+        t0 = time.time()
+        _STATE["system"] = E.build_system(_SCALES[scale_name()])
+        _STATE["system_s"] = time.time() - t0
+    return _STATE["system"]
+
+
+def get_med(knob: str) -> dict[str, np.ndarray]:
+    key = f"med_{knob}"
+    if key not in _STATE:
+        sys_ = get_system()
+        cache = os.path.join(ART, f"bench_med_{knob}_{scale_name()}.npz")
+        if os.path.exists(cache):
+            z = np.load(cache)
+            _STATE[key] = {m: z[m] for m in z.files}
+            _STATE[key + "_s"] = 0.0
+        else:
+            t0 = time.time()
+            _STATE[key] = E.med_tables(sys_, knob)
+            _STATE[key + "_s"] = time.time() - t0
+            os.makedirs(ART, exist_ok=True)
+            np.savez(cache, **_STATE[key])
+    return _STATE[key]
+
+
+def med_seconds(knob: str) -> float:
+    return _STATE.get(f"med_{knob}_s", 0.0)
+
+
+def forest_kwargs() -> dict:
+    return {"tiny": dict(n_trees=5, max_depth=5),
+            "default": dict(n_trees=12, max_depth=7),
+            "paperish": dict(n_trees=25, max_depth=8)}[scale_name()]

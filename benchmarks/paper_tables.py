@@ -1,0 +1,233 @@
+"""Benchmarks reproducing the paper's tables and figures.
+
+Each function returns CSV rows (name, us_per_call, derived) where
+``derived`` carries the headline reproduction number and ``us_per_call``
+the wall time of the underlying per-query computation.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import experiment as E
+from repro.core import labeling, med, tradeoff
+
+ROWS = list
+
+
+def _us(total_s: float, n: int) -> float:
+    return 1e6 * total_s / max(n, 1)
+
+
+def bench_table3() -> list[tuple]:
+    """Table 3: MED_RBP at the 9 k cutoffs for the first topics."""
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    rows = []
+    for qi in range(4):
+        vals = "|".join(f"{v:.3f}" for v in m[qi])
+        rows.append((f"table3/topic{qi}", _us(common.med_seconds("k"),
+                                              sys_.queries.n_queries), vals))
+    # monotonicity rate across the whole collection (should be ~1.0)
+    mono = float(((m[:, 1:] - m[:, :-1]) <= 1e-5).mean())
+    rows.append(("table3/monotone_frac", 0.0, f"{mono:.4f}"))
+    return rows
+
+
+def _method_table(knob: str, metric: str, tau: float, tag: str,
+                  thresholds=(0.75, 0.80, 0.85)) -> list[tuple]:
+    sys_ = common.get_system()
+    m = common.get_med(knob)[metric]
+    cutoffs = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+    t0 = time.time()
+    res = E.run_methods(sys_, m, cutoffs, tau=tau, thresholds=thresholds,
+                        n_folds=3, forest_kwargs=common.forest_kwargs())
+    train_s = time.time() - t0
+    rows = []
+    for r in res.table:
+        rows.append((
+            f"{tag}/{r['method']}",
+            _us(train_s, sys_.queries.n_queries),
+            f"pred_{knob}={r['pred_k']:.0f};fixed_{knob}={r['fixed_k']:.0f};"
+            f"gain={r['k_gain_pct']:+.0f}%;pred_med={r['pred_med']:.3f};"
+            f"med_gain={r['med_gain_pct']:+.0f}%",
+        ))
+    return rows
+
+
+def bench_table4() -> list[tuple]:
+    """Table 4: interpolated k at MED_RBP <= 0.05."""
+    return _method_table("k", "rbp", 0.05, "table4")
+
+
+def bench_table5() -> list[tuple]:
+    """Table 5: interpolated k at MED_ERR <= 0.05."""
+    return _method_table("k", "err", 0.05, "table5")
+
+
+def bench_table6() -> list[tuple]:
+    """Table 6: interpolated rho at MED_RBP <= 0.05."""
+    return _method_table("rho", "rbp", 0.05, "table6")
+
+
+def bench_fig6() -> list[tuple]:
+    """Figure 6: fixed-cutoff horizon + cascade points, tau in {.05,.10}."""
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    rows = []
+    hor = tradeoff.horizon(m, sys_.k_cutoffs)
+    for p in hor:
+        rows.append((f"fig6/horizon_k{int(p.mean_cutoff)}", 0.0,
+                     f"med={p.mean_med:.4f}"))
+    for tau in (0.05, 0.10):
+        res = E.run_methods(sys_, m, sys_.k_cutoffs, tau=tau,
+                            thresholds=(0.75,), n_folds=3,
+                            kinds=("cascade",),
+                            forest_kwargs=common.forest_kwargs())
+        r = [x for x in res.table if x["method"] == "cascade_t0.75"][0]
+        rows.append((f"fig6/cascade_tau{tau}", 0.0,
+                     f"k={r['pred_k']:.0f};med={r['pred_med']:.4f};"
+                     f"gain={r['k_gain_pct']:+.0f}%"))
+    return rows
+
+
+def bench_fig8() -> list[tuple]:
+    """Figure 8: % of queries inside the envelope vs mean k."""
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    tau = 0.10
+    res = E.run_methods(sys_, m, sys_.k_cutoffs, tau=tau,
+                        thresholds=(0.75,), n_folds=3, kinds=("cascade",),
+                        forest_kwargs=common.forest_kwargs())
+    rows = []
+    labels = res.labels
+    rows.append(("fig8/oracle", 0.0,
+                 f"mean_k={tradeoff.mean_cutoff_value(labels, np.array(sys_.k_cutoffs)):.0f};"
+                 f"pct_under={tradeoff.pct_under_target(m, labels, tau):.3f}"))
+    pred = res.preds["cascade_t0.75"]
+    rows.append(("fig8/cascade", 0.0,
+                 f"mean_k={tradeoff.mean_cutoff_value(pred, np.array(sys_.k_cutoffs)):.0f};"
+                 f"pct_under={tradeoff.pct_under_target(m, pred, tau):.3f}"))
+    for ci, k in enumerate(sys_.k_cutoffs):
+        pctf = float((m[:, ci] <= tau).mean())
+        rows.append((f"fig8/fixed_k{k}", 0.0, f"pct_under={pctf:.3f}"))
+    return rows
+
+
+def bench_table7() -> list[tuple]:
+    """Table 7: held-out validation with (synthetic) relevance judgments.
+
+    Judgments are planted from the second-stage gold scores (pool-to-depth
+    style), mirroring how the paper validates that low MED_RBP implies no
+    measurable NDCG@10/ERR loss on held-out queries.
+    """
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    cutoffs = sys_.k_cutoffs
+    qn = sys_.queries.n_queries
+    held = np.arange(qn - 50, qn)         # 50 held-out topics
+    res = E.run_methods(sys_, m, cutoffs, tau=0.05, thresholds=(0.75,),
+                        n_folds=3, kinds=("cascade",),
+                        forest_kwargs=common.forest_kwargs())
+    pred = res.preds["cascade_t0.75"]
+
+    # judge pool: binary relevance for top-12 gold docs per held query
+    from repro.core.experiment import _batches  # noqa: SLF001
+    import jax.numpy as jnp
+    from repro.retrieval import gold, jass
+    idx = sys_.index
+    offsets = jnp.asarray(idx.offsets)
+    pdoc = jnp.asarray(idx.postings_doc)
+    pimp = jnp.asarray(idx.postings_impact.astype(np.float32))
+    pscore = jnp.asarray(idx.postings_score)
+    qt = jnp.asarray(sys_.queries.terms[held])
+    ds, im = jass.gather_streams(offsets, pdoc, pimp, qt,
+                                 cap=sys_.cfg.stream_cap)
+    acc = jass.saat_scores(ds, im, sys_.cfg.n_docs, ds.shape[-1])
+    deep = jass.rank_from_scores(acc, sys_.cfg.pool_depth)
+    sdocs, s3 = jass.gather_score_streams(offsets, pdoc, pscore, qt,
+                                          cap=sys_.cfg.stream_cap)
+    a1, a2, a3 = jass.scorer_accumulators(sdocs, s3, sys_.cfg.n_docs)
+    stage2 = gold.second_stage_scores(a1, a2, a3,
+                                      jnp.asarray(idx.corpus.doc_len),
+                                      jnp.asarray(held))
+    gold_rank = np.asarray(gold.gold_run_k(stage2, deep, 12))
+
+    def ndcg10_err(run):
+        nd, er = [], []
+        for qi in range(len(held)):
+            rel = {int(d): 1 for d in gold_rank[qi] if d >= 0}
+            dcg = sum(rel.get(int(d), 0) / np.log2(i + 2)
+                      for i, d in enumerate(run[qi][:10]))
+            ideal = sum(1 / np.log2(i + 2) for i in range(min(10, len(rel))))
+            nd.append(dcg / max(ideal, 1e-9))
+            e, notfound = 0.0, 1.0
+            for i, d in enumerate(run[qi][:10]):
+                r = 0.5 * rel.get(int(d), 0)
+                e += notfound * r / (i + 1)
+                notfound *= (1 - r)
+            er.append(e)
+        return float(np.mean(nd)), float(np.mean(er))
+
+    rows = []
+    for name, classes in (("oracle", res.labels[held]),
+                          ("cascade_t0.75", pred[held]),
+                          ("fixed_max", np.full(len(held),
+                                                len(cutoffs) - 1))):
+        ks = np.array(cutoffs)[np.minimum(classes, len(cutoffs) - 1)]
+        runs = np.stack([
+            np.asarray(gold.candidate_run_k(
+                stage2[qi:qi + 1], deep[qi:qi + 1], int(ks[qi]), 10))[0]
+            for qi in range(len(held))])
+        nd, er = ndcg10_err(runs)
+        rows.append((f"table7/{name}", 0.0,
+                     f"ndcg10={nd:.3f};err={er:.3f};mean_k={ks.mean():.0f}"))
+    return rows
+
+
+def bench_variable_thresholds() -> list[tuple]:
+    """Paper §5 roadmap: per-node tuned thresholds vs scalar t."""
+    import jax.numpy as jnp
+
+    from repro.core import cascade as cascade_lib
+    from repro.core import labeling
+
+    sys_ = common.get_system()
+    m = common.get_med("k")["rbp"]
+    labels = np.asarray(labeling.envelope_labels(m, 0.05))
+    n = len(labels)
+    tr, va, te = slice(0, n // 2), slice(n // 2, 3 * n // 4), \
+        slice(3 * n // 4, n)
+    casc = cascade_lib.train_cascade(
+        sys_.features[tr], labels[tr], n_cutoffs=len(sys_.k_cutoffs),
+        forest_kwargs=common.forest_kwargs())
+    tv = cascade_lib.tune_thresholds(casc, sys_.features[va], m[va],
+                                     sys_.k_cutoffs, tau=0.05)
+    rows = []
+    for name, t_ in (("scalar_t0.75", 0.75), ("tuned_vector", tv)):
+        pred = np.asarray(cascade_lib.predict_batched(
+            casc, jnp.asarray(sys_.features[te]), t_))
+        mk = tradeoff.mean_cutoff_value(pred, np.array(sys_.k_cutoffs))
+        pct = tradeoff.pct_under_target(m[te], pred, 0.05)
+        rows.append((f"var_thresh/{name}", 0.0,
+                     f"mean_k={mk:.0f};pct_under={pct:.3f}"))
+    return rows
+
+
+def bench_med_throughput() -> list[tuple]:
+    """MED computation speed (the labeling pipeline's inner loop)."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 100_000, (256, 400)).astype(np.int32)
+    b = rng.integers(0, 100_000, (256, 400)).astype(np.int32)
+    import jax
+    import jax.numpy as jnp
+    aj, bj = jnp.asarray(a), jnp.asarray(b)
+    med.med_rbp(aj, bj).block_until_ready()
+    t0 = time.time()
+    for _ in range(5):
+        med.med_rbp(aj, bj).block_until_ready()
+    dt = (time.time() - t0) / 5
+    return [("med_rbp/256q_depth400", _us(dt, 256), f"{256 / dt:.0f} q/s")]

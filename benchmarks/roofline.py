@@ -1,0 +1,96 @@
+"""§Roofline: build the per-(arch x shape) table from dry-run artifacts.
+
+Reads artifacts/dryrun/*.json (written by repro.launch.dryrun), prints the
+three roofline terms, the dominant bottleneck, the 6ND model-FLOPs ratio,
+and a one-line lever per cell.  Also emits EXPERIMENTS-ready markdown via
+--markdown.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+LEVERS = {
+    "compute_s": "raise arithmetic intensity (fuse, bf16 everywhere, "
+                 "cut remat recompute)",
+    "memory_s": "cut bytes: fuse elementwise chains, keep activations "
+                "bf16, larger blocks to amortize reloads",
+    "collective_s": "reshard: fewer all-gathers (FSDP prefetch), overlap "
+                    "collectives with compute, 2x pod-axis DP only",
+}
+
+
+def load(mesh: str = "single") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            rows.append(json.load(fh))
+    return rows
+
+
+def fmt_row(r: dict) -> dict:
+    out = {"arch": r["arch"], "shape": r["shape"], "status": r["status"]}
+    if r["status"] != "ok":
+        out["note"] = r.get("reason", r.get("error", ""))[:80]
+        return out
+    rf = r["roofline"]
+    if "compute_s" not in rf:
+        out["note"] = rf.get("note", "")
+        return out
+    out.update({
+        "compute_s": f"{rf['compute_s']:.3g}",
+        "memory_s": f"{rf['memory_s']:.3g}",
+        "collective_s": f"{rf['collective_s']:.3g}",
+        "dominant": rf["dominant"].replace("_s", ""),
+        "useful_flops": f"{rf.get('useful_flops_frac', float('nan')):.2f}",
+        "roofline_frac": f"{rf.get('roofline_fraction', float('nan')):.4f}",
+        "fits_hbm": r["memory"]["fits_hbm"],
+        "temp_GiB": f"{r['memory']['temp_bytes'] / 2**30:.1f}",
+        "lever": LEVERS[rf["dominant"]],
+    })
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = [fmt_row(r) for r in load(args.mesh)]
+    if args.markdown:
+        cols = ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                "dominant", "useful_flops", "roofline_frac", "temp_GiB",
+                "fits_hbm"]
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for r in rows:
+            print("| " + " | ".join(str(r.get(c, "—")) for c in cols) + " |")
+    else:
+        for r in rows:
+            print(json.dumps(r))
+
+
+def bench_roofline() -> list[tuple]:
+    """run.py hook: emit one CSV row per completed single-pod cell."""
+    rows = []
+    for r in load("single"):
+        if r["status"] == "ok" and "compute_s" in r.get("roofline", {}):
+            rf = r["roofline"]
+            bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            rows.append((f"roofline/{r['arch']}/{r['shape']}",
+                         bound * 1e6,
+                         f"dom={rf['dominant']};frac="
+                         f"{rf.get('roofline_fraction', 0):.4f}"))
+        else:
+            rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                         r["status"]))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark entry point: one function per paper table/figure + kernels +
+serving + roofline.  Prints ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_kernels, paper_tables, roofline
+
+    benches = [
+        paper_tables.bench_table3,
+        paper_tables.bench_table4,
+        paper_tables.bench_table5,
+        paper_tables.bench_table6,
+        paper_tables.bench_fig6,
+        paper_tables.bench_fig8,
+        paper_tables.bench_table7,
+        paper_tables.bench_variable_thresholds,
+        paper_tables.bench_med_throughput,
+        bench_kernels.bench_kernels,
+        bench_kernels.bench_cascade_latency,
+        bench_kernels.bench_serving,
+        roofline.bench_roofline,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for b in benches:
+        try:
+            for name, us, derived in b():
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{b.__name__},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""GraphSAGE minibatch training with the real fanout sampler.
+
+Builds a synthetic power-law graph, trains GraphSAGE with sampled blocks
+(fanout 15-10 scaled down), evaluates full-batch accuracy.
+
+Run:  PYTHONPATH=src python examples/gnn_sage.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import graph_data
+from repro.models import gnn, sampler
+from repro.optim import adamw
+
+
+def main() -> None:
+    cfg = gnn.SageConfig(n_layers=2, d_in=32, d_hidden=32, n_classes=8)
+    g = graph_data.make_graph(graph_data.GraphConfig(
+        n_nodes=2000, n_edges=12000, d_feat=cfg.d_in,
+        n_classes=cfg.n_classes, seed=0))
+    indptr, indices = sampler.csr_from_edges(g["edges"], 2000)
+    indptr_j, indices_j = jnp.asarray(indptr), jnp.asarray(indices)
+    feats_all = jnp.asarray(g["feats"])
+    labels_all = jnp.asarray(g["labels"])
+
+    params = gnn.init_sage(cfg, seed=0)
+    opt = adamw.init_opt_state(params)
+    acfg = adamw.AdamWConfig(lr=5e-3, weight_decay=0.0)
+
+    @jax.jit
+    def train_step(params, opt, feats, blocks, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn.sage_loss_blocks(p, cfg, feats, blocks,
+                                           labels))(params)
+        params, opt, _ = adamw.adamw_update(acfg, params, grads, opt)
+        return params, opt, loss
+
+    key = jax.random.key(0)
+    batch = 128
+    rng = np.random.default_rng(0)
+    for step in range(60):
+        key, sk = jax.random.split(key)
+        seeds = jnp.asarray(rng.choice(2000, batch, replace=False)
+                            .astype(np.int32))
+        fr, bl = sampler.sample_blocks(sk, indptr_j, indices_j, seeds,
+                                       (8, 5))
+        feats = [feats_all[f] for f in fr]
+        params, opt, loss = train_step(params, opt, feats, bl,
+                                       labels_all[seeds])
+        if step % 10 == 0:
+            logits = gnn.sage_forward_full(params, cfg, feats_all,
+                                           jnp.asarray(g["edges"]))
+            acc = float((jnp.argmax(logits, 1) == labels_all).mean())
+            print(f"step {step:3d}  sampled-loss {float(loss):.3f}  "
+                  f"full-graph acc {acc:.3f}")
+    print("done — sampled training transfers to full-graph inference")
+
+
+if __name__ == "__main__":
+    main()

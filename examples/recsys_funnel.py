@@ -1,0 +1,74 @@
+"""The paper's technique on the recsys funnel: per-request retrieval
+depth k predicted by the LR cascade, two-tower stage 1 + BST stage 2.
+
+This is the generalization the paper claims ("our methods should
+generalize to larger multistage architectures") made runnable: nothing in
+the framework changes except the two stages and the feature extractor.
+
+Run:  PYTHONPATH=src python examples/recsys_funnel.py
+"""
+
+import numpy as np
+
+from repro.core import cascade as cascade_lib
+from repro.data import recsys_data
+from repro.models.recsys import bst as BS
+from repro.models.recsys import retrieval_tower as RT
+from repro.serving import funnel as F
+
+
+def main() -> None:
+    tower_cfg = RT.TowerConfig(d_user_in=16, embed_dim=16, hidden=(32,),
+                               n_candidates=5000)
+    bst_cfg = BS.BSTConfig(embed_dim=16, seq_len=8, n_heads=4,
+                           item_vocab=5000, n_profile=4, mlp=(64, 32))
+    cfg = F.FunnelConfig(tower=tower_cfg, bst=bst_cfg, pool_depth=1000,
+                         eval_depth=30, tau=0.05)
+
+    tower_params = RT.init_tower(tower_cfg, seed=0)
+    bst_params = BS.init_bst(bst_cfg, seed=1)
+
+    rng = np.random.default_rng(0)
+    n = 384
+    user_feats = rng.normal(size=(n, 16)).astype(np.float32)
+    hist = rng.integers(0, 5000, (n, 8)).astype(np.int32)
+    hist[np.cumsum(np.ones((n, 8)), 1) > rng.integers(1, 9, (n, 1))] = -1
+
+    print("== gold + per-k candidate runs (no judgments) ==")
+    import jax.numpy as jnp
+    gold, runs = F.funnel_gold_runs(cfg, tower_params, bst_params,
+                                    jnp.asarray(user_feats),
+                                    jnp.asarray(hist))
+    labels, table = F.label_requests(cfg, gold, runs)
+    print("   class histogram:", np.bincount(labels,
+                                             minlength=len(cfg.cutoffs) + 1))
+    print("   mean MED_RBP per k:", np.round(table.mean(0), 3))
+
+    print("== train cascade on request features ==")
+    feats = np.asarray(F.request_features(jnp.asarray(user_feats),
+                                          jnp.asarray(hist)))
+    casc = cascade_lib.train_cascade(
+        feats[:256], labels[:256], n_cutoffs=len(cfg.cutoffs),
+        forest_kwargs=dict(n_trees=8, max_depth=5))
+
+    funnel = F.Funnel(cfg, tower_params, bst_params, casc)
+    out = funnel.serve(jnp.asarray(user_feats[256:]),
+                       jnp.asarray(hist[256:]))
+    # realized MED on held-out requests
+    realized = []
+    for i, cls in enumerate(np.minimum(
+            np.asarray(cascade_lib.predict_batched(
+                casc, jnp.asarray(feats[256:]), 0.75)),
+            len(cfg.cutoffs) - 1)):
+        realized.append(table[256 + i, cls])
+    fixed_k = cfg.cutoffs[-1]
+    print(f"\n   dynamic mean k = {out['mean_k']:.0f}  "
+          f"(fixed baseline k = {fixed_k})")
+    print(f"   held-out realized MED_RBP = {np.mean(realized):.4f} "
+          f"(envelope tau = {cfg.tau})")
+    print(f"   retrieval work saved vs fixed: "
+          f"{100 * (1 - out['mean_k'] / fixed_k):.0f}%")
+
+
+if __name__ == "__main__":
+    main()

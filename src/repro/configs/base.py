@@ -1,0 +1,54 @@
+"""Config registry + dry-run bundle protocol.
+
+Every architecture module exposes:
+
+  ARCH: str                      — the assigned arch id
+  SHAPES: dict[str, dict]        — its own input-shape set (kind + dims)
+  SKIPS: dict[str, str]          — shape -> reason, for inapplicable cells
+  model_config() / smoke_config()
+  dryrun_bundle(shape, mesh) -> Bundle  — everything jit.lower needs
+
+A Bundle carries the step function, abstract arg trees, sharding trees and
+roofline metadata; launch/dryrun.py is generic over it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["Bundle", "get", "ALL_ARCHS", "abstract_tree"]
+
+ALL_ARCHS = (
+    "tinyllama-1.1b", "qwen3-4b", "qwen2-0.5b", "deepseek-v3-671b",
+    "mixtral-8x22b",
+    "graphsage-reddit",
+    "wide-deep", "dien", "bst", "mind",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ALL_ARCHS}
+
+
+@dataclasses.dataclass
+class Bundle:
+    fn: Callable                 # function to jit
+    args: tuple                  # abstract arg pytrees (ShapeDtypeStruct)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    hints: dict                  # activation sharding hints
+    meta: dict                   # model_flops, params, kind, notes
+
+
+def get(arch: str):
+    return importlib.import_module(_MODULES[arch])
+
+
+def abstract_tree(tree: Any) -> Any:
+    """Convert a (possibly FakeArray-bearing) tree to ShapeDtypeStructs."""
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(tuple(a.shape), a.dtype), tree)

@@ -1,0 +1,64 @@
+"""bst — Behavior Sequence Transformer, 1 block, 8 heads
+[arXiv:1905.06874]."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import recsys_common as RC
+from repro.configs.base import Bundle, abstract_tree
+from repro.models.recsys import bst as BS
+
+ARCH = "bst"
+SHAPES = dict(RC.RECSYS_SHAPES)
+SKIPS: dict[str, str] = {}
+
+
+def model_config() -> BS.BSTConfig:
+    return BS.BSTConfig(embed_dim=32, seq_len=20, n_blocks=1, n_heads=8,
+                        item_vocab=2_000_000, n_profile=8,
+                        mlp=(1024, 512, 256))
+
+
+def smoke_config() -> BS.BSTConfig:
+    return BS.BSTConfig(embed_dim=16, seq_len=6, n_blocks=1, n_heads=4,
+                        item_vocab=100, n_profile=4, mlp=(32, 16))
+
+
+def _batch_abs(cfg, b):
+    return {
+        "hist_items": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+        "target_item": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "profile": jax.ShapeDtypeStruct((b, cfg.n_profile), jnp.float32),
+        "label": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def _model_flops(cfg, b, kind):
+    t, d = cfg.seq_len + 1, cfg.embed_dim
+    attn = cfg.n_blocks * (4 * 2 * t * d * d + 2 * 2 * t * t * d
+                           + 2 * 2 * t * d * cfg.ff_mult * d)
+    d_in = t * d + cfg.n_profile
+    mlp = 0
+    for h in cfg.mlp:
+        mlp += 2 * d_in * h
+        d_in = h
+    fwd = b * (attn + mlp)
+    return (3.0 if kind == "train" else 1.0) * fwd
+
+
+def dryrun_bundle(shape: str, mesh, mode: str = "cost") -> Bundle:
+    del mode  # no scans in this arch: one probe serves both
+    cfg = model_config()
+    if shape == "retrieval_cand":
+        return RC.retrieval_bundle(arch=ARCH, mesh=mesh)
+    params_abs = abstract_tree(BS.init_bst(cfg, abstract=True))
+    return RC.ranking_bundle(
+        arch=ARCH, shape_name=shape, mesh=mesh, params_abs=params_abs,
+        loss_fn=lambda p, b: BS.bst_loss(p, cfg, b),
+        logits_fn=lambda p, b: BS.bst_logits(p, cfg, b),
+        batch_abs_fn=functools.partial(_batch_abs, cfg),
+        model_flops_fn=functools.partial(_model_flops, cfg))

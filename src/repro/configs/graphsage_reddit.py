@@ -1,0 +1,183 @@
+"""graphsage-reddit — 2 layers, d_hidden 128, mean aggregator
+[arXiv:1706.02216].
+
+Four shapes, three regimes: full-batch (Cora-size + ogbn-products-size),
+sampled minibatch at Reddit scale (the paper's own setting: 232,965 nodes /
+114.6M edges, fanout 15-10), and batched small graphs.
+
+The paper's dynamic-tradeoff technique is inapplicable here (no
+query/candidate-generation stage in message passing) — DESIGN.md §5; the
+arch is built, dry-run and rooflined without it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Bundle, abstract_tree
+from repro.distrib import sharding as S
+from repro.models import gnn
+from repro.optim import adamw
+
+ARCH = "graphsage-reddit"
+
+SHAPES = {
+    "full_graph_sm": dict(kind="train_full", n_nodes=2708, n_edges=10556,
+                          d_feat=1433, n_classes=7),
+    "minibatch_lg": dict(kind="train_blocks", n_nodes=232965,
+                         n_edges=114615892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602, n_classes=41),
+    "ogb_products": dict(kind="train_full", n_nodes=2449029,
+                         n_edges=61859140, d_feat=100, n_classes=47),
+    "molecule": dict(kind="train_molecule", n_nodes=30, n_edges=64,
+                     batch=128, d_feat=32, n_classes=1),
+}
+SKIPS: dict[str, str] = {}
+
+
+def model_config(shape: str = "minibatch_lg") -> gnn.SageConfig:
+    sh = SHAPES[shape]
+    return gnn.SageConfig(n_layers=2, d_in=sh["d_feat"], d_hidden=128,
+                          n_classes=max(sh["n_classes"], 2),
+                          aggregator="mean")
+
+
+def smoke_config() -> gnn.SageConfig:
+    return gnn.SageConfig(n_layers=2, d_in=16, d_hidden=8, n_classes=5)
+
+
+def _all_axes(mesh):
+    return tuple(mesh.axis_names)
+
+
+def dryrun_bundle(shape: str, mesh, mode: str = "cost") -> Bundle:
+    del mode  # no scans: one probe serves both
+    sh = SHAPES[shape]
+    cfg = model_config(shape)
+    adam = adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+    params_abs = abstract_tree(gnn.init_sage(cfg, abstract=True))
+    p_specs = S.sage_param_specs(params_abs, mesh)
+    p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    opt_abs = jax.eval_shape(adamw.init_opt_state, params_abs)
+    o_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        S.sage_param_specs(opt_abs, mesh),
+                        is_leaf=lambda x: isinstance(x, P))
+    dp = S.dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    all_ax = _all_axes(mesh)
+    edge_sh = NamedSharding(mesh, P(None, all_ax))
+    node_sh = NamedSharding(mesh, P(None, None))
+    vec_sh = NamedSharding(mesh, P(None))
+
+    meta = dict(arch=ARCH, shape=shape, kind=sh["kind"],
+                params=int(sum(np.prod(l.shape) for l in
+                               jax.tree.leaves(params_abs))),
+                n_edges=sh["n_edges"], d_feat=sh["d_feat"])
+    # message-passing model FLOPs: gather+matmuls per layer
+    d = cfg.d_hidden
+    if sh["kind"] == "train_full":
+        e, n = sh["n_edges"], sh["n_nodes"]
+        fwd = 2 * e * sh["d_feat"] + 2 * n * (sh["d_feat"] + d) * d * 2
+        meta["model_flops"] = 3.0 * fwd
+        # arg shardings need divisibility: pad edges up to a multiple of
+        # the mesh size (padding edges self-loop on a ghost node, which
+        # the train mask excludes)
+        n_dev = int(np.prod(list(mesh.shape.values())))
+        e = -(-e // n_dev) * n_dev
+        n = n + 1
+        meta["padding"] = {"n_edges_padded": e, "ghost_node": n - 1}
+
+        feats = jax.ShapeDtypeStruct((n, sh["d_feat"]), jnp.float32)
+        edges = jax.ShapeDtypeStruct((2, e), jnp.int32)
+        labels = jax.ShapeDtypeStruct((n,), jnp.int32)
+        mask = jax.ShapeDtypeStruct((n,), jnp.bool_)
+
+        def step(params, opt, feats, edges, labels, mask):
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn.sage_loss_full(p, cfg, feats, edges, labels,
+                                             mask))(params)
+            new_p, new_o, m = adamw.adamw_update(adam, params, grads, opt)
+            return new_p, new_o, {"loss": loss, **m}
+
+        return Bundle(
+            fn=step,
+            args=(params_abs, opt_abs, feats, edges, labels, mask),
+            in_shardings=(p_sh, o_sh, node_sh, edge_sh, vec_sh, vec_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+            hints={},
+            meta=meta,
+        )
+
+    if sh["kind"] == "train_blocks":
+        bn = sh["batch_nodes"]
+        f1, f2 = sh["fanout"]
+        sizes = (bn, bn * f1, bn * f1 * f2)
+        meta["model_flops"] = 3.0 * (
+            2 * sizes[2] * sh["d_feat"]
+            + 2 * (sizes[0] + sizes[1]) * (sh["d_feat"] + d) * d * 2)
+        feats = [jax.ShapeDtypeStruct((s, sh["d_feat"]), jnp.float32)
+                 for s in sizes]
+        blocks = [
+            {"src_index": jax.ShapeDtypeStruct((sizes[i + 1],), jnp.int32),
+             "dst_index": jax.ShapeDtypeStruct((sizes[i + 1],), jnp.int32)}
+            for i in range(2)
+        ]
+        labels = jax.ShapeDtypeStruct((bn,), jnp.int32)
+        row_sh = NamedSharding(mesh, P(dp_ax, None))
+        idx_sh = NamedSharding(mesh, P(dp_ax))
+        f_sh = [row_sh] * 3
+        b_sh = [{"src_index": idx_sh, "dst_index": idx_sh}] * 2
+
+        def step(params, opt, feats, blocks, labels):
+            loss, grads = jax.value_and_grad(
+                lambda p: gnn.sage_loss_blocks(p, cfg, feats, blocks,
+                                               labels))(params)
+            new_p, new_o, m = adamw.adamw_update(adam, params, grads, opt)
+            return new_p, new_o, {"loss": loss, **m}
+
+        return Bundle(
+            fn=step,
+            args=(params_abs, opt_abs, feats, blocks, labels),
+            in_shardings=(p_sh, o_sh, f_sh, b_sh, idx_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+            hints={},
+            meta=meta,
+        )
+
+    # molecule: batched small graphs
+    b, npg, epg = sh["batch"], sh["n_nodes"], sh["n_edges"]
+    n, e = b * npg, b * epg
+    meta["model_flops"] = 3.0 * (2 * e * sh["d_feat"]
+                                 + 2 * n * (sh["d_feat"] + d) * d * 2)
+    feats = jax.ShapeDtypeStruct((n, sh["d_feat"]), jnp.float32)
+    edges = jax.ShapeDtypeStruct((2, e), jnp.int32)
+    gid = jax.ShapeDtypeStruct((n,), jnp.int32)
+    y = jax.ShapeDtypeStruct((b,), jnp.float32)
+
+    def step(params, opt, feats, edges, gid, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn.sage_loss_molecule(p, cfg, feats, edges, gid, y,
+                                             b))(params)
+        new_p, new_o, m = adamw.adamw_update(adam, params, grads, opt)
+        return new_p, new_o, {"loss": loss, **m}
+
+    return Bundle(
+        fn=step,
+        args=(params_abs, opt_abs, feats, edges, gid, y),
+        in_shardings=(p_sh, o_sh, node_sh, edge_sh,
+                      NamedSharding(mesh, P(None)),
+                      NamedSharding(mesh, P(None))),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1),
+        hints={},
+        meta=meta,
+    )

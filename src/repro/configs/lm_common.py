@@ -1,0 +1,234 @@
+"""Shared dry-run bundles for the LM transformer family.
+
+Four shapes per arch (assigned):
+  train_4k     seq 4096  x global_batch 256   -> train_step (fwd+bwd+AdamW)
+  prefill_32k  seq 32768 x batch 32           -> prefill (logits + KV cache)
+  decode_32k   1 new token, 32k cache, batch 128 -> serve_step
+  long_500k    1 new token, 512k context, batch 1 -> serve_step (SWA only)
+
+Sharding: batch over the dp axes; Megatron TP + FSDP from
+distrib.sharding.lm_param_specs; decode caches shard their sequence dim
+over 'model' (KV head counts don't divide 16 on these archs — DESIGN §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Bundle, abstract_tree
+from repro.distrib import sharding as S
+from repro.models import transformer as T
+from repro.optim import adamw
+
+__all__ = ["LM_SHAPES", "bundle", "model_flops"]
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, batch=1),
+}
+
+
+def model_flops(cfg: T.LMConfig, kind: str, batch: int, seq_len: int) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) — the §Roofline
+    'useful FLOPs' denominator (attention excluded by convention)."""
+    n_act = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_act * batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n_act * batch * seq_len
+    return 2.0 * n_act * batch          # decode: one token per sequence
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _cache_specs(cfg: T.LMConfig, cache, mesh) -> dict:
+    """Shard the cache sequence dim over 'model', batch over dp."""
+    dp = S.dp_axes(mesh)
+    dp = dp if len(dp) > 1 else dp[0]
+    tp = mesh.shape.get("model", 1)
+
+    def rule(leaf):
+        # (L, B, S, ...) layout from init_cache
+        b, s = leaf.shape[1], leaf.shape[2]
+        batch_ax = dp if (b % S.MeshInfo(mesh).dp_size == 0
+                          and b >= S.MeshInfo(mesh).dp_size) else None
+        seq_ax = "model" if s % tp == 0 and s >= tp else None
+        return P(None, batch_ax, seq_ax, *([None] * (leaf.ndim - 3)))
+
+    return jax.tree.map(rule, cache)
+
+
+def bundle(cfg: T.LMConfig, shape_name: str, mesh,
+           adam: adamw.AdamWConfig | None = None,
+           mode: str = "cost") -> Bundle:
+    sh = LM_SHAPES[shape_name]
+    kind, seq, batch = sh["kind"], sh["seq_len"], sh["batch"]
+    # Dual dry-run probes (EXPERIMENTS.md §Dry-run):
+    #  * "cost": every scan unrolled so cost_analysis counts all layers /
+    #    attention blocks / loss chunks (XLA counts while bodies once) —
+    #    correct FLOPs + collective schedule, pessimistic CPU temp numbers.
+    #  * "mem": scan form — sequential buffer reuse gives the realistic
+    #    per-device memory estimate (the CPU scheduler ignores remat in
+    #    unrolled graphs; see the probe experiment in EXPERIMENTS.md).
+    orig_cfg = cfg
+    probe_pair = None
+    if mode == "cost":
+        cfg = dataclasses.replace(
+            cfg, unroll=True, block_q=2048 if kind == "prefill" else 1024,
+            loss_block=min(65536, batch * seq))
+        # Layer extrapolation (EXPERIMENTS.md §Dry-run): fully unrolling
+        # 36-61 layer graphs for 256-way SPMD takes O(hours) on the CPU
+        # compiler.  Layers are homogeneous, so per-layer cost is linear:
+        # compile at two reduced depths (l1 < l2), extrapolate
+        #   cost(L) = cost(l2) + (L - l2) * (cost(l2) - cost(l1))/(l2 - l1).
+        # Embedding / loss / MTP costs are depth-independent and cancel
+        # into the intercept.  deepseek keeps its 3 dense layers in both
+        # probes so only MoE layers are extrapolated.
+        if cfg.n_layers > 8:
+            base_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+            l1 = base_dense + 2
+            l2 = base_dense + 4
+            probe_pair = (l1, l2, orig_cfg.n_layers)
+            cfg = dataclasses.replace(cfg, n_layers=l2)
+    elif mode == "mem":
+        cfg = dataclasses.replace(
+            cfg, unroll=False, block_q=512,
+            loss_block=min(4096, batch * seq))
+    # mode == "raw": cfg used as-is (the l1 extrapolation probe)
+    if os.environ.get("REPRO_LM_REMAT"):      # §Perf iter T1
+        cfg = dataclasses.replace(cfg, remat=os.environ["REPRO_LM_REMAT"])
+    if (os.environ.get("REPRO_MOE_SHARDMAP", "0") == "1"
+            and cfg.moe is not None):         # §Perf iter D2
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch="shard_map"))
+    adam = adam or adamw.AdamWConfig()
+    dp = S.dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    dp_n = S.MeshInfo(mesh).dp_size
+    batch_ax = dp_ax if batch % dp_n == 0 and batch >= dp_n else None
+
+    params_abs = abstract_tree(T.init_params(cfg, abstract=True))
+    p_specs = S.lm_param_specs(params_abs, mesh)
+    p_sh = _named(mesh, p_specs)
+    # sequence parallelism: layer-boundary activations shard their seq dim
+    # over 'model' (norm/residual regions) — measured ~30% temp reduction
+    # (EXPERIMENTS.md §Perf); attention/FFN regions re-gather as needed.
+    tp = mesh.shape.get("model", 1)
+    seq_ax = "model" if kind != "decode" and seq % tp == 0 else None
+    act_hint = NamedSharding(mesh, P(batch_ax, seq_ax, None))
+    # attention q (B, Hkv, G, S, hd): sequence-parallel over 'model'
+    q_hint = NamedSharding(mesh, P(batch_ax, None, None, seq_ax, None))
+    moe_hint = None
+    if cfg.moe is not None:
+        tp = mesh.shape.get("model", 1)
+        dp_n = S.MeshInfo(mesh).dp_size
+        if (os.environ.get("REPRO_MOE_EP2D", "0") == "1"
+                and cfg.moe.n_experts % (tp * dp_n) == 0):
+            e_ax = ("model",) + S.dp_axes(mesh)
+            moe_hint = NamedSharding(mesh, P(e_ax, None, None))
+        else:
+            e_ax = "model" if cfg.moe.n_experts % tp == 0 else None
+            moe_hint = NamedSharding(mesh, P(e_ax, dp_ax, None))
+    hints = {"lm_activations": act_hint, "mesh": mesh}
+    if seq_ax is not None:
+        hints["attn_q"] = q_hint
+    if moe_hint is not None:
+        hints["moe_buffer"] = moe_hint
+
+    meta = dict(
+        arch=orig_cfg.name, shape=shape_name, kind=kind, batch=batch,
+        seq_len=seq, params=orig_cfg.param_count(),
+        active_params=orig_cfg.active_param_count(),
+        model_flops=model_flops(orig_cfg, kind, batch, seq),
+    )
+    if probe_pair is not None:
+        l1, l2, full = probe_pair
+        meta["cost_extrapolation"] = {"l1": l1, "l2": l2, "full": full}
+        meta["l1_bundle"] = bundle(
+            dataclasses.replace(cfg, n_layers=l1), shape_name, mesh, adam,
+            mode="raw")
+
+    if kind == "train":
+        mdt = jnp.dtype(os.environ.get("REPRO_MOMENT_DTYPE", "float32"))
+        opt_abs = jax.eval_shape(
+            functools.partial(adamw.init_opt_state, moment_dtype=mdt),
+            params_abs)
+        o_specs = S.lm_opt_specs(p_specs, params_abs, mesh)
+        o_sh = _named(mesh, o_specs)
+        batch_abs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        }
+        b_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(batch_ax, None)), batch_abs)
+
+        def train_step(params, opt, data):
+            def loss_fn(p):
+                return T.train_loss(p, cfg, data["tokens"], data["targets"],
+                                    data["mask"])
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_p, new_o, m = adamw.adamw_update(adam, params, grads, opt)
+            return new_p, new_o, {"loss": loss, **m}
+
+        return Bundle(
+            fn=train_step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+            hints=hints,
+            meta=meta,
+        )
+
+    if kind == "prefill":
+        tokens_abs = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+        t_sh = NamedSharding(mesh, P(batch_ax, None))
+
+        def prefill_step(params, tokens):
+            return T.prefill(params, cfg, tokens)
+
+        return Bundle(
+            fn=prefill_step,
+            args=(params_abs, tokens_abs),
+            in_shardings=(p_sh, t_sh),
+            out_shardings=None,
+            donate_argnums=(),
+            hints=hints,
+            meta=meta,
+        )
+
+    # decode
+    cache_abs = jax.eval_shape(
+        functools.partial(T.init_cache, cfg, batch, seq))
+    c_specs = _cache_specs(cfg, cache_abs, mesh)
+    c_sh = _named(mesh, c_specs)
+    tok_abs = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    v_sh = NamedSharding(mesh, P(batch_ax))
+
+    def serve_step(params, cache, token, pos):
+        return T.decode_step(params, cfg, cache, token, pos)
+
+    return Bundle(
+        fn=serve_step,
+        args=(params_abs, cache_abs, tok_abs, pos_abs),
+        in_shardings=(p_sh, c_sh, v_sh, v_sh),
+        out_shardings=(None, None, c_sh),
+        donate_argnums=(1,),
+        hints=hints,
+        meta=meta,
+    )

@@ -1,0 +1,101 @@
+"""mind — multi-interest capsule retrieval, embed 64, 4 interests
+[arXiv:1904.08030].
+
+MIND is natively a *retrieval* model, so its retrieval_cand cell scores
+the 1M candidates with its own multi-interest user representation (max
+over interests) instead of the generic two-tower."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import recsys_common as RC
+from repro.configs.base import Bundle, abstract_tree
+from repro.distrib import sharding as S
+from repro.models.recsys import mind as MD
+
+ARCH = "mind"
+SHAPES = dict(RC.RECSYS_SHAPES)
+SKIPS: dict[str, str] = {}
+
+
+def model_config() -> MD.MINDConfig:
+    import os
+    # §Perf iter R2: bf16 candidate embeddings halve the retrieval scan
+    dt = "bfloat16" if os.environ.get("REPRO_RETRIEVAL_BF16") == "1" \
+        else "float32"
+    return MD.MINDConfig(embed_dim=64, n_interests=4, capsule_iters=3,
+                         seq_len=50, item_vocab=1_000_000, dtype=dt)
+
+
+def smoke_config() -> MD.MINDConfig:
+    return MD.MINDConfig(embed_dim=8, n_interests=3, capsule_iters=3,
+                         seq_len=10, item_vocab=60)
+
+
+def _batch_abs(cfg, b):
+    return {
+        "hist_items": jax.ShapeDtypeStruct((b, cfg.seq_len), jnp.int32),
+        "target_item": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+
+
+def _model_flops(cfg, b, kind):
+    t, d, k = cfg.seq_len, cfg.embed_dim, cfg.n_interests
+    routing = 2 * t * d * d + cfg.capsule_iters * (2 * t * k * d * 2)
+    fwd = b * routing
+    return (3.0 if kind == "train" else 1.0) * fwd
+
+
+def dryrun_bundle(shape: str, mesh, mode: str = "cost") -> Bundle:
+    del mode  # no scans in this arch: one probe serves both
+    cfg = model_config()
+    if shape == "retrieval_cand":
+        sh = RC.RECSYS_SHAPES[shape]
+        params_abs = abstract_tree(MD.init_mind(cfg, abstract=True))
+        p_specs = dict(S.recsys_param_specs(params_abs, mesh))
+        p_specs["item_table"] = P("model", None)  # candidates row-sharded
+        p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+        hist_abs = jax.ShapeDtypeStruct((sh["batch"], cfg.seq_len),
+                                        jnp.int32)
+        k = sh["k"]
+
+        import os
+
+        use_sharded = os.environ.get("REPRO_SHARDED_TOPK", "0") == "1"
+
+        def retrieve(params, hist):
+            v = MD.mind_interests(params, cfg, hist)      # (B, K, D)
+            scores = jnp.einsum("bkd,nd->bkn", v, params["item_table"])
+            best = jnp.max(scores, axis=1).astype(jnp.float32)  # (B, N)
+            if use_sharded:                               # §Perf iter R1
+                from repro.distrib.collectives import sharded_topk
+                return sharded_topk(mesh, best, k)
+            return jax.lax.top_k(best, k)
+
+        meta = dict(arch=ARCH, shape=shape, kind="retrieve",
+                    batch=sh["batch"],
+                    params=RC.param_count(params_abs),
+                    model_flops=2.0 * sh["batch"] * cfg.n_interests
+                    * cfg.item_vocab * cfg.embed_dim)
+        return Bundle(fn=retrieve, args=(params_abs, hist_abs),
+                      in_shardings=(p_sh,
+                                    NamedSharding(mesh, P(None, None))),
+                      out_shardings=None, donate_argnums=(), hints={},
+                      meta=meta)
+    params_abs = abstract_tree(MD.init_mind(cfg, abstract=True))
+    return RC.ranking_bundle(
+        arch=ARCH, shape_name=shape, mesh=mesh, params_abs=params_abs,
+        loss_fn=lambda p, b: MD.mind_loss(p, cfg, b),
+        logits_fn=lambda p, b: MD.mind_score(
+            p, cfg, MD.mind_interests(p, cfg, b["hist_items"]),
+            jnp.take(p["item_table"], jnp.clip(b["target_item"], 0),
+                     axis=0)),
+        batch_abs_fn=functools.partial(_batch_abs, cfg),
+        model_flops_fn=functools.partial(_model_flops, cfg))

@@ -1,0 +1,38 @@
+"""The paper's own system configuration (MQ2009 / ClueWeb09B analog).
+
+Not one of the 10 assigned architectures — this is the configuration of
+the paper's retrieval system itself: knobs, cutoffs, envelope targets,
+feature set, cascade hyperparameters, and the experiment scales used by
+benchmarks and examples.
+"""
+
+from __future__ import annotations
+
+from repro.core import experiment as E
+from repro.core.labeling import K_CUTOFFS, RHO_FRACTIONS
+
+ARCH = "paper-retrieval"
+
+#: paper Section 4 experimental constants
+MED_TARGETS_RBP = (0.02, 0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.50)
+MED_TARGETS_DCG = (0.2, 0.3, 0.5, 0.7, 1.0, 1.2, 1.5)
+MED_TARGETS_ERR = (0.05, 0.10, 0.15, 0.20, 0.25, 0.30, 0.50)
+CASCADE_THRESHOLDS = (0.75, 0.80, 0.85)
+N_FOLDS = 10
+K_VALUES = K_CUTOFFS
+RHO_VALUES_FRACTION = RHO_FRACTIONS       # of collection postings
+BM25_K1, BM25_B = 0.9, 0.4
+LM_MU = 2500.0
+N_FEATURES = 70
+
+
+def experiment_config(scale: str = "default") -> E.ExperimentConfig:
+    return {
+        "default": E.ExperimentConfig(),
+        "bench": E.ExperimentConfig(n_docs=12_000, vocab=20_000,
+                                    n_queries=1_200, stream_cap=2048,
+                                    pool_depth=4_000, gold_depth=400),
+        "paperish": E.ExperimentConfig(n_docs=50_000, vocab=60_000,
+                                       n_queries=8_000, stream_cap=4096,
+                                       pool_depth=10_000, gold_depth=1000),
+    }[scale]

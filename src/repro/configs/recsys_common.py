@@ -1,0 +1,128 @@
+"""Shared dry-run bundles for the recsys family.
+
+Four shapes per arch (assigned):
+  train_batch     batch 65,536            -> train_step
+  serve_p99       batch 512               -> ranking forward (online)
+  serve_bulk      batch 262,144           -> ranking forward (offline)
+  retrieval_cand  1 query x 1M candidates -> stage-1 retrieval + top-k
+
+retrieval_cand is where the paper's technique lives in this family: the
+two-tower (or MIND multi-interest) stage-1 scores the candidate universe
+and the LR cascade picks the per-query k (serving/pipeline.py).  Candidate
+embeddings are row-sharded over 'model' so stage-1 top-k is local +
+cross-shard merge, mirroring kernels/topk's two stages.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import Bundle, abstract_tree
+from repro.distrib import sharding as S
+from repro.models.recsys import retrieval_tower as RT
+from repro.optim import adamw
+
+__all__ = ["RECSYS_SHAPES", "ranking_bundle", "retrieval_bundle",
+           "param_count"]
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieve", batch=1,
+                           n_candidates=1_000_000, k=1000),
+}
+
+
+def param_count(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def _sh(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_sharding(mesh, batch_abs, batch: int):
+    dp = S.dp_axes(mesh)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    n = S.MeshInfo(mesh).dp_size
+    ax = dp_ax if batch % n == 0 and batch >= n else None
+
+    def rule(leaf):
+        return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(rule, batch_abs)
+
+
+def ranking_bundle(*, arch: str, shape_name: str, mesh, params_abs,
+                   loss_fn, logits_fn, batch_abs_fn, model_flops_fn,
+                   adam: adamw.AdamWConfig | None = None) -> Bundle:
+    """Generic train/serve bundle for the ranking models.
+
+    loss_fn(params, batch) -> scalar; logits_fn(params, batch) -> (B,);
+    batch_abs_fn(batch_size) -> pytree of ShapeDtypeStruct.
+    """
+    sh = RECSYS_SHAPES[shape_name]
+    adam = adam or adamw.AdamWConfig(lr=1e-3, weight_decay=1e-5)
+    p_specs = S.recsys_param_specs(params_abs, mesh)
+    p_sh = _sh(mesh, p_specs)
+    batch_abs = batch_abs_fn(sh["batch"])
+    b_sh = _batch_sharding(mesh, batch_abs, sh["batch"])
+    meta = dict(arch=arch, shape=shape_name, kind=sh["kind"],
+                batch=sh["batch"], params=param_count(params_abs),
+                model_flops=model_flops_fn(sh["batch"], sh["kind"]))
+
+    if sh["kind"] == "train":
+        opt_abs = jax.eval_shape(adamw.init_opt_state, params_abs)
+        o_sh = _sh(mesh, S.lm_opt_specs(p_specs, params_abs, mesh))
+
+        def step(params, opt, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch))(params)
+            new_p, new_o, m = adamw.adamw_update(adam, params, grads, opt)
+            return new_p, new_o, {"loss": loss, **m}
+
+        return Bundle(fn=step, args=(params_abs, opt_abs, batch_abs),
+                      in_shardings=(p_sh, o_sh, b_sh),
+                      out_shardings=(p_sh, o_sh, None),
+                      donate_argnums=(0, 1), hints={}, meta=meta)
+
+    def serve(params, batch):
+        return logits_fn(params, batch)
+
+    return Bundle(fn=serve, args=(params_abs, batch_abs),
+                  in_shardings=(p_sh, b_sh), out_shardings=None,
+                  donate_argnums=(), hints={}, meta=meta)
+
+
+def retrieval_bundle(*, arch: str, mesh, shape_name: str = "retrieval_cand",
+                     tower_cfg: RT.TowerConfig | None = None) -> Bundle:
+    """Stage-1 retrieval cell: one query scored against 1M candidates."""
+    sh = RECSYS_SHAPES[shape_name]
+    cfg = tower_cfg or RT.TowerConfig(n_candidates=sh["n_candidates"])
+    params_abs = abstract_tree(RT.init_tower(cfg, abstract=True))
+    # candidates row-sharded over 'model': local top-k + merge
+    p_specs = S.recsys_param_specs(params_abs, mesh)
+    p_specs = dict(p_specs)
+    p_specs["items"] = P("model", None)
+    p_sh = _sh(mesh, p_specs)
+    feats_abs = jax.ShapeDtypeStruct((sh["batch"], cfg.d_user_in),
+                                     jnp.float32)
+    k = sh["k"]
+    meta = dict(arch=arch, shape=shape_name, kind="retrieve",
+                batch=sh["batch"], params=param_count(params_abs),
+                model_flops=2.0 * sh["batch"] * sh["n_candidates"]
+                * cfg.embed_dim)
+
+    def retrieve(params, feats):
+        return RT.retrieve_topk(params, cfg, feats, k)
+
+    return Bundle(fn=retrieve, args=(params_abs, feats_abs),
+                  in_shardings=(p_sh, NamedSharding(mesh, P(None, None))),
+                  out_shardings=None, donate_argnums=(), hints={},
+                  meta=meta)

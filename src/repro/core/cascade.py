@@ -1,0 +1,145 @@
+"""LRCascade (paper Algorithm 2 + Figure 5).
+
+A left-to-right chain of c binary classifiers (one per cutoff boundary).
+Classifier i answers "does cutoff i suffice for this query?" (class 0).
+A query exits at the first node whose class-0 probability exceeds the
+confidence threshold t; if no node fires, the maximal cutoff c is used.
+
+Two execution modes:
+
+  * ``predict_sequential`` — literal Algorithm 2 (per query, early exit):
+    mirrors the paper's cost argument that cheap queries pay for few nodes.
+  * ``predict_batched``    — TPU mode: evaluate every node for the whole
+    batch (vectorized forest inference), then take the first-firing node
+    with a masked argmax.  Identical outputs (tested), static shapes.
+
+Node classifiers are forests by default, MLPs optionally — anything
+exposing predict_proba(params, x) -> (B, 2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import forest as forest_lib
+from repro.core import labeling
+from repro.core import mlp as mlp_lib
+
+__all__ = ["Cascade", "train_cascade", "predict_batched",
+           "predict_sequential", "tune_thresholds"]
+
+
+@dataclass
+class Cascade:
+    """c binary nodes; node i was trained on Algorithm 1's set B_i."""
+
+    kind: str                      # "forest" | "mlp"
+    nodes: list                    # per-node model objects (host side)
+    node_params: list              # per-node jax param pytrees
+    max_depth: int = 0
+    n_cutoffs: int = 9
+
+    def proba0(self, x: jnp.ndarray) -> jnp.ndarray:
+        """(B, c) probability that cutoff i suffices, for all nodes."""
+        cols = []
+        for p in self.node_params:
+            if self.kind == "forest":
+                pr = forest_lib.forest_predict_proba(p, x, self.max_depth)
+            else:
+                pr = mlp_lib.mlp_predict_proba(p, x)
+            cols.append(pr[:, 0])
+        return jnp.stack(cols, axis=1)
+
+
+def train_cascade(x: np.ndarray, labels: np.ndarray, *, n_cutoffs: int,
+                  kind: str = "forest", seed: int = 0,
+                  forest_kwargs: dict | None = None,
+                  mlp_kwargs: dict | None = None) -> Cascade:
+    """Train one binary node per cutoff boundary (Algorithm 1 data)."""
+    binary = labeling.multiclass_to_binary(labels, n_cutoffs)
+    nodes, params = [], []
+    for i in range(n_cutoffs):
+        yi = binary[i]
+        if kind == "forest":
+            kw = dict(n_trees=25, max_depth=8, seed=seed + i)
+            kw.update(forest_kwargs or {})
+            f = forest_lib.train_forest(x, yi, n_classes=2, **kw)
+            nodes.append(f)
+            params.append(f.as_jax())
+            depth = f.max_depth
+        elif kind == "mlp":
+            kw = dict(seed=seed + i)
+            kw.update(mlp_kwargs or {})
+            m = mlp_lib.train_mlp(x, yi, n_classes=2, **kw)
+            nodes.append(m)
+            params.append(m.as_jax())
+            depth = 0
+        else:
+            raise ValueError(f"unknown node kind {kind!r}")
+    return Cascade(kind=kind, nodes=nodes, node_params=params,
+                   max_depth=depth, n_cutoffs=n_cutoffs)
+
+
+def predict_batched(cascade: Cascade, x: jnp.ndarray,
+                    t) -> jnp.ndarray:
+    """Vectorized Algorithm 2: (B,) predicted cutoff index in [0, c].
+
+    ``t`` is a scalar confidence threshold or a per-node vector of c
+    thresholds (the paper's "variable cutoff thresholds" extension)."""
+    p0 = cascade.proba0(x)                       # (B, c)
+    tv = jnp.broadcast_to(jnp.asarray(t, jnp.float32),
+                          (cascade.n_cutoffs,))
+    fire = p0 > tv[None, :]
+    first = jnp.argmax(fire, axis=1)
+    none = ~jnp.any(fire, axis=1)
+    return jnp.where(none, cascade.n_cutoffs, first).astype(jnp.int32)
+
+
+def tune_thresholds(cascade: Cascade, x: np.ndarray, med_table: np.ndarray,
+                    cutoff_values, tau: float,
+                    grid=(0.6, 0.7, 0.75, 0.8, 0.85, 0.9),
+                    min_compliance: float = 0.95) -> np.ndarray:
+    """Per-node threshold tuning on a validation fold (paper §5: "initial
+    efforts towards variable cutoff thresholds show promising results").
+
+    Greedy left-to-right: for node i, pick the smallest threshold whose
+    *marginal exits* stay ``min_compliance`` inside the envelope — cheap
+    queries leave early only when node i is reliable for them.
+    """
+    c = cascade.n_cutoffs
+    xj = jnp.asarray(x)
+    p0 = np.asarray(cascade.proba0(xj))          # (B, c)
+    thresholds = np.full(c, grid[-1], np.float32)
+    exited = np.zeros(len(x), bool)
+    for i in range(c):
+        best = grid[-1]
+        for t in grid:                           # ascending
+            exits = (~exited) & (p0[:, i] > t)
+            if exits.sum() == 0:
+                continue
+            ok = (med_table[exits, i] <= tau).mean()
+            if ok >= min_compliance:
+                best = t
+                break
+        thresholds[i] = best
+        exited |= (~exited) & (p0[:, i] > best)
+    return thresholds
+
+
+def predict_sequential(cascade: Cascade, x_row: np.ndarray,
+                       t: float) -> int:
+    """Literal Algorithm 2 for a single query (host loop, early exit)."""
+    xr = jnp.asarray(x_row)[None, :]
+    for i, p in enumerate(cascade.node_params):
+        if cascade.kind == "forest":
+            pr = forest_lib.forest_predict_proba(p, xr, cascade.max_depth)
+        else:
+            pr = mlp_lib.mlp_predict_proba(p, xr)
+        if float(pr[0, 0]) > t:                  # predicts 0 with Pr > t
+            return i
+    return cascade.n_cutoffs

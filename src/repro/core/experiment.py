@@ -1,0 +1,204 @@
+"""End-to-end experiment harness for the paper's tables and figures.
+
+Reproduces the full methodology at configurable scale:
+
+  1. build corpus + impact-ordered index + query log (MQ2009/CW09B
+     stand-in, DESIGN.md §9),
+  2. per query: gold run + candidate runs at the 9 cutoffs, MED_{RBP,DCG,
+     ERR} tables (k knob: second-stage restriction semantics; rho knob:
+     exhaustive-vs-anytime),
+  3. the 70 static pre-retrieval features,
+  4. envelope labeling at tau + stratified folds,
+  5. train LRCascade + MultiLabel + MetaCost per fold; predict held-out,
+  6. tradeoff accounting against the fixed-cutoff horizon (Tables 4-6).
+
+Scale note: the paper uses 40k MQ2009 queries on 50M ClueWeb09B docs;
+default harness scale (CPU container) is thousands of queries on tens of
+thousands of docs — every mechanism identical, absolute numbers validated
+for trend agreement (EXPERIMENTS.md §Paper-validation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import cascade as cascade_lib
+from repro.core import features as feat_lib
+from repro.core import labeling, med, tradeoff
+from repro.retrieval import corpus as corpus_lib
+from repro.retrieval import gold, index as index_lib, jass
+
+__all__ = ["ExperimentConfig", "System", "build_system", "med_tables",
+           "run_methods", "K_CUTOFFS_SMALL"]
+
+#: paper cutoffs; the harness caps k at the gold-pool depth
+K_CUTOFFS_SMALL = (20, 50, 100, 200, 500, 1000, 2000, 5000, 10000)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentConfig:
+    n_docs: int = 20_000
+    vocab: int = 30_000
+    n_queries: int = 2_000
+    mean_doc_len: float = 180.0
+    seed: int = 7
+    stream_cap: int = 4096
+    gold_depth: int = 1000       # evaluation depth of the ranked lists
+    pool_depth: int = 10_000     # stage-1 depth feeding the gold reranker
+    query_batch: int = 128
+    rbp_p: float = 0.95
+
+
+@dataclasses.dataclass
+class System:
+    cfg: ExperimentConfig
+    corpus: corpus_lib.Corpus
+    index: index_lib.InvertedIndex
+    queries: corpus_lib.QueryLog
+    features: np.ndarray         # (Q, 70)
+
+    @property
+    def k_cutoffs(self) -> tuple[int, ...]:
+        return tuple(min(k, self.cfg.pool_depth) for k in K_CUTOFFS_SMALL)
+
+    @property
+    def rho_cutoffs(self) -> tuple[int, ...]:
+        return tuple(max(8, int(f * self.cfg.stream_cap))
+                     for f in labeling.RHO_FRACTIONS)
+
+
+def build_system(cfg: ExperimentConfig = ExperimentConfig()) -> System:
+    corpus = corpus_lib.make_corpus(corpus_lib.CorpusConfig(
+        n_docs=cfg.n_docs, vocab=cfg.vocab, mean_doc_len=cfg.mean_doc_len,
+        seed=cfg.seed))
+    index = index_lib.build_index(corpus)
+    queries = corpus_lib.make_queries(corpus, n_queries=cfg.n_queries,
+                                      seed=cfg.seed + 1)
+    feats = np.asarray(feat_lib.query_features(
+        jnp.asarray(queries.terms), jnp.asarray(index.term_stats.stats),
+        jnp.asarray(index.term_stats.ctf), jnp.asarray(index.term_stats.df)))
+    return System(cfg, corpus, index, queries, feats)
+
+
+def _batches(n, b):
+    for s in range(0, n, b):
+        yield slice(s, min(s + b, n))
+
+
+def med_tables(sys: System, knob: str, metrics=("rbp", "dcg", "err"),
+               progress: bool = False) -> dict[str, np.ndarray]:
+    """(Q, 9) MED tables per metric for the chosen knob ('k' | 'rho')."""
+    cfg = sys.cfg
+    idx = sys.index
+    offsets = jnp.asarray(idx.offsets)
+    pdoc = jnp.asarray(idx.postings_doc)
+    pimp = jnp.asarray(idx.postings_impact.astype(np.float32))
+    pscore = jnp.asarray(idx.postings_score)
+    doc_len = jnp.asarray(idx.corpus.doc_len)
+    cutoffs = sys.k_cutoffs if knob == "k" else sys.rho_cutoffs
+    depth = min(cfg.gold_depth, cfg.pool_depth)
+    qn = sys.queries.n_queries
+    out = {m: np.zeros((qn, len(cutoffs)), np.float32) for m in metrics}
+
+    for sl in _batches(qn, cfg.query_batch):
+        qt = jnp.asarray(sys.queries.terms[sl])
+        ds, im = jass.gather_streams(offsets, pdoc, pimp, qt,
+                                     cap=cfg.stream_cap)
+        if knob == "k":
+            acc = jass.saat_scores(ds, im, cfg.n_docs, ds.shape[-1])
+            deep_pool = jass.rank_from_scores(acc, min(cfg.pool_depth,
+                                                       cfg.n_docs))
+            sdocs, s3 = jass.gather_score_streams(offsets, pdoc, pscore,
+                                                  qt, cap=cfg.stream_cap)
+            a1, a2, a3 = jass.scorer_accumulators(sdocs, s3, cfg.n_docs)
+            qids = jnp.arange(sl.start, sl.stop)
+            stage2 = gold.second_stage_scores(a1, a2, a3, doc_len, qids)
+            a_run = gold.gold_run_k(stage2, deep_pool, depth)
+            for ci, k in enumerate(cutoffs):
+                b_run = gold.candidate_run_k(stage2, deep_pool, k, depth)
+                _accumulate_med(out, metrics, sl, ci, a_run, b_run,
+                                cfg.rbp_p)
+        else:
+            a_run = jass.saat_rank(ds, im, cfg.n_docs, ds.shape[-1], depth)
+            for ci, rho in enumerate(cutoffs):
+                b_run = jass.saat_rank(ds, im, cfg.n_docs, rho, depth)
+                _accumulate_med(out, metrics, sl, ci, a_run, b_run,
+                                cfg.rbp_p)
+        if progress:
+            print(f"  med[{knob}] {sl.stop}/{qn}", flush=True)
+    return out
+
+
+def _accumulate_med(out, metrics, sl, ci, a_run, b_run, p):
+    if "rbp" in metrics:
+        out["rbp"][sl, ci] = np.asarray(med.med_rbp(a_run, b_run, p=p))
+    if "dcg" in metrics:
+        out["dcg"][sl, ci] = np.asarray(med.med_dcg(a_run, b_run))
+    if "err" in metrics:
+        out["err"][sl, ci] = np.asarray(med.med_err(a_run, b_run))
+
+
+@dataclasses.dataclass
+class MethodResults:
+    """Held-out predictions per method + the evaluation table rows."""
+
+    labels: np.ndarray
+    preds: dict[str, np.ndarray]
+    table: list[dict]
+    horizon: list
+
+
+def run_methods(sys: System, med_table: np.ndarray, cutoffs, tau: float,
+                thresholds=(0.75, 0.80, 0.85), n_folds: int = 3,
+                kinds=("cascade", "multilabel", "metacost"),
+                forest_kwargs: dict | None = None,
+                seed: int = 0) -> MethodResults:
+    """Cross-validated predictions for every method (paper Tables 4-6)."""
+    labels = np.asarray(labeling.envelope_labels(med_table, tau))
+    c = len(cutoffs)
+    folds = labeling.stratified_folds(labels, n_folds, seed=seed)
+    x = sys.features
+    preds: dict[str, np.ndarray] = {
+        f"cascade_t{t}": np.zeros(len(labels), np.int64)
+        for t in thresholds if "cascade" in kinds}
+    if "multilabel" in kinds:
+        preds["multilabel"] = np.zeros(len(labels), np.int64)
+    if "metacost" in kinds:
+        preds["metacost"] = np.zeros(len(labels), np.int64)
+
+    for f in range(n_folds):
+        tr, te = folds != f, folds == f
+        if te.sum() == 0:
+            continue
+        xt = jnp.asarray(x[te])
+        if "cascade" in kinds:
+            casc = cascade_lib.train_cascade(
+                x[tr], labels[tr], n_cutoffs=c, seed=seed + f,
+                forest_kwargs=forest_kwargs)
+            for t in thresholds:
+                preds[f"cascade_t{t}"][te] = np.asarray(
+                    cascade_lib.predict_batched(casc, xt, t))
+        if "multilabel" in kinds:
+            ml = bl.train_multilabel(x[tr], labels[tr], c + 1,
+                                     seed=seed + f)
+            preds["multilabel"][te] = np.asarray(
+                bl.predict_multilabel(ml, xt))
+        if "metacost" in kinds:
+            mc = bl.train_metacost(x[tr], labels[tr], c + 1, n_bags=5,
+                                   seed=seed + f)
+            preds["metacost"][te] = np.asarray(
+                bl.predict_multilabel(mc, xt))
+
+    hor = tradeoff.horizon(med_table, cutoffs)
+    table = []
+    oracle_pt = tradeoff.method_point("Oracle", med_table, labels, cutoffs)
+    table.append(tradeoff.interp_gain(oracle_pt, hor))
+    for name, pr in preds.items():
+        pt = tradeoff.method_point(name, med_table, pr, cutoffs)
+        table.append(tradeoff.interp_gain(pt, hor))
+    return MethodResults(labels=labels, preds=preds, table=table,
+                         horizon=hor)

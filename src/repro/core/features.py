@@ -1,0 +1,114 @@
+"""Static pre-retrieval query features (paper Tables 1 and 2) — 70 total.
+
+Every feature is computable at query-parse time from statistics that were
+precomputed at index time (repro.retrieval.index.TermStats): no postings
+are traversed, so the prediction cost is negligible relative to even the
+cheapest candidate-generation configuration — the property the whole
+method depends on.
+
+Layout (70 features):
+    0      query length                                (score-independent)
+    1      arithmetic mean of C_t over query terms     ("amean of tf")
+    2..3   min / max of f_t over query terms
+    4..69  per scorer in (bm25, lm, tfidf), 22 features each:
+             min over query terms of the 9 Table-1 score stats   (9)
+             max over query terms of the 9 Table-1 score stats   (9)
+             arithmetic mean of per-term max scores              (1)
+             harmonic   mean of per-term max scores              (1)
+             arithmetic mean of per-term median scores           (1)
+             arithmetic mean of per-term mean scores             (1)
+
+The per-scorer block covers Table 2's score-dependent aggregates (items
+2-5 directly; items 6-7 — variance / IQR means — are spanned by the
+min/max of the variance and IQR stats) and items 8-9 (min/max of every
+Table-1 feature).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["query_features", "N_FEATURES", "feature_names"]
+
+N_FEATURES = 70
+_STAT_NAMES = ("max", "q1", "q3", "min", "amean", "hmean", "median", "var", "iqr")
+_SCORERS = ("bm25", "lm", "tfidf")
+
+_BIG = 1e9
+
+
+def feature_names() -> list[str]:
+    names = ["query_len", "amean_ctf", "min_df", "max_df"]
+    for s in _SCORERS:
+        names += [f"{s}/min_{st}" for st in _STAT_NAMES]
+        names += [f"{s}/max_{st}" for st in _STAT_NAMES]
+        names += [f"{s}/amean_max", f"{s}/hmean_max", f"{s}/amean_median",
+                  f"{s}/amean_mean"]
+    assert len(names) == N_FEATURES
+    return names
+
+
+def _masked_min(x, mask, axis):
+    return jnp.min(jnp.where(mask, x, _BIG), axis=axis)
+
+
+def _masked_max(x, mask, axis):
+    return jnp.max(jnp.where(mask, x, -_BIG), axis=axis)
+
+
+def _masked_mean(x, mask, axis):
+    n = jnp.maximum(jnp.sum(mask, axis=axis), 1)
+    return jnp.sum(jnp.where(mask, x, 0.0), axis=axis) / n
+
+
+@functools.partial(jax.jit, static_argnames=())
+def query_features(query_terms: jnp.ndarray, stats: jnp.ndarray,
+                   ctf: jnp.ndarray, df: jnp.ndarray) -> jnp.ndarray:
+    """Compute the 70 features for a batch of queries.
+
+    query_terms: (Q, L) int32, padded with -1.
+    stats:       (vocab, 3, 9) float32 per-term Table-1 score stats.
+    ctf, df:     (vocab,) float32.
+    Returns (Q, 70) float32.
+    """
+    q = query_terms
+    mask = q >= 0                                   # (Q, L)
+    safe = jnp.clip(q, 0)
+    qlen = jnp.sum(mask, axis=1).astype(jnp.float32)
+
+    t_stats = stats[safe]                           # (Q, L, 3, 9)
+    t_ctf = ctf[safe]                               # (Q, L)
+    t_df = df[safe]
+
+    feats = [
+        qlen,
+        _masked_mean(t_ctf, mask, 1),
+        _masked_min(t_df, mask, 1),
+        _masked_max(t_df, mask, 1),
+    ]
+    m3 = mask[:, :, None]                           # (Q, L, 1)
+    for si in range(3):
+        blk = t_stats[:, :, si, :]                  # (Q, L, 9)
+        feats.append(_masked_min(blk, m3, 1).T)     # (9, Q) after T
+        feats.append(_masked_max(blk, m3, 1).T)
+        smax = blk[:, :, 0]
+        smedian = blk[:, :, 6]
+        smean = blk[:, :, 4]
+        # harmonic mean of max scores: shift into positive territory with a
+        # constant derived from the (fixed) stats table, as the indexer does
+        shift = 1.0 - jnp.min(stats[:, si, 0])
+        inv = _masked_mean(1.0 / (smax + shift), mask, 1)
+        hmean = 1.0 / jnp.maximum(inv, 1e-12) - shift
+        feats.append(_masked_mean(smax, mask, 1)[None])
+        feats.append(hmean[None])
+        feats.append(_masked_mean(smedian, mask, 1)[None])
+        feats.append(_masked_mean(smean, mask, 1)[None])
+
+    rows = []
+    for f in feats:
+        rows.append(f if f.ndim == 2 else f[None])
+    out = jnp.concatenate(rows, axis=0).T           # (Q, 70)
+    return out.astype(jnp.float32)

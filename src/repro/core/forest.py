@@ -1,0 +1,184 @@
+"""Random forests, JAX-native inference (the cascade's node classifier).
+
+The paper trains a Weka random forest at every cascade node.  Here the
+forest is trained with a histogram-greedy split search (host-side numpy —
+training is offline, like index building) and *inference* — the serving
+hot path — runs as fully vectorized JAX over flattened tree tables:
+
+    feature[t, n], thresh[t, n], left[t, n], right[t, n], leaf[t, n, C]
+
+Traversal is level-synchronous: ``max_depth`` rounds of gathers over
+(batch x trees), no data-dependent control flow — TPU-friendly and
+trivially shardable over the batch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Forest", "train_forest", "forest_predict_proba"]
+
+
+@dataclass
+class Forest:
+    feature: np.ndarray   # (T, N) int32; -1 at leaves
+    thresh: np.ndarray    # (T, N) float32
+    left: np.ndarray      # (T, N) int32  (self-loop at leaves)
+    right: np.ndarray     # (T, N) int32
+    leaf: np.ndarray      # (T, N, C) float32 class probabilities
+    max_depth: int
+    n_classes: int
+
+    def as_jax(self) -> dict[str, jnp.ndarray]:
+        return {
+            "feature": jnp.asarray(self.feature),
+            "thresh": jnp.asarray(self.thresh),
+            "left": jnp.asarray(self.left),
+            "right": jnp.asarray(self.right),
+            "leaf": jnp.asarray(self.leaf),
+        }
+
+
+def _gini_gain(hist_l: np.ndarray, hist_r: np.ndarray) -> np.ndarray:
+    """Gini impurity decrease for every (bin-threshold) split.
+
+    hist_l/hist_r: (bins, C) cumulative class counts left/right of each
+    threshold.  Returns (bins,) negative-is-invalid gain scores.
+    """
+    nl = hist_l.sum(-1)
+    nr = hist_r.sum(-1)
+    n = nl + nr
+    with np.errstate(divide="ignore", invalid="ignore"):
+        gl = 1.0 - ((hist_l / np.maximum(nl[:, None], 1)) ** 2).sum(-1)
+        gr = 1.0 - ((hist_r / np.maximum(nr[:, None], 1)) ** 2).sum(-1)
+    tot = hist_l + hist_r
+    gp = 1.0 - ((tot / np.maximum(n[:, None], 1)) ** 2).sum(-1)
+    gain = gp - (nl / np.maximum(n, 1)) * gl - (nr / np.maximum(n, 1)) * gr
+    gain[(nl == 0) | (nr == 0)] = -1.0
+    return gain
+
+
+def _fit_tree(xb: np.ndarray, y: np.ndarray, edges: np.ndarray,
+              n_classes: int, rng: np.random.Generator, max_depth: int,
+              feat_frac: float, min_leaf: int):
+    """Grow one tree on pre-binned features xb (n, F) uint8."""
+    n, F = xb.shape
+    bins = edges.shape[1] + 1
+    m = max(1, int(round(feat_frac * F)))
+    nodes: list[dict] = []
+
+    def mk_leaf(idx):
+        hist = np.bincount(y[idx], minlength=n_classes).astype(np.float64)
+        p = hist / max(hist.sum(), 1.0)
+        nodes.append({"feature": -1, "thresh": 0.0, "left": 0, "right": 0,
+                      "leaf": p})
+        nid = len(nodes) - 1
+        nodes[nid]["left"] = nodes[nid]["right"] = nid
+        return nid
+
+    def grow(idx, depth):
+        if depth >= max_depth or len(idx) < 2 * min_leaf or \
+                len(np.unique(y[idx])) == 1:
+            return mk_leaf(idx)
+        feats = rng.choice(F, size=m, replace=False)
+        best = (-1.0, None, None)
+        for f in feats:
+            xv = xb[idx, f]
+            # class histogram per bin: (bins, C)
+            h = np.zeros((bins, n_classes))
+            np.add.at(h, (xv, y[idx]), 1.0)
+            cum = np.cumsum(h, axis=0)          # counts with bin <= b
+            hist_l = cum[:-1]                   # split "bin <= b" for b in [0, bins-1)
+            hist_r = cum[-1][None, :] - hist_l
+            gain = _gini_gain(hist_l, hist_r)
+            b = int(np.argmax(gain))
+            if gain[b] > best[0]:
+                best = (float(gain[b]), int(f), b)
+        if best[1] is None or best[0] <= 1e-12:
+            return mk_leaf(idx)
+        _, f, b = best
+        go_l = xb[idx, f] <= b
+        li, ri = idx[go_l], idx[~go_l]
+        if len(li) < min_leaf or len(ri) < min_leaf:
+            return mk_leaf(idx)
+        nid = len(nodes)
+        nodes.append({"feature": f, "thresh": float(edges[f, b]),
+                      "left": -1, "right": -1,
+                      "leaf": np.zeros(n_classes)})
+        nodes[nid]["left"] = grow(li, depth + 1)
+        nodes[nid]["right"] = grow(ri, depth + 1)
+        return nid
+
+    root = grow(np.arange(n), 0)
+    assert root == 0  # grow() always appends the root first
+    return nodes
+
+
+def train_forest(x: np.ndarray, y: np.ndarray, *, n_classes: int,
+                 n_trees: int = 30, max_depth: int = 8, bins: int = 32,
+                 feat_frac: float = 0.3, min_leaf: int = 8,
+                 seed: int = 0) -> Forest:
+    """Bootstrap-aggregated trees over quantile-binned features."""
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.int64)
+    n, F = x.shape
+    qs = np.linspace(0, 1, bins + 1)[1:-1]
+    edges = np.quantile(x, qs, axis=0).T.astype(np.float32)   # (F, bins-1)
+    # de-duplicate degenerate edges to keep searchsorted monotone
+    edges = np.maximum.accumulate(edges + np.arange(bins - 1) * 1e-12, axis=1)
+    xb = np.stack([np.searchsorted(edges[f], x[:, f], side="right")
+                   for f in range(F)], axis=1).astype(np.int64)
+
+    rng = np.random.default_rng(seed)
+    all_nodes = []
+    for _ in range(n_trees):
+        boot = rng.integers(0, n, size=n)
+        all_nodes.append(_fit_tree(xb[boot], y[boot], edges, n_classes, rng,
+                                   max_depth, feat_frac, min_leaf))
+    n_max = max(len(t) for t in all_nodes)
+    T = n_trees
+    feature = np.full((T, n_max), -1, np.int32)
+    thresh = np.zeros((T, n_max), np.float32)
+    left = np.zeros((T, n_max), np.int32)
+    right = np.zeros((T, n_max), np.int32)
+    leaf = np.zeros((T, n_max, n_classes), np.float32)
+    leaf[:, :, 0] = 1.0
+    for t, tree in enumerate(all_nodes):
+        for i, nd in enumerate(tree):
+            feature[t, i] = nd["feature"]
+            thresh[t, i] = nd["thresh"]
+            left[t, i] = nd["left"]
+            right[t, i] = nd["right"]
+            leaf[t, i] = nd["leaf"]
+    # unused padding nodes self-loop
+    pad = feature == -2
+    del pad
+    return Forest(feature, thresh, left, right, leaf, max_depth, n_classes)
+
+
+def forest_predict_proba(params: dict[str, jnp.ndarray], x: jnp.ndarray,
+                         max_depth: int) -> jnp.ndarray:
+    """Vectorized forest inference.  x: (B, F) -> (B, C) probabilities."""
+    feature, thresh = params["feature"], params["thresh"]
+    left, right, leaf = params["left"], params["right"], params["leaf"]
+    T = feature.shape[0]
+    B = x.shape[0]
+    idx = jnp.zeros((B, T), jnp.int32)
+    t_ar = jnp.arange(T)
+
+    def step(idx, _):
+        f = feature[t_ar[None, :], idx]                      # (B, T)
+        thr = thresh[t_ar[None, :], idx]
+        xv = jnp.take_along_axis(x, jnp.clip(f, 0), axis=1)  # (B, T)
+        go_left = (xv <= thr) | (f < 0)
+        nxt = jnp.where(go_left, left[t_ar[None, :], idx],
+                        right[t_ar[None, :], idx])
+        return nxt, None
+
+    idx, _ = jax.lax.scan(step, idx, None, length=max_depth + 1)
+    probs = leaf[t_ar[None, :], idx]                         # (B, T, C)
+    return jnp.mean(probs, axis=1)

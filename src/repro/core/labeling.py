@@ -1,0 +1,70 @@
+"""Instance labeling (paper Section 3, "Labeling Instances" + Algorithm 1).
+
+Given MED values at the c parameter cutoffs (k in {20,...,10000} or rho in
+{100k,...,50m}), a query's ordinal class is the *minimal* cutoff index whose
+MED is inside the effectiveness envelope (MED <= tau); queries that never
+enter the envelope get the maximal class c.  Algorithm 1 then converts the
+c-way ordinal problem into c-1 binary training sets: B_i labels a query 0
+("cutoff i suffices") iff its class <= i.
+
+Also hosts the seeded stratified k-fold splitter standing in for Weka's
+StratifiedRemoveFolds.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "envelope_labels",
+    "multiclass_to_binary",
+    "stratified_folds",
+    "K_CUTOFFS",
+    "RHO_FRACTIONS",
+]
+
+#: the paper's 9 candidate-pool cutoffs
+K_CUTOFFS = (20, 50, 100, 200, 500, 1000, 2000, 5000, 10000)
+
+#: the paper's rho cutoffs were 100k..50m postings on ClueWeb09B (~50M
+#: docs): as fractions of collection size they span 0.2%..100%.  We keep the
+#: fractions so rho scales with the synthetic collection.
+RHO_FRACTIONS = (0.002, 0.004, 0.01, 0.02, 0.04, 0.1, 0.2, 0.4, 1.0)
+
+
+def envelope_labels(med: jnp.ndarray, tau: float) -> jnp.ndarray:
+    """Ordinal class per query. med: (Q, c) MED at each cutoff -> (Q,) int32
+    in [0, c]: index of the minimal in-envelope cutoff, or c if none."""
+    med = jnp.asarray(med)
+    ok = med <= tau
+    first = jnp.argmax(ok, axis=1)
+    none = ~jnp.any(ok, axis=1)
+    return jnp.where(none, med.shape[1], first).astype(jnp.int32)
+
+
+def multiclass_to_binary(labels: np.ndarray, n_cutoffs: int) -> np.ndarray:
+    """Algorithm 1 (MULTICLASSTOBINARY).
+
+    labels: (Q,) ordinal classes in [0, c] (c = n_cutoffs).  Returns
+    (c, Q) binary label sets: row i is 0 where class <= i else 1.  (The
+    paper indexes classes 1..c and builds c-1 sets; we build one per
+    boundary below the top class — same count, 0-based.)
+    """
+    labels = np.asarray(labels)
+    i = np.arange(n_cutoffs)[:, None]
+    return (labels[None, :] > i).astype(np.int64)
+
+
+def stratified_folds(labels: np.ndarray, n_folds: int = 10,
+                     seed: int = 13) -> np.ndarray:
+    """Per-query fold id, stratified by class (Weka StratifiedRemoveFolds
+    stand-in): within each class, shuffled round-robin assignment."""
+    labels = np.asarray(labels)
+    rng = np.random.default_rng(seed)
+    fold = np.zeros(len(labels), np.int32)
+    for cls in np.unique(labels):
+        idx = np.flatnonzero(labels == cls)
+        rng.shuffle(idx)
+        fold[idx] = np.arange(len(idx)) % n_folds
+    return fold

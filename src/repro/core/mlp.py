@@ -1,0 +1,109 @@
+"""MLP classifier node — the differentiable alternative cascade node.
+
+The paper notes that multilayer perceptrons were among the classifiers it
+explored.  We keep an MLP node type selectable at every cascade position:
+pure-JAX training (AdamW from repro.optim), logits over C classes, the
+same ``predict_proba`` interface as the forest so the cascade is agnostic
+to the node family.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["MLPClassifier", "train_mlp", "mlp_predict_proba"]
+
+
+@dataclass
+class MLPClassifier:
+    params: dict
+    mean: np.ndarray
+    std: np.ndarray
+    n_classes: int
+
+    def as_jax(self):
+        return {
+            "params": jax.tree.map(jnp.asarray, self.params),
+            "mean": jnp.asarray(self.mean),
+            "std": jnp.asarray(self.std),
+        }
+
+
+def _init(rng, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k = rng.normal(0, (2.0 / a) ** 0.5, (a, b)).astype(np.float32)
+        params.append({"w": k, "b": np.zeros(b, np.float32)})
+    return {"layers": params}
+
+
+def _forward(params, x):
+    h = x
+    layers = params["layers"]
+    for i, lyr in enumerate(layers):
+        h = h @ lyr["w"] + lyr["b"]
+        if i + 1 < len(layers):
+            h = jax.nn.gelu(h)
+    return h
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mlp_predict_proba(state: dict, x: jnp.ndarray) -> jnp.ndarray:
+    xn = (x - state["mean"]) / state["std"]
+    return jax.nn.softmax(_forward(state["params"], xn), axis=-1)
+
+
+def train_mlp(x: np.ndarray, y: np.ndarray, *, n_classes: int,
+              hidden: tuple[int, ...] = (64, 32), epochs: int = 30,
+              batch: int = 512, lr: float = 3e-3, weight_decay: float = 1e-4,
+              class_weight: np.ndarray | None = None,
+              seed: int = 0) -> MLPClassifier:
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.int64)
+    mean = x.mean(0)
+    std = x.std(0) + 1e-6
+    xn = (x - mean) / std
+    rng = np.random.default_rng(seed)
+    params = _init(rng, (x.shape[1], *hidden, n_classes))
+    params = jax.tree.map(jnp.asarray, params)
+    cw = jnp.asarray(class_weight if class_weight is not None
+                     else np.ones(n_classes), jnp.float32)
+
+    def loss_fn(p, xb, yb):
+        logits = _forward(p, xb)
+        ll = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(ll, yb[:, None], axis=1)[:, 0]
+        return jnp.mean(nll * cw[yb])
+
+    # minimal AdamW (self-contained: core must not depend on optim)
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step(carry, xb, yb):
+        p, m, v, t = carry
+        g = jax.grad(loss_fn)(p, xb, yb)
+        t = t + 1
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+        p = jax.tree.map(
+            lambda pp, a, b: pp - lr * (a / (jnp.sqrt(b) + 1e-8)
+                                        + weight_decay * pp), p, mh, vh)
+        return (p, m, v, t), None
+
+    carry = (params, m, v, jnp.zeros((), jnp.int32))
+    n = x.shape[0]
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n - batch + 1, batch):
+            sel = order[s:s + batch]
+            carry, _ = step(carry, jnp.asarray(xn[sel]), jnp.asarray(y[sel]))
+    params = jax.tree.map(np.asarray, carry[0])
+    return MLPClassifier(params=params, mean=mean, std=std, n_classes=n_classes)

@@ -1,0 +1,1 @@
+from repro.data import graph_data, lm_pipeline, recsys_data  # noqa: F401

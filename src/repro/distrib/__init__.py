@@ -1,0 +1,1 @@
+from repro.distrib import elastic, sharding  # noqa: F401

@@ -1,0 +1,37 @@
+"""Elastic scaling: restore any checkpoint onto any mesh.
+
+Checkpoints carry logical structure only (ckpt/checkpoint.py); resharding
+is re-running the architecture's sharding rules against the *new* mesh and
+device_put-ing each leaf.  This covers scale-up (8 -> 512 chips), scale-
+down, and pod-count changes; combined with ckpt/failover.py it gives the
+"lose a pod, continue on the survivors" story.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.ckpt import checkpoint as ckpt
+
+__all__ = ["reshard", "restore_elastic"]
+
+
+def reshard(tree: Any, mesh: Mesh, spec_fn: Callable[[Any, Mesh], Any]) -> Any:
+    """device_put ``tree`` with specs from ``spec_fn(tree, mesh)``."""
+    specs = spec_fn(tree, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def restore_elastic(path: str, like: Any, mesh: Mesh,
+                    spec_fn: Callable[[Any, Mesh], Any],
+                    step: int | None = None) -> tuple[Any, dict]:
+    """Load a checkpoint written on *any* mesh onto ``mesh``."""
+    specs = spec_fn(like, mesh)
+    shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                             is_leaf=lambda x: not isinstance(x, (dict, list, tuple)))
+    return ckpt.restore(path, like, step=step, shardings=shardings)

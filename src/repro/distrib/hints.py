@@ -1,0 +1,49 @@
+"""Activation sharding hints.
+
+Model code stays mesh-agnostic; launchers install named
+``with_sharding_constraint`` hints before tracing (and clear after).  A
+missing hint is a no-op, so models run unmodified on one device.  This is
+the minimal version of the logical-axis-rules machinery in MaxText/t5x —
+enough to pin the two activations GSPMD tends to mis-place (the MoE
+dispatch buffer and the token activations).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+
+_HINTS: dict[str, Any] = {}
+
+__all__ = ["hint", "set_hints", "hints_ctx"]
+
+
+def set_hints(d: dict[str, Any]) -> None:
+    global _HINTS
+    _HINTS = dict(d)
+
+
+def get(name: str, default=None):
+    """Non-sharding context values (e.g. the active mesh for shard_map
+    dispatch paths)."""
+    return _HINTS.get(name, default)
+
+
+def hint(x, name: str):
+    s = _HINTS.get(name)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+@contextlib.contextmanager
+def hints_ctx(d: dict[str, Any]):
+    global _HINTS
+    old = _HINTS
+    _HINTS = dict(d)
+    try:
+        yield
+    finally:
+        _HINTS = old

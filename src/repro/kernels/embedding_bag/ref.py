@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: identical to models.recsys.embedding.bag_fixed."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray, *,
+                      mean: bool = False) -> jnp.ndarray:
+    mask = ids >= 0
+    e = jnp.take(table, jnp.clip(ids, 0), axis=0)
+    e = e * mask[..., None].astype(e.dtype)
+    s = jnp.sum(e, axis=1)
+    if mean:
+        n = jnp.maximum(jnp.sum(mask, axis=1), 1).astype(e.dtype)
+        s = s / n[:, None]
+    return s

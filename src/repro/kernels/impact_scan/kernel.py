@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: JASS score-at-a-time impact accumulation.
+
+The ρ knob's inner loop: add quantized impact contributions of the first ρ
+postings of a query's impact-ordered stream into a dense document
+accumulator.  On CPU JASS this is a scalar scatter loop; the TPU
+adaptation (DESIGN.md §3) reformulates the scatter as a *blocked one-hot
+matmul*, which the MXU executes densely:
+
+    grid = (Q, n_doc_blocks, n_posting_blocks)
+    acc[q, db] += impacts[q, pb] @ onehot(doc_ids[q, pb] == doc_range(db))
+
+ρ enters twice, preserving JASS's anytime semantics exactly:
+  * the posting-block grid axis is truncated to ceil(ρ / block_p) — early
+    termination as static grid truncation,
+  * a within-block mask kills the ragged tail beyond ρ.
+
+VMEM at defaults (block_p=512, block_d=2048): onehot tile 512*2048*4B =
+4 MiB + acc tile 8 KiB — double-bufferable in 16 MiB v5e VMEM.  Posting
+blocks whose doc ids fall entirely outside the doc tile still occupy grid
+slots; with segment metadata (per-block min/max doc id) they become
+``pl.when`` skips — the §Perf log measures that variant.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["impact_scan"]
+
+
+def _impact_kernel(docs_ref, imps_ref, acc_ref, *, rho: int, block_p: int,
+                   block_d: int):
+    pb = pl.program_id(2)
+    db = pl.program_id(1)
+
+    @pl.when(pb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    docs = docs_ref[0]                               # (block_p,) int32
+    imps = imps_ref[0]                               # (block_p,) f32
+    # rho mask: global posting index < rho, and padding (-1 docs) dropped
+    pidx = pb * block_p + jax.lax.broadcasted_iota(
+        jnp.int32, (block_p,), 0)
+    live = (pidx < rho) & (docs >= 0)
+    w = jnp.where(live, imps, 0.0)
+    # one-hot over this doc tile: (block_p, block_d)
+    base = db * block_d
+    onehot = (docs[:, None] - base
+              == jax.lax.broadcasted_iota(jnp.int32, (block_p, block_d), 1))
+    contrib = jax.lax.dot_general(
+        w[None, :], onehot.astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_ref[0] += contrib[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_docs", "rho", "block_p", "block_d",
+                              "interpret"))
+def impact_scan(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
+                n_docs: int, rho: int, block_p: int = 512,
+                block_d: int = 2048, interpret: bool = True) -> jnp.ndarray:
+    """doc_stream: (Q, P) int32 (-1 padded), impact_stream: (Q, P) f32,
+    both impact-descending.  Returns (Q, n_docs) accumulators equal to
+    processing exactly the first ``rho`` postings."""
+    qn, p = doc_stream.shape
+    bp = min(block_p, p)
+    n_p_full = -(-p // bp)
+    # early termination: only schedule posting blocks below rho
+    n_p = min(n_p_full, -(-rho // bp)) if rho > 0 else 0
+    n_p = max(n_p, 1)
+    bd = min(block_d, n_docs)
+    n_d = -(-n_docs // bd)
+    d_pad = n_d * bd
+
+    kernel = functools.partial(_impact_kernel, rho=rho, block_p=bp,
+                               block_d=bd)
+    out = pl.pallas_call(
+        kernel,
+        grid=(qn, n_d, n_p),
+        in_specs=[
+            pl.BlockSpec((1, bp), lambda q, d, s: (q, s)),
+            pl.BlockSpec((1, bp), lambda q, d, s: (q, s)),
+        ],
+        out_specs=pl.BlockSpec((1, bd), lambda q, d, s: (q, d)),
+        out_shape=jax.ShapeDtypeStruct((qn, d_pad), jnp.float32),
+        interpret=interpret,
+    )(doc_stream, impact_stream)
+    return out[:, :n_docs]

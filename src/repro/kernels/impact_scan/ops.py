@@ -1,0 +1,21 @@
+"""jit'd wrapper for impact_scan with kernel/oracle dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.impact_scan.kernel import impact_scan as _kernel
+from repro.kernels.impact_scan.ref import impact_scan_ref
+
+__all__ = ["saat_accumulate"]
+
+
+def saat_accumulate(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
+                    n_docs: int, rho: int, use_kernel: bool = True,
+                    block_p: int = 512, block_d: int = 2048,
+                    interpret: bool = True) -> jnp.ndarray:
+    """Score-at-a-time accumulation of the first ``rho`` postings."""
+    if use_kernel:
+        return _kernel(doc_stream, impact_stream, n_docs=n_docs, rho=rho,
+                       block_p=block_p, block_d=block_d, interpret=interpret)
+    return impact_scan_ref(doc_stream, impact_stream, n_docs=n_docs, rho=rho)

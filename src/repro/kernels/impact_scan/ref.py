@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for impact_scan — identical to retrieval.jass.saat_scores."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["impact_scan_ref"]
+
+
+def impact_scan_ref(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
+                    n_docs: int, rho: int) -> jnp.ndarray:
+    def one(docs, imps):
+        mask = (jnp.arange(docs.shape[0]) < rho) & (docs >= 0)
+        contrib = jnp.where(mask, imps, 0.0)
+        return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(contrib)
+
+    return jax.vmap(one)(doc_stream, impact_stream)

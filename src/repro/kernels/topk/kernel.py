@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: blocked top-k selection (the k knob's select step).
+
+Two-stage selection over dense stage-1 scores (DESIGN.md §3):
+
+  stage 1 (this kernel): each (query, score-block) grid cell extracts its
+  local top-k' (k' = min(k, 128)) by iterative max-extraction — k' rounds
+  of vector max + masked knockout, entirely in VMEM/VPU registers.  The
+  global top-k is provably contained in the union of per-block top-k'
+  whenever k <= k' or k >= block size.
+
+  stage 2 (ops.py): a single jnp top_k over the (n_blocks * k') surviving
+  candidates — tiny compared to the original score vector.
+
+This mirrors how the candidate universe shards over the mesh at serve
+time: stage 1 runs on each model-parallel shard's local scores, stage 2 is
+the cross-shard merge.
+
+Iterative extraction (not a bitonic network) is the right TPU shape for
+the cascade's hot classes: predicted k is 20-2000, so k' <= 128 rounds of
+(8, 128)-lane max is cheap and needs no cross-lane shuffles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["block_topk"]
+
+NEG_INF = -jnp.inf
+
+
+def _topk_kernel(scores_ref, vals_ref, idxs_ref, *, kp: int, block_n: int):
+    bi = pl.program_id(1)
+    s = scores_ref[0].astype(jnp.float32)            # (block_n,)
+    base = bi * block_n
+    # deterministic ties: prefer lower doc id => subtract tiny rank epsilon
+    local_idx = jax.lax.broadcasted_iota(jnp.int32, (block_n,), 0)
+
+    def body(j, carry):
+        s_cur, = carry
+        m = jnp.max(s_cur)
+        # argmax with lowest-index tie-break
+        is_max = s_cur == m
+        amax = jnp.min(jnp.where(is_max, local_idx, block_n))
+        vals_ref[0, j] = m
+        idxs_ref[0, j] = base + amax
+        s_cur = jnp.where(local_idx == amax, NEG_INF, s_cur)
+        return (s_cur,)
+
+    jax.lax.fori_loop(0, kp, body, (s,))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kp", "block_n", "interpret"))
+def block_topk(scores: jnp.ndarray, *, kp: int, block_n: int = 4096,
+               interpret: bool = True):
+    """scores: (Q, N) -> (vals (Q, n_blocks*kp), idxs (Q, n_blocks*kp)).
+
+    Per-block top-kp candidates; the caller merges (ops.topk_select).
+    """
+    qn, n = scores.shape
+    bn = min(block_n, n)
+    n_b = -(-n // bn)
+    n_pad = n_b * bn
+    if n_pad != n:
+        scores = jnp.pad(scores, ((0, 0), (0, n_pad - n)),
+                         constant_values=NEG_INF)
+
+    kernel = functools.partial(_topk_kernel, kp=kp, block_n=bn)
+    vals, idxs = pl.pallas_call(
+        kernel,
+        grid=(qn, n_b),
+        in_specs=[pl.BlockSpec((1, bn), lambda q, b: (q, b))],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda q, b: (q, b)),
+            pl.BlockSpec((1, kp), lambda q, b: (q, b)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, n_b * kp), jnp.float32),
+            jax.ShapeDtypeStruct((qn, n_b * kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores)
+    return vals, idxs

@@ -1,0 +1,37 @@
+"""jit'd two-stage top-k: Pallas block select + jnp merge."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk.kernel import block_topk
+from repro.kernels.topk.ref import topk_ref
+
+__all__ = ["topk_select"]
+
+_KP_MAX = 128
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_n", "use_kernel", "interpret"))
+def topk_select(scores: jnp.ndarray, k: int, *, block_n: int = 4096,
+                use_kernel: bool = True, interpret: bool = True):
+    """Exact top-k of (Q, N) scores; ties broken toward lower index.
+
+    The kernel fast path covers k <= 128 (the cascade's hot classes); wider
+    k falls back to the oracle path, which is still a single fused XLA op.
+    """
+    if not use_kernel or k > _KP_MAX:
+        return topk_ref(scores, k)
+    vals, idxs = block_topk(scores, kp=k, block_n=block_n,
+                            interpret=interpret)
+    # stage 2: merge the per-block survivors (lexicographic tie-break:
+    # compose (score, -idx) into a sortable key pair via lexsort)
+    def merge(v, i):
+        order = jnp.lexsort((i, -v))[:k]
+        return v[order], i[order]
+
+    return jax.vmap(merge)(vals, idxs)

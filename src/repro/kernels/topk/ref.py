@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: exact top-k with low-doc-id tie-breaking."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_ref"]
+
+
+def topk_ref(scores: jnp.ndarray, k: int):
+    """scores: (Q, N) -> (vals (Q, k), idxs (Q, k)), ties to lower index."""
+    n = scores.shape[-1]
+
+    def one(s):
+        order = jnp.lexsort((jnp.arange(n), -s))
+        top = order[:k]
+        return s[top], top.astype(jnp.int32)
+
+    return jax.vmap(one)(scores)

@@ -1,0 +1,40 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) — 256 v5e chips.  Multi-pod: (pod=2,
+data=16, model=16) — 512 chips; the 'pod' axis carries only data
+parallelism + gradient reduction, matching DCN-over-ICI topology (pod axis
+collectives are the slow ones; sharding rules never put TP/EP on it).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh", "HW"]
+
+
+#: TPU v5e hardware constants used by the roofline (per chip)
+HW = {
+    "peak_flops_bf16": 197e12,     # FLOP/s
+    "hbm_bw": 819e9,               # B/s
+    "ici_bw": 50e9,                # B/s per link
+    "hbm_bytes": 16 * 2 ** 30,
+}
+
+
+def _axis_types(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_axis_types(2))

@@ -1,0 +1,65 @@
+"""Serving driver: the multi-stage retrieval system with the cascade in
+front, as a batched request loop.
+
+  PYTHONPATH=src python -m repro.launch.serve --knob k --batches 8
+
+On a pod the same pipeline shards the candidate universe over 'model' and
+request batches over ('pod','data'); here it runs the CPU-scale system and
+reports per-batch latency, mean parameter, and envelope compliance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import cascade as cascade_lib
+from repro.core import experiment as E
+from repro.core import labeling, tradeoff
+from repro.serving import pipeline as sp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--knob", default="k", choices=["k", "rho"])
+    ap.add_argument("--tau", type=float, default=0.05)
+    ap.add_argument("--threshold", type=float, default=0.75)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--n-docs", type=int, default=8000)
+    ap.add_argument("--n-queries", type=int, default=1024)
+    args = ap.parse_args()
+
+    sys_ = E.build_system(E.ExperimentConfig(
+        n_docs=args.n_docs, vocab=args.n_docs * 2,
+        n_queries=args.n_queries, stream_cap=1024, pool_depth=2000,
+        gold_depth=200, query_batch=128))
+    cutoffs = sys_.k_cutoffs if args.knob == "k" else sys_.rho_cutoffs
+    med = E.med_tables(sys_, args.knob, metrics=("rbp",))["rbp"]
+    labels = np.asarray(labeling.envelope_labels(med, args.tau))
+    casc = cascade_lib.train_cascade(
+        sys_.features, labels, n_cutoffs=len(cutoffs),
+        forest_kwargs=dict(n_trees=10, max_depth=6))
+    server = sp.RetrievalServer(sys_.index, casc, sp.ServingConfig(
+        knob=args.knob, cutoffs=cutoffs, threshold=args.threshold,
+        rerank_depth=100, stream_cap=sys_.cfg.stream_cap))
+
+    print(f"{'batch':>6}{'lat_ms':>9}{'q/s':>8}{'mean_' + args.knob:>10}"
+          f"{'in_envelope':>12}")
+    qn = sys_.queries.n_queries
+    for bi in range(args.batches):
+        lo = (bi * args.batch) % max(qn - args.batch, 1)
+        qt = sys_.queries.terms[lo:lo + args.batch]
+        t0 = time.time()
+        out = server.serve_batch(qt)
+        dt = time.time() - t0
+        pct = tradeoff.pct_under_target(
+            med[lo:lo + args.batch], out["classes"], args.tau)
+        print(f"{bi:>6}{dt * 1e3:>9.1f}{args.batch / dt:>8.0f}"
+              f"{out['mean_param']:>10.0f}{pct:>11.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Assigned architectures: 5 LM transformers, GraphSAGE, 4 recsys models."""

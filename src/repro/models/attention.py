@@ -1,0 +1,168 @@
+"""Attention cores: chunked (memory-efficient) training/prefill attention,
+single-step decode attention, grouped GQA, sliding windows, and MLA
+(DeepSeek latent attention) support.
+
+GQA is computed as a *grouped einsum* over (Hkv, G) query groups — the
+repeated-KV tensor is never materialized.  Besides the bandwidth saving,
+this matters under SPMD: a broadcast_in_dim from seq-sharded KV to
+head-sharded KV triggers involuntary full rematerialization in the
+partitioner (measured: 837 GB/device/step of all-gather on the train_4k
+cell — benchmarks/perf_log.md Iter 2/3).
+
+The training/prefill core processes query blocks so the live score buffer
+is (B, Hkv, G, bq, S) instead of (B, H, S, S); each block is
+jax.checkpoint'ed so backward recomputes probs flash-style.  On TPU the
+Pallas ``flash_attention`` kernel replaces this core; this is its oracle
+and the dry-run default (plain HLO so cost_analysis sees real FLOPs).
+
+Sliding-window attention slices a static window of keys per query block,
+making SWA compute O(S * W) — the property that makes mixtral's long_500k
+cell runnable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.hints import hint
+
+__all__ = ["chunked_attention", "decode_attention", "repeat_kv"]
+
+NEG_INF = -1e30
+
+
+def repeat_kv(kv: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, KV, hd) -> (B, S, KV*groups, hd).  Kept for the Pallas
+    wrapper and tests; the jnp cores below use grouped einsums instead."""
+    if groups == 1:
+        return kv
+    b, s, h, d = kv.shape
+    return jnp.broadcast_to(kv[:, :, :, None, :], (b, s, h, groups, d)) \
+              .reshape(b, s, h * groups, d)
+
+
+def _attend_block(qb, kT, vT, bias, scale):
+    """qb: (B, Hkv, G, bq, hd); kT/vT: (B, Hkv, S, hd); bias: (bq, S)."""
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qb, kT).astype(jnp.float32) * scale
+    s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1).astype(vT.dtype)
+    return jnp.einsum("bhgqk,bhkd->bhgqd", p, vT)
+
+
+# NOTE: deliberately NOT @jax.jit — the sharding hint inside would be
+# frozen into the inner trace cache and leak across meshes (the multi-pod
+# dry-run hit exactly this: single-pod NamedShardings reused at 512
+# devices).  Callers are always inside an outer jit.
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int | None = None,
+                      block_q: int = 512, unroll: bool = False) -> jnp.ndarray:
+    """Memory-efficient grouped attention.
+
+    q: (B, S, Hq, hd); k, v: (B, S, Hkv, hd) with Hq % Hkv == 0.
+    Returns (B, S, Hq, hd_v).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    hd_v = v.shape[-1]
+    g = hq // hkv
+    bq = min(block_q, s)
+    s_pad = -(-s // bq) * bq
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0))) \
+        if s_pad != s else q
+    # (B, Hkv, G, S, hd)
+    qT = jnp.moveaxis(qp.reshape(b, s_pad, hkv, g, hd), 1, 3)
+    qT = hint(qT, "attn_q")
+    kT = jnp.swapaxes(k, 1, 2)          # (B, Hkv, S, hd)
+    vT = jnp.swapaxes(v, 1, 2)
+    scale = hd ** -0.5
+    nblk = s_pad // bq
+
+    if window is not None:
+        # keys live in [q_start - window + 1, q_end]; slice a static-size
+        # window of length W + bq per block => O(S * W) total work.
+        wlen = min(window + bq, s)
+
+        def blk(i):
+            q_start = i * bq
+            # clamp exactly as dynamic_slice will, so kpos stays aligned
+            k_start = jnp.clip(q_start + bq - wlen, 0, s - wlen)
+            qb = jax.lax.dynamic_slice_in_dim(qT, q_start, bq, axis=3)
+            kb = jax.lax.dynamic_slice_in_dim(kT, k_start, wlen, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vT, k_start, wlen, axis=2)
+            qpos = q_start + jnp.arange(bq)
+            kpos = k_start + jnp.arange(wlen)
+            rel = qpos[:, None] - kpos[None, :]
+            ok = (rel >= 0) & (rel < window)
+            bias = jnp.where(ok, 0.0, NEG_INF)
+            return _attend_block(qb, kb, vb, bias, scale)
+
+        blk = jax.checkpoint(blk)  # never save block probs for bwd
+        if unroll:
+            out = jnp.stack([blk(jnp.int32(i)) for i in range(nblk)])
+        else:
+            out = jax.lax.map(blk, jnp.arange(nblk))
+    elif causal and unroll:
+        # static causal block skipping: query block i only needs keys
+        # [0, (i+1)*bq) — 2x fewer attention FLOPs than masked-full rows
+        ck = jax.checkpoint(
+            lambda qb, kb, vb, bias: _attend_block(qb, kb, vb, bias, scale))
+        outs = []
+        for i in range(nblk):
+            q_start = i * bq
+            k_len = min(q_start + bq, s)
+            qpos = q_start + jnp.arange(bq)
+            kpos = jnp.arange(k_len)
+            bias = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+            outs.append(ck(qT[:, :, :, q_start:q_start + bq],
+                           kT[:, :, :k_len], vT[:, :, :k_len], bias))
+        out = jnp.concatenate(outs, axis=3)      # (B, Hkv, G, S_pad, hd_v)
+        out = out.reshape(b, hkv * g, s_pad, hd_v)[:, :, :s]
+        return jnp.swapaxes(out, 1, 2)
+    else:
+
+        def blk(i):
+            q_start = i * bq
+            qb = jax.lax.dynamic_slice_in_dim(qT, q_start, bq, axis=3)
+            qpos = q_start + jnp.arange(bq)
+            kpos = jnp.arange(s)
+            if causal:
+                bias = jnp.where(qpos[:, None] >= kpos[None, :], 0.0, NEG_INF)
+            else:
+                bias = jnp.zeros((bq, s), jnp.float32)
+            return _attend_block(qb, kT, vT, bias, scale)
+
+        blk = jax.checkpoint(blk)
+        if unroll:
+            out = jnp.stack([blk(jnp.int32(i)) for i in range(nblk)])
+        else:
+            out = jax.lax.map(blk, jnp.arange(nblk))
+
+    # out: (nblk, B, Hkv, G, bq, hd_v) -> (B, S, Hq, hd_v)
+    out = jnp.moveaxis(out, 0, 3)                  # (B, Hkv, G, nblk, bq, hd)
+    out = out.reshape(b, hkv * g, s_pad, hd_v)[:, :, :s]
+    return jnp.swapaxes(out, 1, 2)
+
+
+@jax.jit
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """One-token grouped attention against a KV cache.
+
+    q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd); valid: (B, S) bool mask of
+    populated cache slots (handles ring-buffer SWA caches transparently).
+    """
+    b, _, hq, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    hd_v = v_cache.shape[-1]
+    qg = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                   k_cache).astype(jnp.float32) * hd ** -0.5
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v_cache.dtype)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache)
+    return o.reshape(b, 1, hq, hd_v)

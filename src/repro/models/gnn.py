@@ -1,0 +1,161 @@
+"""GraphSAGE (Hamilton et al., 2017) — mean aggregator, 2 layers.
+
+JAX has no sparse message-passing primitive (BCOO only), so aggregation is
+built from first principles (kernel_taxonomy §GNN): gather source features
+by edge index, ``jax.ops.segment_sum`` into destinations, normalize by
+in-degree.  Two execution modes:
+
+  * full-batch: one (2, E) edge index over all nodes (full_graph_sm /
+    ogb_products cells).  Under pjit, edges shard over the whole mesh and
+    the per-shard partial node accumulators are combined by XLA (psum) —
+    the collective-bound regime discussed in DESIGN.md §6.
+  * sampled minibatch: layered blocks from the fanout sampler
+    (models/sampler.py) — seeds + their sampled frontier per hop, the
+    GraphSAGE training regime (minibatch_lg cell).
+
+The supervised objective is node classification (cross entropy), as in the
+paper's Reddit / ogbn-products setups.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+__all__ = ["SageConfig", "init_sage", "sage_forward_full",
+           "sage_forward_blocks", "sage_loss_full", "sage_loss_blocks"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SageConfig:
+    n_layers: int = 2
+    d_in: int = 602
+    d_hidden: int = 128
+    n_classes: int = 41
+    aggregator: str = "mean"
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_sage(cfg: SageConfig, seed: int = 0, abstract: bool = False) -> dict:
+    rng = L.rng_or_abstract(seed, abstract)
+    dt = np.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    layers = []
+    d_in = cfg.d_in
+    for i in range(cfg.n_layers):
+        d_out = cfg.d_hidden
+        layers.append({
+            "w_self": L.init_linear(rng, (d_in, d_out), dtype=dt),
+            "w_neigh": L.init_linear(rng, (d_in, d_out), dtype=dt),
+            "b": np.zeros((d_out,), dt),
+        })
+        d_in = d_out
+    return {
+        "layers": layers,
+        "head": L.init_linear(rng, (cfg.d_hidden, cfg.n_classes), dtype=dt),
+        "graph_head": L.init_linear(rng, (cfg.d_hidden, 1), dtype=dt),
+    }
+
+
+def _mean_agg(h_src: jnp.ndarray, dst: jnp.ndarray, n_dst: int) -> jnp.ndarray:
+    """segment-mean of gathered source features into destination nodes."""
+    s = jax.ops.segment_sum(h_src, dst, num_segments=n_dst)
+    deg = jax.ops.segment_sum(jnp.ones((h_src.shape[0],), h_src.dtype), dst,
+                              num_segments=n_dst)
+    return s / jnp.maximum(deg, 1.0)[:, None]
+
+
+def _sage_layer(lp: dict, h_self: jnp.ndarray, agg: jnp.ndarray):
+    out = h_self @ lp["w_self"] + agg @ lp["w_neigh"] + lp["b"]
+    out = jax.nn.relu(out)
+    # L2 normalize, as in the paper
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-6)
+
+
+def sage_forward_full(params: dict, cfg: SageConfig, x: jnp.ndarray,
+                      edges: jnp.ndarray) -> jnp.ndarray:
+    """Full-batch forward.  x: (N, d_in); edges: (2, E) [src, dst] int32.
+
+    Returns (N, n_classes) logits.
+    """
+    n = x.shape[0]
+    h = x.astype(cfg.jdtype)
+    src, dst = edges[0], edges[1]
+    for lp in params["layers"]:
+        agg = _mean_agg(h[src], dst, n)
+        h = _sage_layer(lp, h, agg)
+    return (h @ params["head"]).astype(jnp.float32)
+
+
+def sage_forward_blocks(params: dict, cfg: SageConfig,
+                        feats: list[jnp.ndarray],
+                        blocks: list[dict]) -> jnp.ndarray:
+    """Sampled-minibatch forward over layered blocks (innermost first).
+
+    feats[i]: features of the layer-i node frontier; blocks[i] has
+    ``src_index`` (Ei,) indices into frontier i+1's nodes, ``dst_index``
+    (Ei,) indices into frontier i's nodes, and ``n_dst``.
+    Frontier 0 is the seed batch.  Returns (n_seeds, n_classes) logits.
+    """
+    hs = [f.astype(cfg.jdtype) for f in feats]
+    for li, lp in enumerate(params["layers"]):
+        new_hs = []
+        # after layer li we only need frontiers 0..n_layers-li-1
+        for depth in range(len(hs) - 1):
+            blk = blocks[depth]
+            h_src = hs[depth + 1][blk["src_index"]]
+            agg = _mean_agg(h_src, blk["dst_index"], hs[depth].shape[0])
+            new_hs.append(_sage_layer(lp, hs[depth], agg))
+        hs = new_hs
+    return (hs[0] @ params["head"]).astype(jnp.float32)
+
+
+def _xent(logits: jnp.ndarray, labels: jnp.ndarray,
+          mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(ll, labels[:, None], axis=1)[:, 0]
+    if mask is None:
+        return jnp.mean(nll)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def sage_loss_full(params, cfg: SageConfig, x, edges, labels, mask):
+    return _xent(sage_forward_full(params, cfg, x, edges), labels, mask)
+
+
+def sage_loss_blocks(params, cfg: SageConfig, feats, blocks, labels):
+    return _xent(sage_forward_blocks(params, cfg, feats, blocks), labels)
+
+
+def sage_graph_regression(params: dict, cfg: SageConfig, x: jnp.ndarray,
+                          edges: jnp.ndarray, graph_id: jnp.ndarray,
+                          n_graphs: int) -> jnp.ndarray:
+    """Batched small graphs (molecule cell): mean-pool node embeddings per
+    graph -> scalar prediction.  x: (B*n, d); edges over the disjoint
+    union; graph_id: (B*n,) -> (B,)."""
+    n = x.shape[0]
+    h = x.astype(cfg.jdtype)
+    src, dst = edges[0], edges[1]
+    for lp in params["layers"]:
+        agg = _mean_agg(h[src], dst, n)
+        h = _sage_layer(lp, h, agg)
+    pooled = jax.ops.segment_sum(h, graph_id, num_segments=n_graphs)
+    cnt = jax.ops.segment_sum(jnp.ones((n,), h.dtype), graph_id,
+                              num_segments=n_graphs)
+    pooled = pooled / jnp.maximum(cnt, 1.0)[:, None]
+    return (pooled @ params["graph_head"])[:, 0].astype(jnp.float32)
+
+
+def sage_loss_molecule(params, cfg: SageConfig, x, edges, graph_id, y,
+                       n_graphs: int):
+    pred = sage_graph_regression(params, cfg, x, edges, graph_id, n_graphs)
+    return jnp.mean((pred - y) ** 2)

@@ -1,0 +1,141 @@
+"""Shared model layers: norms, RoPE, MLPs, losses.
+
+Pure-functional JAX: params are plain pytrees of jnp arrays; every layer is
+``f(params, x, ...)``.  Initialization helpers return numpy so that param
+trees can be built host-side and device_put with shardings attached.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "swiglu", "dense",
+    "init_linear", "init_norm", "chunked_softmax_xent",
+    "AbstractRNG", "FakeArray", "rng_or_abstract",
+]
+
+
+class FakeArray:
+    """Shape/dtype-only stand-in so huge param trees never materialize
+    (used by the dry-run's abstract init and by param counting)."""
+
+    def __init__(self, shape, dtype):
+        self.shape = tuple(int(s) for s in shape)
+        self.dtype = jnp.dtype(dtype)
+
+    def astype(self, dt):
+        return FakeArray(self.shape, dt)
+
+    @property
+    def ndim(self):
+        return len(self.shape)
+
+
+class AbstractRNG:
+    """numpy-free Generator twin: every draw returns a FakeArray."""
+
+    def normal(self, loc=0.0, scale=1.0, size=None):
+        return FakeArray(size if size is not None else (), np.float32)
+
+    # parity with np.random.Generator where inits use it
+    def uniform(self, low=0.0, high=1.0, size=None):
+        return FakeArray(size if size is not None else (), np.float32)
+
+
+def rng_or_abstract(seed: int, abstract: bool):
+    return AbstractRNG() if abstract else np.random.default_rng(seed)
+
+
+def rms_norm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * w
+
+
+def layer_norm(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean((x32 - mu) ** 2, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(dt) * w + b
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense(w: jnp.ndarray, x: jnp.ndarray, b: jnp.ndarray | None = None):
+    y = x @ w
+    return y if b is None else y + b
+
+
+def swiglu(w_gate: jnp.ndarray, w_up: jnp.ndarray, w_down: jnp.ndarray,
+           x: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def init_linear(rng, shape, scale: float | None = None,
+                dtype=np.float32) -> np.ndarray:
+    fan_in = shape[0] if len(shape) == 2 else int(np.prod(shape[:-1]))
+    s = scale if scale is not None else fan_in ** -0.5
+    return rng.normal(0.0, s, shape).astype(dtype)
+
+
+def init_norm(shape, dtype=np.float32) -> np.ndarray:
+    return np.ones(shape, dtype)
+
+
+def chunked_softmax_xent(hidden: jnp.ndarray, lm_head: jnp.ndarray,
+                         targets: jnp.ndarray, mask: jnp.ndarray,
+                         block: int = 1024, unroll: bool = False) -> jnp.ndarray:
+    """Cross-entropy without materializing (T, V) logits.
+
+    hidden: (T, D) final hidden states, lm_head: (D, V), targets: (T,),
+    mask: (T,).  Scans over T in ``block``-sized chunks so the live logits
+    buffer is (block, V) — essential for the 150k-vocab archs at 4k x 256
+    batch, where full logits would be tens of GB per device.
+    """
+    T, D = hidden.shape
+    nblk = T // block
+    assert nblk * block == T, f"T={T} not divisible by block={block}"
+    h = hidden.reshape(nblk, block, D)
+    tg = targets.reshape(nblk, block)
+    mk = mask.reshape(nblk, block)
+
+    def one(hb, tb, mb):
+        logits = (hb @ lm_head).astype(jnp.float32)       # (block, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tb[:, None], axis=1)[:, 0]
+        return jnp.sum((lse - gold) * mb)
+
+    one = jax.checkpoint(one)  # recompute block logits in bwd
+    if unroll:
+        total = jnp.zeros((), jnp.float32)
+        for i in range(nblk):
+            total = total + one(h[i], tg[i], mk[i])
+    else:
+        def step(carry, inp):
+            return carry + one(*inp), None
+
+        total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32),
+                                (h, tg, mk))
+    return total / jnp.maximum(jnp.sum(mask), 1.0)

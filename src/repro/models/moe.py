@@ -1,0 +1,234 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based capacity dispatch.
+
+TPU-native dispatch (DESIGN.md section 6): tokens are ranked within their
+assigned expert via an argsort (no data-dependent shapes), scattered into a
+static (E, C, D) expert buffer, transformed by a batched-per-expert SwiGLU,
+and gathered back with their gate weights.  Under pjit with experts sharded
+over the ``model`` axis and the capacity dim over ``data``, XLA SPMD turns
+the scatter/gather into the canonical MoE all-to-all pair — the collective
+the deepseek-v3 roofline is dominated by.
+
+Supports: top-k (mixtral k=2, deepseek k=8), shared experts (deepseek),
+router softmax-then-topk with renormalized gates, Switch-style load
+balancing aux loss, and token dropping at the capacity bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["MoEConfig", "moe_ffn", "init_moe_params"]
+
+import numpy as np
+
+from repro.distrib.hints import hint
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0            # deepseek shared experts (dense, always-on)
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0  # deepseek: first 3 layers are dense FFN
+    aux_loss_weight: float = 0.01
+    #: "gspmd" — single-program scatter/gather, partitioner-scheduled;
+    #: "shard_map" — explicit per-device dispatch + all-to-all pair (the
+    #: canonical TPU MoE schedule; §Perf iter D2).  Requires E % n_devices
+    #: == 0 and the active mesh in distrib.hints under "mesh".
+    dispatch: str = "gspmd"
+
+
+def init_moe_params(rng: np.random.Generator, cfg: MoEConfig, d_model: int,
+                    n_layers: int, dtype) -> dict:
+    e, f = cfg.n_experts, cfg.d_ff_expert
+    p = {
+        "router": L.init_linear(rng, (n_layers, d_model, e), dtype=np.float32),
+        "w_gate": L.init_linear(rng, (n_layers, e, d_model, f), dtype=dtype),
+        "w_up": L.init_linear(rng, (n_layers, e, d_model, f), dtype=dtype),
+        "w_down": L.init_linear(rng, (n_layers, e, f, d_model), dtype=dtype),
+    }
+    if cfg.n_shared:
+        fs = f * cfg.n_shared
+        p["shared_gate"] = L.init_linear(rng, (n_layers, d_model, fs), dtype=dtype)
+        p["shared_up"] = L.init_linear(rng, (n_layers, d_model, fs), dtype=dtype)
+        p["shared_down"] = L.init_linear(rng, (n_layers, fs, d_model), dtype=dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: MoEConfig) -> int:
+    c = int(np.ceil(n_tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _route(params, x, cfg: MoEConfig):
+    """Router + top-k + Switch aux loss (shared by both dispatch paths)."""
+    t = x.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (x.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                     # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(probs, axis=0)
+    counts = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    aux = cfg.aux_loss_weight * e * jnp.sum(
+        me * jax.lax.stop_gradient(counts / t))
+    return gates, eidx, aux
+
+
+def _local_dispatch(x, eidx, gates, e: int, cap: int):
+    """Sort-based capacity dispatch on *local* data (no SPMD scatter).
+
+    Returns (buf (E, cap, D), flat_e, safe_rank, keep)."""
+    t, d = x.shape
+    k = eidx.shape[-1]
+    flat_e = eidx.reshape(-1)
+    sidx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sidx]
+    start = jnp.searchsorted(sorted_e, jnp.arange(e))
+    rank_sorted = jnp.arange(t * k) - start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[sidx].set(rank_sorted)
+    keep = rank < cap
+    safe_rank = jnp.where(keep, rank, 0)
+    x_rep = jnp.repeat(x, k, axis=0)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_rank].add(x_rep, mode="drop")
+    return buf, flat_e, safe_rank, keep
+
+
+def _combine(y_buf, flat_e, safe_rank, keep, gates, t: int, k: int, d: int):
+    y_tok = y_buf[flat_e, safe_rank]
+    y_tok = y_tok * (gates.reshape(-1, 1) * keep[:, None]).astype(y_tok.dtype)
+    return y_tok.reshape(t, k, d).sum(axis=1)
+
+
+def moe_ffn_shard_map(params: dict, x: jnp.ndarray, cfg: MoEConfig, mesh):
+    """Explicit-collective MoE (§Perf iter D2).
+
+    Per device: local routing + local capacity dispatch, one all-to-all
+    scattering expert rows to their owners, local expert FFN with
+    *resident* weights (EP over every mesh axis that divides E), reverse
+    all-to-all, local combine.  Collective volume per device per layer is
+    2 x (local tokens x k x D) — independent of expert count — versus
+    GSPMD's replicated (E, C, D) buffer (measured 43 TB/step all-gather
+    on deepseek train_4k).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    axes = tuple(a for a in mesh.axis_names)      # tokens sharded over all
+    # expert-parallel axes: largest suffix of ("model", dp...) dividing E
+    ep_axes = tuple(a for a in ("model", "data")
+                    if a in mesh.axis_names)
+    n_ep = int(np.prod([mesh.shape[a] for a in ep_axes]))
+    assert e % n_ep == 0, (e, n_ep)
+    t_loc = t // int(np.prod([mesh.shape[a] for a in axes]))
+    cap = _capacity(t_loc, cfg)
+
+    def local(w_gate, w_up, w_down, router, xl):
+        # xl: (T_loc, D); weights: (E/n_ep, D, F) resident
+        gates, eidx, aux = _route({"router": router}, xl, cfg)
+        buf, flat_e, rank, keep = _local_dispatch(xl, eidx, gates, e, cap)
+        # scatter expert rows to owners: (E, cap, D) -> (E_loc, n_ep*cap, D)
+        buf = jax.lax.all_to_all(buf, ep_axes, split_axis=0, concat_axis=1,
+                                 tiled=True)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate)) \
+            * jnp.einsum("ecd,edf->ecf", buf, w_up)
+        y = jnp.einsum("ecf,efd->ecd", h, w_down)
+        # return rows to their sources (exact inverse of the forward a2a)
+        y = jax.lax.all_to_all(y, ep_axes, split_axis=1, concat_axis=0,
+                               tiled=True)
+        out = _combine(y, flat_e, rank, keep, gates, t_loc, k, d)
+        return out, jax.lax.pmean(aux, axes)
+
+    ep_spec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
+    tok_spec = P(axes if len(axes) > 1 else axes[0], None)
+    f = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(ep_spec, ep_spec, ep_spec, P(None, None), tok_spec),
+        out_specs=(tok_spec, P()),
+        check_vma=False,
+    )
+    y, aux = f(params["w_gate"], params["w_up"], params["w_down"],
+               params["router"], x)
+    if cfg.n_shared:
+        y = y + L.swiglu(params["shared_gate"], params["shared_up"],
+                         params["shared_down"], x)
+    return y, aux
+
+
+# NOTE: not @jax.jit — the buffer sharding hint must re-trace per mesh
+# (see models/attention.py); callers are always inside an outer jit.
+def moe_ffn(params: dict, x: jnp.ndarray, cfg: MoEConfig):
+    """x: (T, D) -> (y: (T, D), aux_loss: scalar)."""
+    if cfg.dispatch == "shard_map":
+        from repro.distrib import hints as H
+
+        mesh = H.get("mesh")
+        if mesh is not None:
+            n_dev = int(np.prod(list(mesh.shape.values())))
+            ep_axes = tuple(a for a in ("model", "data")
+                            if a in mesh.axis_names)
+            n_ep = int(np.prod([mesh.shape[a] for a in ep_axes]))
+            if (x.shape[0] % n_dev == 0 and x.shape[0] >= n_dev
+                    and cfg.n_experts % n_ep == 0):
+                return moe_ffn_shard_map(params, x, cfg, mesh)
+            # else: token count too small (decode) or indivisible — GSPMD
+    t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+
+    logits = (x.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)                     # (T, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Switch aux loss: E * sum_e f_e * p_e.  f_e via scatter-add counts —
+    # a (T, K, E) one_hot here costs 8.6 TB at deepseek train scale
+    # (measured; benchmarks/perf_log.md Iter 4).
+    me = jnp.mean(probs, axis=0)
+    counts = jnp.zeros((e,), jnp.float32).at[eidx.reshape(-1)].add(1.0)
+    ce = counts / t
+    aux = cfg.aux_loss_weight * e * jnp.sum(
+        me * jax.lax.stop_gradient(ce))
+
+    # rank of each (token, slot) within its expert, via stable sort
+    flat_e = eidx.reshape(-1)                                 # (T*K,)
+    sidx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sidx]
+    start = jnp.searchsorted(sorted_e, jnp.arange(e))         # (E,)
+    rank_sorted = jnp.arange(t * k) - start[sorted_e]
+    rank = jnp.zeros_like(rank_sorted).at[sidx].set(rank_sorted)
+    keep = rank < cap
+    safe_rank = jnp.where(keep, rank, 0)
+
+    # dispatch: (E, C, D) expert buffer
+    x_rep = jnp.repeat(x, k, axis=0)                          # (T*K, D)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[flat_e, safe_rank].add(x_rep, mode="drop")
+    buf = hint(buf, "moe_buffer")
+
+    # batched per-expert SwiGLU
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+    y_buf = hint(jnp.einsum("ecf,efd->ecd", h, params["w_down"]),
+                 "moe_buffer")
+
+    # combine
+    y_tok = y_buf[flat_e, safe_rank]                          # (T*K, D)
+    y_tok = y_tok * (gates.reshape(-1, 1) * keep[:, None]).astype(y_tok.dtype)
+    y = y_tok.reshape(t, k, d).sum(axis=1)
+
+    if cfg.n_shared:
+        y = y + L.swiglu(params["shared_gate"], params["shared_up"],
+                         params["shared_down"], x)
+    return y, aux

@@ -1,0 +1,1 @@
+from repro.models.recsys import bst, dien, embedding, mind, retrieval_tower, wide_deep  # noqa: F401

@@ -1,0 +1,106 @@
+"""BST (Chen et al., 2019) — Behavior Sequence Transformer (Alibaba).
+
+Assigned config: embed_dim 32, seq_len 20, 1 transformer block, 8 heads,
+MLP 1024-512-256.  The candidate item is appended to the behavior sequence
+(as in the paper), learned positional embeddings added, one post-LN
+transformer block applied, and the flattened sequence output + other
+features feed the final MLP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models.recsys.wide_deep import bce
+
+__all__ = ["BSTConfig", "init_bst", "bst_logits", "bst_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BSTConfig:
+    embed_dim: int = 32
+    seq_len: int = 20
+    n_blocks: int = 1
+    n_heads: int = 8
+    item_vocab: int = 2_000_000
+    n_profile: int = 8
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    ff_mult: int = 4
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.n_heads
+
+
+def init_bst(cfg: BSTConfig, seed: int = 0, abstract: bool = False) -> dict:
+    rng = L.rng_or_abstract(seed, abstract)
+    dt = np.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    d = cfg.embed_dim
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "wq": L.init_linear(rng, (d, d), dtype=dt),
+            "wk": L.init_linear(rng, (d, d), dtype=dt),
+            "wv": L.init_linear(rng, (d, d), dtype=dt),
+            "wo": L.init_linear(rng, (d, d), dtype=dt),
+            "ln1_w": L.init_norm((d,), dt), "ln1_b": np.zeros((d,), dt),
+            "ln2_w": L.init_norm((d,), dt), "ln2_b": np.zeros((d,), dt),
+            "ff1": L.init_linear(rng, (d, cfg.ff_mult * d), dtype=dt),
+            "ff2": L.init_linear(rng, (cfg.ff_mult * d, d), dtype=dt),
+        })
+    d_in = (cfg.seq_len + 1) * d + cfg.n_profile
+    mlp = []
+    for h in cfg.mlp:
+        mlp.append({"w": L.init_linear(rng, (d_in, h), dtype=dt),
+                    "b": np.zeros((h,), dt)})
+        d_in = h
+    return {
+        "item_table": rng.normal(0, d ** -0.5,
+                                 (cfg.item_vocab, d)).astype(dt),
+        "pos_table": rng.normal(0, d ** -0.5,
+                                (cfg.seq_len + 1, d)).astype(dt),
+        "blocks": blocks,
+        "mlp": mlp,
+        "head": L.init_linear(rng, (d_in, 1), dtype=dt),
+    }
+
+
+def bst_logits(params: dict, cfg: BSTConfig, batch: dict) -> jnp.ndarray:
+    """batch: hist_items (B, T), target_item (B,), profile (B, P)."""
+    b, t = batch["hist_items"].shape
+    seq = jnp.concatenate(
+        [batch["hist_items"], batch["target_item"][:, None]], axis=1)
+    mask = seq >= 0
+    x = jnp.take(params["item_table"], jnp.clip(seq, 0), axis=0)
+    x = x + params["pos_table"][None, :, :]
+    for blk in params["blocks"]:
+        q = (x @ blk["wq"]).reshape(b, t + 1, cfg.n_heads, cfg.head_dim)
+        k = (x @ blk["wk"]).reshape(b, t + 1, cfg.n_heads, cfg.head_dim)
+        v = (x @ blk["wv"]).reshape(b, t + 1, cfg.n_heads, cfg.head_dim)
+        o = A.chunked_attention(q, k, v, causal=False,
+                                block_q=t + 1)
+        h = o.reshape(b, t + 1, -1) @ blk["wo"]
+        x = L.layer_norm(blk["ln1_w"], blk["ln1_b"], x + h)   # post-LN (paper)
+        f = jax.nn.relu(x @ blk["ff1"]) @ blk["ff2"]
+        x = L.layer_norm(blk["ln2_w"], blk["ln2_b"], x + f)
+    x = x * mask[:, :, None].astype(x.dtype)
+    flat = jnp.concatenate(
+        [x.reshape(b, -1), batch["profile"].astype(x.dtype)], axis=-1)
+    for lyr in params["mlp"]:
+        flat = jax.nn.leaky_relu(flat @ lyr["w"] + lyr["b"])
+    return (flat @ params["head"])[:, 0].astype(jnp.float32)
+
+
+def bst_loss(params, cfg: BSTConfig, batch) -> jnp.ndarray:
+    return bce(bst_logits(params, cfg, batch), batch["label"])

@@ -1,0 +1,79 @@
+"""Embedding tables + EmbeddingBag for the recsys architectures.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — per the arch
+brief this is built here from primitives and is a first-class part of the
+system: ``jnp.take`` gathers plus masked reduction for fixed-size bags,
+``jax.ops.segment_sum`` for ragged bags.  The Pallas ``embedding_bag``
+kernel is the TPU hot-path twin of ``bag_fixed`` (kernels/embedding_bag).
+
+Sharding: tables are column-sharded over the ``model`` axis when the dim
+divides (DESIGN.md §6) — lookups stay local; dim-indivisible tables (dien's
+18) replicate.  ``distrib.sharding`` assigns the specs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FieldSpec", "init_tables", "lookup", "bag_fixed", "bag_ragged"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldSpec:
+    name: str
+    vocab: int
+    dim: int
+    bag: int = 1          # >1: multi-hot field reduced by sum/mean
+    combiner: str = "sum"  # "sum" | "mean"
+
+
+def init_tables(fields: tuple[FieldSpec, ...], seed: int = 0,
+                dtype=np.float32) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    return {
+        f.name: (rng.normal(0, f.dim ** -0.5, (f.vocab, f.dim))
+                 .astype(dtype))
+        for f in fields
+    }
+
+
+def lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Plain single-id lookup: (B,) -> (B, D)."""
+    return jnp.take(table, jnp.clip(ids, 0), axis=0)
+
+
+def bag_fixed(table: jnp.ndarray, ids: jnp.ndarray,
+              combiner: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag over fixed-size bags.  ids: (B, L), -1 padded.
+
+    (B, L) gather + masked reduce -> (B, D).  This is the jnp oracle of
+    the Pallas kernel.
+    """
+    mask = (ids >= 0)
+    e = jnp.take(table, jnp.clip(ids, 0), axis=0)            # (B, L, D)
+    e = e * mask[..., None].astype(e.dtype)
+    s = jnp.sum(e, axis=1)
+    if combiner == "mean":
+        n = jnp.maximum(jnp.sum(mask, axis=1), 1).astype(e.dtype)
+        s = s / n[:, None]
+    return s
+
+
+def bag_ragged(table: jnp.ndarray, flat_ids: jnp.ndarray,
+               segment_ids: jnp.ndarray, n_bags: int,
+               combiner: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag over ragged bags via segment_sum.
+
+    flat_ids: (T,) all ids concatenated; segment_ids: (T,) bag of each id.
+    """
+    e = jnp.take(table, jnp.clip(flat_ids, 0), axis=0)
+    valid = (flat_ids >= 0)[:, None].astype(e.dtype)
+    s = jax.ops.segment_sum(e * valid, segment_ids, num_segments=n_bags)
+    if combiner == "mean":
+        n = jax.ops.segment_sum(valid[:, 0], segment_ids, num_segments=n_bags)
+        s = s / jnp.maximum(n, 1.0)[:, None]
+    return s

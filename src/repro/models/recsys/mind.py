@@ -1,0 +1,104 @@
+"""MIND (Li et al., 2019) — Multi-Interest Network with Dynamic Routing.
+
+Assigned config: embed_dim 64, n_interests 4, capsule routing iters 3.
+Behavior embeddings are routed into K interest capsules (B2I dynamic
+routing with a shared bilinear map and squash nonlinearity); training uses
+label-aware attention over the interests + sampled-softmax against
+in-batch negatives; serving scores a target item against the max-scoring
+interest.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+__all__ = ["MINDConfig", "init_mind", "mind_interests", "mind_loss",
+           "mind_score"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    seq_len: int = 50
+    item_vocab: int = 1_000_000
+    pow_p: float = 2.0            # label-aware attention sharpness
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_mind(cfg: MINDConfig, seed: int = 0, abstract: bool = False) -> dict:
+    rng = L.rng_or_abstract(seed, abstract)
+    dt = np.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    d = cfg.embed_dim
+    return {
+        "item_table": rng.normal(0, d ** -0.5, (cfg.item_vocab, d)).astype(dt),
+        "bilinear": L.init_linear(rng, (d, d), dtype=dt),
+        # fixed (per-user-random in paper; shared learnable here) routing init
+        "routing_init": rng.normal(0, 1.0, (cfg.seq_len, cfg.n_interests)
+                                   ).astype(dt),
+    }
+
+
+def _squash(v: jnp.ndarray) -> jnp.ndarray:
+    n2 = jnp.sum(v * v, axis=-1, keepdims=True)
+    return (n2 / (1.0 + n2)) * v / jnp.sqrt(n2 + 1e-9)
+
+
+def mind_interests(params: dict, cfg: MINDConfig,
+                   hist_items: jnp.ndarray) -> jnp.ndarray:
+    """hist_items: (B, T) -1-padded -> interest capsules (B, K, D)."""
+    mask = (hist_items >= 0)
+    e = jnp.take(params["item_table"], jnp.clip(hist_items, 0), axis=0)
+    u_hat = e @ params["bilinear"]                   # (B, T, D)
+    u_hat = u_hat * mask[..., None].astype(u_hat.dtype)
+    b_logit = jnp.broadcast_to(
+        params["routing_init"][None, :u_hat.shape[1], :],
+        (*hist_items.shape, cfg.n_interests))       # (B, T, K)
+    u_sg = jax.lax.stop_gradient(u_hat)              # routing uses sg (paper)
+    for it in range(cfg.capsule_iters):
+        w = jax.nn.softmax(
+            jnp.where(mask[..., None], b_logit.astype(jnp.float32), -1e30),
+            axis=-1)                                 # over K
+        src = u_hat if it == cfg.capsule_iters - 1 else u_sg
+        z = jnp.einsum("btk,btd->bkd", w.astype(src.dtype), src)
+        v = _squash(z)                               # (B, K, D)
+        if it < cfg.capsule_iters - 1:
+            b_logit = b_logit + jnp.einsum("btd,bkd->btk", u_sg, v)
+    return v
+
+
+def mind_score(params: dict, cfg: MINDConfig, interests: jnp.ndarray,
+               target_e: jnp.ndarray) -> jnp.ndarray:
+    """Serving score = max over interests of <v_k, e_target>."""
+    s = jnp.einsum("bkd,bd->bk", interests, target_e)
+    return jnp.max(s, axis=-1).astype(jnp.float32)
+
+
+def mind_loss(params: dict, cfg: MINDConfig, batch: dict) -> jnp.ndarray:
+    """Label-aware attention + in-batch sampled softmax.
+
+    batch: hist_items (B, T), target_item (B,).
+    """
+    v = mind_interests(params, cfg, batch["hist_items"])     # (B, K, D)
+    et = jnp.take(params["item_table"], jnp.clip(batch["target_item"], 0),
+                  axis=0)                                    # (B, D)
+    att = jax.nn.softmax(
+        (jnp.einsum("bkd,bd->bk", v, et).astype(jnp.float32)) ** 1
+        * cfg.pow_p, axis=-1)
+    user = jnp.einsum("bk,bkd->bd", att.astype(v.dtype), v)  # (B, D)
+    # in-batch sampled softmax: logits over the batch's targets
+    logits = (user @ et.T).astype(jnp.float32)               # (B, B)
+    labels = jnp.arange(logits.shape[0])
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], axis=1))

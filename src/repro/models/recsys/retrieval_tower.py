@@ -1,0 +1,87 @@
+"""Two-tower retrieval + bulk candidate scoring (retrieval_cand shape).
+
+Stage-1 of the recsys funnel: a user tower embeds the request, and one
+query is scored against n_candidates (1M) item embeddings as a single
+batched matvec + top-k — the TPU-native form of candidate generation (no
+per-candidate loop).  This is where the paper's technique plugs into the
+recsys archs: the LR cascade predicts the per-query k before ranking
+(serving/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+__all__ = ["TowerConfig", "init_tower", "user_embed", "score_candidates",
+           "retrieve_topk", "tower_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TowerConfig:
+    d_user_in: int = 64
+    embed_dim: int = 64
+    hidden: tuple[int, ...] = (256, 128)
+    n_candidates: int = 1_000_000
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_tower(cfg: TowerConfig, seed: int = 0, abstract: bool = False) -> dict:
+    rng = L.rng_or_abstract(seed, abstract)
+    dt = np.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    d_in = cfg.d_user_in
+    mlp = []
+    for h in (*cfg.hidden, cfg.embed_dim):
+        mlp.append({"w": L.init_linear(rng, (d_in, h), dtype=dt),
+                    "b": np.zeros((h,), dt)})
+        d_in = h
+    return {
+        "mlp": mlp,
+        "items": rng.normal(0, cfg.embed_dim ** -0.5,
+                            (cfg.n_candidates, cfg.embed_dim)).astype(dt),
+    }
+
+
+def user_embed(params: dict, cfg: TowerConfig,
+               user_feats: jnp.ndarray) -> jnp.ndarray:
+    x = user_feats.astype(cfg.jdtype)
+    for i, lyr in enumerate(params["mlp"]):
+        x = x @ lyr["w"] + lyr["b"]
+        if i + 1 < len(params["mlp"]):
+            x = jax.nn.relu(x)
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-6)
+
+
+def score_candidates(params: dict, cfg: TowerConfig,
+                     user_feats: jnp.ndarray) -> jnp.ndarray:
+    """(B, d_user_in) -> (B, n_candidates) dot-product scores."""
+    u = user_embed(params, cfg, user_feats)
+    return (u @ params["items"].T).astype(jnp.float32)
+
+
+def retrieve_topk(params: dict, cfg: TowerConfig, user_feats: jnp.ndarray,
+                  k: int):
+    """Candidate generation: top-k item ids + scores per query."""
+    scores = score_candidates(params, cfg, user_feats)
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32), vals
+
+
+def tower_loss(params: dict, cfg: TowerConfig, batch: dict) -> jnp.ndarray:
+    """In-batch softmax over positive items.  batch: user_feats (B, d),
+    pos_item (B,) ids into the candidate table."""
+    u = user_embed(params, cfg, batch["user_feats"])
+    pos = jnp.take(params["items"], jnp.clip(batch["pos_item"], 0), axis=0)
+    logits = (u @ pos.T).astype(jnp.float32)
+    labels = jnp.arange(logits.shape[0])
+    ll = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(ll, labels[:, None], axis=1))

@@ -1,0 +1,98 @@
+"""Wide & Deep (Cheng et al., 2016) — assigned config: 40 sparse fields,
+embed_dim 32, deep MLP 1024-512-256, concat interaction.
+
+Wide part: per-field dim-1 embeddings (equivalent to the sparse linear
+term over one-hots) + hashed cross-feature ids supplied by the pipeline.
+Deep part: concat(field embeddings, dense features) -> MLP -> logit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.recsys import embedding as E
+
+__all__ = ["WideDeepConfig", "init_wide_deep", "wide_deep_logits",
+           "wide_deep_loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class WideDeepConfig:
+    n_sparse: int = 40
+    n_dense: int = 13
+    n_cross: int = 8                  # hashed cross-product wide features
+    embed_dim: int = 32
+    vocab_per_field: int = 1_000_000
+    cross_vocab: int = 100_000
+    mlp: tuple[int, ...] = (1024, 512, 256)
+    dtype: str = "float32"
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def init_wide_deep(cfg: WideDeepConfig, seed: int = 0,
+                   abstract: bool = False) -> dict:
+    rng = L.rng_or_abstract(seed, abstract)
+    dt = np.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    # one stacked table for the (equal-vocab) sparse fields: (F, V, D)
+    deep_table = rng.normal(
+        0, cfg.embed_dim ** -0.5,
+        (cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim)).astype(dt)
+    wide_table = np.zeros((cfg.n_sparse, cfg.vocab_per_field), dt)
+    cross_table = np.zeros((cfg.n_cross, cfg.cross_vocab), dt)
+    d_in = cfg.n_sparse * cfg.embed_dim + cfg.n_dense
+    mlp = []
+    for h in cfg.mlp:
+        mlp.append({"w": L.init_linear(rng, (d_in, h), dtype=dt),
+                    "b": np.zeros((h,), dt)})
+        d_in = h
+    return {
+        "deep_table": deep_table,
+        "wide_table": wide_table,
+        "cross_table": cross_table,
+        "mlp": mlp,
+        "head": L.init_linear(rng, (d_in, 1), dtype=dt),
+        "wide_dense": L.init_linear(rng, (cfg.n_dense, 1), dtype=dt),
+        "bias": np.zeros((1,), dt),
+    }
+
+
+def _mlp(layers: list[dict], x: jnp.ndarray) -> jnp.ndarray:
+    for lyr in layers:
+        x = jax.nn.relu(x @ lyr["w"] + lyr["b"])
+    return x
+
+
+def wide_deep_logits(params: dict, cfg: WideDeepConfig,
+                     batch: dict) -> jnp.ndarray:
+    """batch: sparse_ids (B, F), cross_ids (B, Fx), dense (B, n_dense)."""
+    ids = jnp.clip(batch["sparse_ids"], 0)                   # (B, F)
+    f_ar = jnp.arange(cfg.n_sparse)
+    emb = params["deep_table"][f_ar[None, :], ids]           # (B, F, D)
+    b = ids.shape[0]
+    deep_in = jnp.concatenate(
+        [emb.reshape(b, -1), batch["dense"].astype(emb.dtype)], axis=-1)
+    deep = _mlp(params["mlp"], deep_in) @ params["head"]
+    wide = params["wide_table"][f_ar[None, :], ids].sum(-1, keepdims=True)
+    cx = jnp.clip(batch["cross_ids"], 0)
+    wide = wide + params["cross_table"][
+        jnp.arange(cfg.n_cross)[None, :], cx].sum(-1, keepdims=True)
+    wide = wide + batch["dense"].astype(emb.dtype) @ params["wide_dense"]
+    return (deep + wide + params["bias"])[:, 0].astype(jnp.float32)
+
+
+def bce(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = logits
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def wide_deep_loss(params, cfg: WideDeepConfig, batch) -> jnp.ndarray:
+    return bce(wide_deep_logits(params, cfg, batch), batch["label"])

@@ -1,0 +1,524 @@
+"""Decoder-only transformer LM family: all five assigned LM architectures.
+
+One configurable implementation covering:
+
+  * GQA attention with optional QKV bias (qwen2) and qk-norm (qwen3),
+  * head_dim decoupled from d_model (qwen3: 128 * 32 heads != 2560),
+  * sliding-window attention (mixtral) incl. ring-buffer decode caches,
+  * MLA — DeepSeek multi-head latent attention with compressed KV cache
+    and the absorbed-matmul decode path,
+  * dense SwiGLU or MoE FFN (mixtral 8e top-2; deepseek 256e top-8 +
+    1 shared expert + 3 leading dense layers),
+  * multi-token prediction (deepseek MTP) as an optional extra loss head,
+  * layer stacking via jax.lax.scan with rematerialization, so the 61-layer
+    deepseek graph stays compact for SPMD compilation.
+
+Functional style: ``init_params`` -> pytree; ``train_loss``, ``prefill``,
+``decode_step`` are pure functions of (params, batch).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distrib.hints import hint
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+
+__all__ = ["MLAConfig", "LMConfig", "init_params", "train_loss", "prefill",
+           "decode_step", "init_cache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    attn_type: str = "gqa"            # "gqa" | "mla"
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    window: Optional[int] = None      # sliding-window attention width
+    rope_theta: float = 10_000.0
+    moe: Optional[M.MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    mtp: bool = False                 # deepseek multi-token prediction
+    mtp_weight: float = 0.3
+    dtype: str = "bfloat16"
+    remat: str = "full"               # "none" | "full"
+    block_q: int = 512
+    loss_block: int = 512
+    unroll: bool = False              # dry-run mode: unroll all scans so
+                                      # cost_analysis counts every layer
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def qk_dim(self) -> int:
+        if self.attn_type == "mla":
+            return self.mla.qk_nope_dim + self.mla.qk_rope_dim
+        return self.head_dim
+
+    def param_count(self) -> int:
+        """Exact parameter count (used by the roofline's 6ND model)."""
+        counts = jax.tree.reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda x: int(np.prod(x.shape)),
+                         init_params(self, abstract=True)))
+        return counts
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k + shared only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        n_moe_layers = self.n_layers - self.moe.first_dense_layers
+        per_expert = 3 * self.d_model * self.moe.d_ff_expert
+        inactive = n_moe_layers * per_expert * (e - k)
+        return total - inactive
+
+
+# ---------------------------------------------------------------- params --
+
+def _attn_params(rng, cfg: LMConfig, n: int, dt) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        p = {
+            "wdq": L.init_linear(rng, (n, d, m.q_lora_rank), dtype=dt),
+            "q_norm": L.init_norm((n, m.q_lora_rank), dt),
+            "wuq": L.init_linear(
+                rng, (n, m.q_lora_rank, hq * (m.qk_nope_dim + m.qk_rope_dim)),
+                dtype=dt),
+            "wdkv": L.init_linear(
+                rng, (n, d, m.kv_lora_rank + m.qk_rope_dim), dtype=dt),
+            "kv_norm": L.init_norm((n, m.kv_lora_rank), dt),
+            "wuk": L.init_linear(rng, (n, m.kv_lora_rank, hq * m.qk_nope_dim),
+                                 dtype=dt),
+            "wuv": L.init_linear(rng, (n, m.kv_lora_rank, hq * m.v_dim),
+                                 dtype=dt),
+            "wo": L.init_linear(rng, (n, hq * m.v_dim, d), dtype=dt),
+        }
+        return p
+    p = {
+        "wq": L.init_linear(rng, (n, d, hq * hd), dtype=dt),
+        "wk": L.init_linear(rng, (n, d, hkv * hd), dtype=dt),
+        "wv": L.init_linear(rng, (n, d, hkv * hd), dtype=dt),
+        "wo": L.init_linear(rng, (n, hq * hd, d), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = np.zeros((n, hq * hd), dt)
+        p["bk"] = np.zeros((n, hkv * hd), dt)
+        p["bv"] = np.zeros((n, hkv * hd), dt)
+    if cfg.qk_norm:
+        p["qn"] = L.init_norm((n, hd), dt)
+        p["kn"] = L.init_norm((n, hd), dt)
+    return p
+
+
+def _dense_ffn_params(rng, cfg: LMConfig, n: int, dt) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": L.init_linear(rng, (n, d, f), dtype=dt),
+        "w_up": L.init_linear(rng, (n, d, f), dtype=dt),
+        "w_down": L.init_linear(rng, (n, f, d), dtype=dt),
+    }
+
+
+def init_params(cfg: LMConfig, seed: int = 0, abstract: bool = False) -> dict:
+    rng = L.rng_or_abstract(seed, abstract)
+    dt = np.dtype(cfg.dtype) if cfg.dtype != "bfloat16" else jnp.bfloat16
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    params = {
+        "embed": L.init_linear(rng, (cfg.vocab, cfg.d_model), scale=0.02,
+                               dtype=dt),
+        "final_norm": L.init_norm((cfg.d_model,), dt),
+        "lm_head": L.init_linear(rng, (cfg.d_model, cfg.vocab), dtype=dt),
+    }
+    if n_dense:
+        params["dense"] = {
+            "ln1": L.init_norm((n_dense, cfg.d_model), dt),
+            "ln2": L.init_norm((n_dense, cfg.d_model), dt),
+            "attn": _attn_params(rng, cfg, n_dense, dt),
+            "ffn": _dense_ffn_params(rng, cfg, n_dense, dt),
+        }
+    if n_moe:
+        params["moe"] = {
+            "ln1": L.init_norm((n_moe, cfg.d_model), dt),
+            "ln2": L.init_norm((n_moe, cfg.d_model), dt),
+            "attn": _attn_params(rng, cfg, n_moe, dt),
+            "ffn": M.init_moe_params(rng, cfg.moe, cfg.d_model, n_moe, dt),
+        }
+    if cfg.mtp:
+        params["mtp"] = {
+            "ln1": L.init_norm((1, cfg.d_model), dt),
+            "ln2": L.init_norm((1, cfg.d_model), dt),
+            "attn": _attn_params(rng, cfg, 1, dt),
+            "ffn": _dense_ffn_params(rng, cfg, 1, dt),
+            "proj": L.init_linear(rng, (1, 2 * cfg.d_model, cfg.d_model),
+                                  dtype=dt),
+        }
+    return params
+
+
+# --------------------------------------------------------------- forward --
+
+def _project_qkv(lp: dict, cfg: LMConfig, x: jnp.ndarray, positions):
+    """Full-sequence q/k/v projection (train + prefill).  x: (B, S, D)."""
+    b, s, d = x.shape
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        cq = L.rms_norm(lp["q_norm"], x @ lp["wdq"])
+        q = (cq @ lp["wuq"]).reshape(b, s, cfg.n_heads,
+                                     m.qk_nope_dim + m.qk_rope_dim)
+        q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+        q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+        dkv = x @ lp["wdkv"]
+        c_kv = L.rms_norm(lp["kv_norm"], dkv[..., :m.kv_lora_rank])
+        k_rope = L.rope(dkv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)                       # (B,S,1,rope)
+        k_nope = (c_kv @ lp["wuk"]).reshape(b, s, cfg.n_heads, m.qk_nope_dim)
+        v = (c_kv @ lp["wuv"]).reshape(b, s, cfg.n_heads, m.v_dim)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (b, s, cfg.n_heads, m.qk_rope_dim))],
+            axis=-1)
+        return q, k, v, (c_kv, k_rope[:, :, 0])  # cache the *rotated* rope key
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ lp["wq"] + (lp["bq"] if cfg.qkv_bias else 0)).reshape(b, s, hq, hd)
+    k = (x @ lp["wk"] + (lp["bk"] if cfg.qkv_bias else 0)).reshape(b, s, hkv, hd)
+    v = (x @ lp["wv"] + (lp["bv"] if cfg.qkv_bias else 0)).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = L.rms_norm(lp["qn"], q)
+        k = L.rms_norm(lp["kn"], k)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    return q, k, v, None
+
+
+def _attn_block(lp: dict, cfg: LMConfig, x: jnp.ndarray, positions):
+    q, k, v, _ = _project_qkv(lp, cfg, x, positions)
+    o = A.chunked_attention(q, k, v, causal=True, window=cfg.window,
+                            block_q=cfg.block_q, unroll=cfg.unroll)
+    b, s = x.shape[:2]
+    return o.reshape(b, s, -1) @ lp["wo"]
+
+
+def _layer_body(cfg: LMConfig, moe_cfg, lp: dict, x: jnp.ndarray, positions):
+    h = x + _attn_block(lp["attn"], cfg, L.rms_norm(lp["ln1"], x), positions)
+    hn = L.rms_norm(lp["ln2"], h)
+    if moe_cfg is None:
+        f = lp["ffn"]
+
+        def ffn(fp, z):
+            return L.swiglu(fp["w_gate"], fp["w_up"], fp["w_down"], z)
+
+        if cfg.remat == "ffn":
+            # selective remat (§Perf iter T2): the (B,S,F) gate/up
+            # intermediates dominate saved residuals; recompute only them
+            ffn = jax.checkpoint(ffn)
+        y = ffn(f, hn)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        b, s, d = hn.shape
+
+        def moe(fp, z):
+            return M.moe_ffn(fp, z, moe_cfg)
+
+        if cfg.remat == "ffn":
+            moe = jax.checkpoint(moe)
+        y, aux = moe(lp["ffn"], hn.reshape(b * s, d))
+        y = y.reshape(b, s, d)
+    return h + y, aux
+
+
+def _scan_layers(cfg: LMConfig, stacked: dict, x: jnp.ndarray, positions,
+                 moe_cfg) -> tuple[jnp.ndarray, jnp.ndarray]:
+    body = functools.partial(_layer_body, cfg, moe_cfg)
+    if cfg.remat == "full":
+        body = jax.checkpoint(body)
+
+    if cfg.unroll:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            x, a = body(lp, x, positions)
+            aux = aux + a
+        return x, aux
+
+    def step(carry, lp):
+        y, aux = body(lp, carry, positions)
+        return y, aux
+
+    x, auxes = jax.lax.scan(step, x, stacked)
+    return x, jnp.sum(auxes)
+
+
+def backbone(params: dict, cfg: LMConfig, tokens: jnp.ndarray,
+             positions: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) -> final hidden (B, S, D), aux loss."""
+    x = hint(params["embed"][tokens].astype(cfg.jdtype), "lm_activations")
+    aux = jnp.zeros((), jnp.float32)
+    if "dense" in params:
+        x, a = _scan_layers(cfg, params["dense"], x, positions, None)
+        aux += a
+    if "moe" in params:
+        x, a = _scan_layers(cfg, params["moe"], x, positions, cfg.moe)
+        aux += a
+    return L.rms_norm(params["final_norm"], x), aux
+
+
+def train_loss(params: dict, cfg: LMConfig, tokens: jnp.ndarray,
+               targets: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    h, aux = backbone(params, cfg, tokens, positions)
+    loss = L.chunked_softmax_xent(
+        h.reshape(b * s, -1), params["lm_head"], targets.reshape(-1),
+        mask.reshape(-1).astype(jnp.float32), block=cfg.loss_block,
+        unroll=cfg.unroll)
+    if cfg.mtp:
+        # MTP: one extra block over (h_t, embed(token_{t+1})) predicts t+2.
+        mp = jax.tree.map(lambda a: a[0], params["mtp"])
+        nxt = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+        e2 = params["embed"][nxt].astype(cfg.jdtype)
+        hm = jnp.concatenate([h, e2], axis=-1) @ mp["proj"]
+        hm, _ = _layer_body(cfg, None, mp, hm, positions)
+        t2 = jnp.concatenate([targets[:, 1:], targets[:, -1:]], axis=1)
+        m2 = jnp.concatenate(
+            [mask[:, 1:], jnp.zeros_like(mask[:, -1:])], axis=1)
+        mtp_loss = L.chunked_softmax_xent(
+            hm.reshape(b * s, -1), params["lm_head"], t2.reshape(-1),
+            m2.reshape(-1).astype(jnp.float32), block=cfg.loss_block,
+            unroll=cfg.unroll)
+        loss = loss + cfg.mtp_weight * mtp_loss
+    return loss + aux
+
+
+# ---------------------------------------------------------------- decode --
+
+def cache_len(cfg: LMConfig, seq_len: int) -> int:
+    """SWA archs only need a window-sized ring buffer."""
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def init_cache(cfg: LMConfig, batch: int, seq_len: int) -> dict:
+    s = cache_len(cfg, seq_len)
+    dt = cfg.jdtype
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        per_layer = lambda n: {
+            "c_kv": jnp.zeros((n, batch, s, m.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((n, batch, s, m.qk_rope_dim), dt),
+        }
+    else:
+        per_layer = lambda n: {
+            "k": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((n, batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    cache = {}
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    if n_dense:
+        cache["dense"] = per_layer(n_dense)
+    if n_moe:
+        cache["moe"] = per_layer(n_moe)
+    return cache
+
+
+def _decode_attn_gqa(lp, cfg: LMConfig, x, cache, pos):
+    """x: (B, 1, D); cache k/v: (B, S, KV, hd); pos: (B,) current index."""
+    b = x.shape[0]
+    s = cache["k"].shape[1]
+    q, k_new, v_new, _ = _project_qkv(lp, cfg, x, pos[:, None])
+    slot = (pos % s).astype(jnp.int32)
+    k = jax.vmap(lambda c, kn, sl: c.at[sl].set(kn[0]))(cache["k"], k_new, slot)
+    v = jax.vmap(lambda c, vn, sl: c.at[sl].set(vn[0]))(cache["v"], v_new, slot)
+    stored = _slot_positions(s, slot, pos)
+    ages = pos[:, None] - stored
+    valid = (stored >= 0) & (ages < (cfg.window or 10**9))
+    o = A.decode_attention(q, k, v, valid)
+    return o.reshape(b, 1, -1) @ lp["wo"], {"k": k, "v": v}
+
+
+def _slot_positions(s: int, slot: jnp.ndarray, pos: jnp.ndarray):
+    """Absolute position stored in each ring slot after the write at
+    ``pos`` (slot i holds the largest position <= pos with pos' % s == i)."""
+    i = jnp.arange(s)[None, :]
+    p = pos[:, None]
+    delta = (p % s - i) % s
+    return p - delta
+
+
+def _decode_attn_mla(lp, cfg: LMConfig, x, cache, pos):
+    """Absorbed-matmul MLA decode: attention in the compressed latent."""
+    m = cfg.mla
+    b = x.shape[0]
+    s = cache["c_kv"].shape[1]
+    cq = L.rms_norm(lp["q_norm"], x @ lp["wdq"])
+    q = (cq @ lp["wuq"]).reshape(b, 1, cfg.n_heads,
+                                 m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = L.rope(q_rope, pos[:, None], cfg.rope_theta)
+    dkv = x @ lp["wdkv"]
+    c_new = L.rms_norm(lp["kv_norm"], dkv[..., :m.kv_lora_rank])
+    kr_new = L.rope(dkv[..., None, m.kv_lora_rank:], pos[:, None],
+                    cfg.rope_theta)[:, :, 0]
+    slot = (pos % s).astype(jnp.int32)
+    c_kv = jax.vmap(lambda c, n, sl: c.at[sl].set(n[0]))(cache["c_kv"], c_new, slot)
+    k_rope = jax.vmap(lambda c, n, sl: c.at[sl].set(n[0]))(cache["k_rope"],
+                                                           kr_new, slot)
+    # absorb wuk into q: (B,1,H,nope) x (lora,H*nope) -> (B,H,lora)
+    wuk = lp["wuk"].reshape(m.kv_lora_rank, cfg.n_heads, m.qk_nope_dim)
+    q_lat = jnp.einsum("bqhn,lhn->bhl", q_nope, wuk)
+    scores = (jnp.einsum("bhl,bsl->bhs", q_lat, c_kv)
+              + jnp.einsum("bqhr,bsr->bhs", q_rope, k_rope))
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+    stored = _slot_positions(s, slot, pos)
+    valid = (stored >= 0) & (stored <= pos[:, None])
+    scores = jnp.where(valid[:, None, :], scores.astype(jnp.float32) * scale,
+                       A.NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(c_kv.dtype)
+    o_lat = jnp.einsum("bhs,bsl->bhl", p, c_kv)
+    wuv = lp["wuv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_dim)
+    o = jnp.einsum("bhl,lhv->bhv", o_lat, wuv).reshape(b, 1, -1)
+    return o @ lp["wo"], {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def _decode_layers(cfg: LMConfig, stacked: dict, cache: dict, x, pos, moe_cfg):
+    decode_attn = _decode_attn_mla if cfg.attn_type == "mla" else _decode_attn_gqa
+
+    def step(carry, layer):
+        lp, lc = layer
+        h = carry
+        a, new_c = decode_attn(lp["attn"], cfg, L.rms_norm(lp["ln1"], h),
+                               lc, pos)
+        h = h + a
+        hn = L.rms_norm(lp["ln2"], h)
+        if moe_cfg is None:
+            f = lp["ffn"]
+            y = L.swiglu(f["w_gate"], f["w_up"], f["w_down"], hn)
+        else:
+            b = hn.shape[0]
+            y, _ = M.moe_ffn(lp["ffn"], hn.reshape(b, -1), moe_cfg)
+            y = y.reshape(b, 1, -1)
+        return h + y, new_c
+
+    if cfg.unroll:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        outs = []
+        for i in range(n):
+            lp = jax.tree.map(lambda a: a[i], stacked)
+            lc = jax.tree.map(lambda a: a[i], cache)
+            x, nc = step(x, (lp, lc))
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(step, x, (stacked, cache))
+    return x, new_cache
+
+
+def decode_step(params: dict, cfg: LMConfig, cache: dict,
+                token: jnp.ndarray, pos: jnp.ndarray):
+    """One decode step.  token: (B,) int32; pos: (B,) positions.
+
+    Returns (next_token (B,), logits (B, V), new_cache).
+    """
+    x = params["embed"][token][:, None, :].astype(cfg.jdtype)
+    new_cache = {}
+    if "dense" in params:
+        x, new_cache["dense"] = _decode_layers(
+            cfg, params["dense"], cache["dense"], x, pos, None)
+    if "moe" in params:
+        x, new_cache["moe"] = _decode_layers(
+            cfg, params["moe"], cache["moe"], x, pos, cfg.moe)
+    h = L.rms_norm(params["final_norm"], x)[:, 0]
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32), logits, new_cache
+
+
+def prefill(params: dict, cfg: LMConfig, tokens: jnp.ndarray):
+    """Prefill: run the backbone over a prompt, build the KV cache, and
+    return logits of the last position.  tokens: (B, S)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = params["embed"][tokens].astype(cfg.jdtype)
+    clen = cache_len(cfg, s)
+    cache = {}
+
+    def run(stacked, x, moe_cfg):
+        decode_caches = []
+
+        def body(lp, x):
+            xin = L.rms_norm(lp["ln1"], x)
+            q, k, v, lat = _project_qkv(lp["attn"], cfg, xin, positions)
+            o = A.chunked_attention(q, k, v, causal=True, window=cfg.window,
+                                    block_q=cfg.block_q, unroll=cfg.unroll)
+            h = x + o.reshape(b, s, -1) @ lp["attn"]["wo"]
+            hn = L.rms_norm(lp["ln2"], h)
+            if moe_cfg is None:
+                f = lp["ffn"]
+                y = L.swiglu(f["w_gate"], f["w_up"], f["w_down"], hn)
+            else:
+                y, _ = M.moe_ffn(lp["ffn"], hn.reshape(b * s, -1), moe_cfg)
+                y = y.reshape(b, s, -1)
+            if cfg.attn_type == "mla":
+                c_kv, k_rope = lat
+                cache_kv = {"c_kv": c_kv[:, -clen:], "k_rope": k_rope[:, -clen:]}
+            else:
+                cache_kv = {"k": k[:, -clen:], "v": v[:, -clen:]}
+            return h + y, cache_kv
+
+        if cfg.remat == "full":
+            body = jax.checkpoint(body)
+
+        if cfg.unroll:
+            n = jax.tree.leaves(stacked)[0].shape[0]
+            outs = []
+            for i in range(n):
+                lp = jax.tree.map(lambda a: a[i], stacked)
+                x, ck = body(lp, x)
+                outs.append(ck)
+            caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+            return x, caches
+
+        def step(carry, lp):
+            y, ck = body(lp, carry)
+            return y, ck
+
+        x, caches = jax.lax.scan(step, x, stacked)
+        return x, caches
+
+    if "dense" in params:
+        x, cache["dense"] = run(params["dense"], x, None)
+    if "moe" in params:
+        x, cache["moe"] = run(params["moe"], x, cfg.moe)
+    h = L.rms_norm(params["final_norm"], x)[:, -1]
+    logits = (h @ params["lm_head"]).astype(jnp.float32)
+    return logits, cache

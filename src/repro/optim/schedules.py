@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["warmup_cosine", "constant", "warmup_linear_decay"]
+
+
+def warmup_cosine(step, *, warmup: int = 200, total: int = 10_000,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos
+
+
+def warmup_linear_decay(step, *, warmup: int = 200, total: int = 10_000,
+                        floor: float = 0.0):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return warm * (1.0 - (1.0 - floor) * prog)
+
+
+def constant(step, **_):
+    return 1.0

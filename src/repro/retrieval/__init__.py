@@ -1,0 +1,3 @@
+"""Candidate-generation substrate: corpus, index, scoring, JASS, top-k."""
+
+from repro.retrieval import corpus, gold, index, jass, scoring, topk  # noqa: F401

@@ -1,0 +1,113 @@
+"""Gold-standard runs — the training signal that replaces relevance judgments.
+
+Two gold standards, exactly as in the paper (Section 4):
+
+  * for tuning k: a *second-stage ranker* run over a deep candidate pool
+    (the paper uses the uogTRMQdph40 TREC run; offline we use a seeded
+    multi-signal reranker that is deliberately different from the stage-1
+    BM25 impact scorer — see ``second_stage_scores``).  The candidate run
+    at cutoff k is the same reranker restricted to the stage-1 top-k pool,
+    so MED(A, B_k) measures exactly "what did the smaller pool cost the
+    second stage".
+  * for tuning rho: exhaustive score-at-a-time evaluation (the exact
+    ranking); the candidate run is the anytime ranking at rho.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.retrieval import jass
+
+__all__ = [
+    "second_stage_scores",
+    "rerank_pool",
+    "gold_run_k",
+    "candidate_run_k",
+    "gold_run_rho",
+    "candidate_run_rho",
+]
+
+
+def _hash_noise(doc_ids: jnp.ndarray, qid: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Deterministic per-(query, doc) pseudo-feature in [0, 1) — stands in
+    for the second stage's non-lexical ML features (links, clicks, ...)."""
+    h = (doc_ids.astype(jnp.uint32) * jnp.uint32(2654435761)
+         ^ (qid.astype(jnp.uint32) * jnp.uint32(40503))
+         ^ jnp.uint32(seed))
+    h = (h ^ (h >> 15)) * jnp.uint32(2246822519)
+    h = h ^ (h >> 13)
+    return (h & jnp.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
+
+
+def second_stage_scores(acc_bm25: jnp.ndarray, acc_lm: jnp.ndarray,
+                        acc_tfidf: jnp.ndarray, doc_len: jnp.ndarray,
+                        qids: jnp.ndarray, *, seed: int = 11,
+                        noise_weight: float = 0.35) -> jnp.ndarray:
+    """Dense second-stage scores for all docs of a query batch.
+
+    acc_*: (Q, n_docs) per-scorer stage-1 accumulators; doc_len: (n_docs,).
+    The mixture + interaction noise makes the induced ranking correlated
+    with — but distinct from — any single stage-1 scorer, mirroring the
+    gold run's relationship to the BM25 candidate run in the paper.
+    """
+    n_docs = acc_bm25.shape[-1]
+
+    def norm(x):
+        lo = jnp.min(x, axis=-1, keepdims=True)
+        hi = jnp.max(x, axis=-1, keepdims=True)
+        return (x - lo) / jnp.maximum(hi - lo, 1e-9)
+
+    prior = 1.0 / jnp.log(2.0 + doc_len.astype(jnp.float32))
+    noise = jax.vmap(
+        lambda q: _hash_noise(jnp.arange(n_docs), q, seed)
+    )(qids)
+    return (0.45 * norm(acc_bm25) + 0.25 * norm(acc_lm)
+            + 0.15 * norm(acc_tfidf) + 0.05 * prior[None, :]
+            + noise_weight * noise)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def rerank_pool(stage2: jnp.ndarray, pool: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Rank the docs of ``pool`` (Q, P; -1 padded) by second-stage score.
+
+    Returns (Q, depth) doc ids.  Only pool members are eligible — this is
+    the restriction semantics used for labeling k.
+    """
+
+    def one(scores, p):
+        valid = p >= 0
+        s = jnp.where(valid, scores[jnp.clip(p, 0)], -jnp.inf)
+        order = jnp.lexsort((p, -s))
+        top = order[:depth]
+        return jnp.where(s[top] > -jnp.inf, p[top], -1).astype(jnp.int32)
+
+    return jax.vmap(one)(stage2, pool)
+
+
+def gold_run_k(stage2, deep_pool, depth: int) -> jnp.ndarray:
+    """A = second stage over the deep pool (paper: depth-10k BM25 pool)."""
+    return rerank_pool(stage2, deep_pool, depth)
+
+
+def candidate_run_k(stage2, deep_pool, k: int, depth: int) -> jnp.ndarray:
+    """B_k = second stage over the stage-1 top-k prefix of the pool."""
+    prefix = jnp.where(
+        jnp.arange(deep_pool.shape[-1])[None, :] < k, deep_pool, -1
+    )
+    return rerank_pool(stage2, prefix, depth)
+
+
+def gold_run_rho(doc_stream, impact_stream, n_docs: int, depth: int):
+    """Exhaustive score-at-a-time ranking (the exact stage-1 ranking)."""
+    return jass.saat_rank(doc_stream, impact_stream, n_docs,
+                          doc_stream.shape[-1], depth)
+
+
+def candidate_run_rho(doc_stream, impact_stream, n_docs: int, rho: int,
+                      depth: int):
+    """Anytime ranking after processing only the first rho postings."""
+    return jass.saat_rank(doc_stream, impact_stream, n_docs, rho, depth)

@@ -1,0 +1,162 @@
+"""Inverted index build: postings, per-term score statistics, impacts.
+
+This is the indexer of the candidate-generation stage.  It produces:
+
+  * term-major CSR postings (offsets / doc ids / term frequencies),
+  * per-posting similarity scores under the paper's three scorers,
+  * the per-term score statistics of Table 1 (max, quartiles, min, means,
+    median, variance, IQR) for each scorer — precomputed at index time and
+    "stored with the postings list" exactly as the paper prescribes,
+  * 8-bit quantized impact scores and an impact-descending posting order
+    (the JASS impact-ordered layout used by score-at-a-time evaluation).
+
+The build is host-side numpy (this is the offline indexer); query-time
+consumers gather from the arrays with jnp.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.retrieval import scoring
+from repro.retrieval.corpus import Corpus
+
+__all__ = ["InvertedIndex", "TermStats", "build_index", "STAT_NAMES"]
+
+#: order of the 9 per-term score statistics (Table 1, items 3-11)
+STAT_NAMES = ("max", "q1", "q3", "min", "amean", "hmean", "median", "var", "iqr")
+
+
+@dataclass
+class TermStats:
+    """Per-term statistics, precomputed at index time.
+
+    stats: (vocab, n_scorers, 9) float32 in STAT_NAMES order.
+    ctf:   (vocab,) collection term frequency C_t.
+    df:    (vocab,) document frequency f_t.
+    """
+
+    stats: np.ndarray
+    ctf: np.ndarray
+    df: np.ndarray
+
+
+@dataclass
+class InvertedIndex:
+    corpus: Corpus
+    collection: scoring.CollectionStats
+    offsets: np.ndarray       # (vocab+1,) int64 CSR offsets, impact-ordered
+    postings_doc: np.ndarray  # (nnz,) int32 doc ids, impact-desc within term
+    postings_tf: np.ndarray   # (nnz,) int32
+    postings_score: np.ndarray   # (nnz, n_scorers) float32 (bm25, lm, tfidf)
+    postings_impact: np.ndarray  # (nnz,) uint8 quantized bm25 impact
+    impact_scale: tuple[float, float]  # (lo, hi) of the quantizer
+    term_stats: TermStats
+
+    @property
+    def vocab(self) -> int:
+        return self.offsets.shape[0] - 1
+
+    @property
+    def nnz(self) -> int:
+        return self.postings_doc.shape[0]
+
+    def postings_of(self, term: int) -> slice:
+        return slice(int(self.offsets[term]), int(self.offsets[term + 1]))
+
+
+def _segment_quantiles(sorted_vals: np.ndarray, offsets: np.ndarray,
+                       q: float) -> np.ndarray:
+    """Per-segment quantile over values sorted ascending within segments."""
+    lens = np.diff(offsets)
+    idx = offsets[:-1] + np.floor(q * np.maximum(lens - 1, 0)).astype(np.int64)
+    idx = np.minimum(idx, np.maximum(offsets[1:] - 1, 0))
+    out = sorted_vals[np.minimum(idx, len(sorted_vals) - 1)] if len(sorted_vals) else np.zeros_like(lens, dtype=np.float32)
+    return np.where(lens > 0, out, 0.0).astype(np.float32)
+
+
+def _term_statistics(scores: np.ndarray, term_of: np.ndarray,
+                     vocab: int) -> np.ndarray:
+    """9 stats per term for one scorer's posting scores. O(nnz log nnz)."""
+    order = np.lexsort((scores, term_of))
+    s = scores[order].astype(np.float64)
+    t = term_of[order]
+    counts = np.bincount(t, minlength=vocab).astype(np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    lens = np.maximum(counts, 1)
+
+    sums = np.bincount(t, weights=s, minlength=vocab)
+    sq = np.bincount(t, weights=s * s, minlength=vocab)
+    amean = sums / lens
+    var = np.maximum(sq / lens - amean**2, 0.0)
+    # harmonic mean needs positive values; shift into positive range the same
+    # way for every term (LM scores are negative log-probs): hmean over
+    # (s - global_min + 1)
+    shift = 1.0 - s.min() if len(s) else 1.0
+    inv = np.bincount(t, weights=1.0 / (s + shift), minlength=vocab)
+    hmean = lens / np.maximum(inv, 1e-12) - shift
+
+    smax = _segment_quantiles(s, offsets, 1.0)
+    smin = _segment_quantiles(s, offsets, 0.0)
+    q1 = _segment_quantiles(s, offsets, 0.25)
+    q3 = _segment_quantiles(s, offsets, 0.75)
+    med = _segment_quantiles(s, offsets, 0.5)
+
+    out = np.stack(
+        [smax, q1, q3, smin, amean, hmean, med, var, q3 - q1], axis=-1
+    ).astype(np.float32)
+    out[counts == 0] = 0.0
+    return out
+
+
+def build_index(corpus: Corpus, impact_bits: int = 8) -> InvertedIndex:
+    vocab = corpus.config.vocab
+    col = scoring.CollectionStats(
+        n_docs=corpus.n_docs,
+        total_terms=corpus.total_terms,
+        avg_doc_len=float(corpus.doc_len.mean()),
+    )
+    term_of = corpus.term_ids.astype(np.int64)
+    tf = corpus.counts.astype(np.float64)
+    dlen = corpus.doc_len[corpus.doc_ids].astype(np.float64)
+    df_all = np.bincount(term_of, minlength=vocab).astype(np.float64)
+    ctf_all = np.bincount(term_of, weights=tf, minlength=vocab)
+    df = df_all[term_of]
+    ctf = ctf_all[term_of]
+
+    s_bm25 = np.asarray(scoring.bm25(tf, df, dlen, col), dtype=np.float32)
+    s_lm = np.asarray(scoring.dirichlet_lm(tf, ctf, dlen, col), dtype=np.float32)
+    s_tfidf = np.asarray(scoring.tfidf(tf, df, dlen, col), dtype=np.float32)
+    scores = np.stack([s_bm25, s_lm, s_tfidf], axis=-1)
+
+    # Table 1 statistics, per scorer
+    stats = np.stack(
+        [_term_statistics(scores[:, i], term_of, vocab) for i in range(3)],
+        axis=1,
+    )  # (vocab, 3, 9)
+
+    # impact quantization (JASS): global linear quantizer over bm25 scores
+    lo, hi = float(s_bm25.min()), float(s_bm25.max())
+    levels = (1 << impact_bits) - 1
+    impact = np.round((s_bm25 - lo) / max(hi - lo, 1e-9) * levels)
+    impact = impact.astype(np.uint8 if impact_bits <= 8 else np.uint16)
+
+    # impact-ordered layout: sort postings by (term, -impact, doc)
+    order = np.lexsort((corpus.doc_ids, -impact.astype(np.int32), term_of))
+    counts = np.bincount(term_of, minlength=vocab).astype(np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+
+    return InvertedIndex(
+        corpus=corpus,
+        collection=col,
+        offsets=offsets,
+        postings_doc=corpus.doc_ids[order],
+        postings_tf=corpus.counts[order],
+        postings_score=scores[order],
+        postings_impact=impact[order],
+        impact_scale=(lo, hi),
+        term_stats=TermStats(stats=stats, ctf=ctf_all.astype(np.float32),
+                             df=df_all.astype(np.float32)),
+    )

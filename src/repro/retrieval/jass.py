@@ -1,0 +1,131 @@
+"""Score-at-a-time anytime evaluation (JASS; Lin & Trotman 2015).
+
+JASS traverses impact-ordered posting segments in decreasing impact order,
+accumulating quantized integer impacts per document, and can stop any time;
+the knob rho = number of postings processed.  TPU adaptation (DESIGN.md
+section 3): the impact-ordered traversal becomes
+
+  1. ``gather_streams``  — gather the top-impact prefix of each query
+     term's postings and merge them into one impact-descending stream per
+     query (a vectorized sort replaces the CPU segment heap),
+  2. ``saat_scores``     — accumulate the first rho stream entries into a
+     dense document accumulator (the Pallas ``impact_scan`` kernel is the
+     production path; the jnp path here is its oracle and the CPU default),
+  3. ``rank_from_scores`` — deterministic ranking (ties by doc id).
+
+Early termination becomes static truncation of the stream at rho, which
+preserves the paper's linear rho <-> work relationship exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gather_streams", "saat_scores", "rank_from_scores", "saat_rank"]
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def gather_streams(offsets: jnp.ndarray, postings_doc: jnp.ndarray,
+                   postings_impact: jnp.ndarray, query_terms: jnp.ndarray,
+                   cap: int):
+    """Build per-query impact-descending posting streams.
+
+    offsets: (V+1,) int64 CSR offsets (impact-ordered within term).
+    query_terms: (Q, L) int32, -1 padded.
+    cap: stream length P (= max rho of interest).
+
+    Returns (doc_stream, impact_stream): (Q, P) int32 / float32, padded with
+    doc -1 / impact -1 where the stream is exhausted.
+    """
+    nnz = postings_doc.shape[0]
+    q = jnp.clip(query_terms, 0)
+    start = offsets[q]                                  # (Q, L)
+    end = offsets[jnp.clip(query_terms + 1, 0)]
+    end = jnp.where(query_terms >= 0, end, start)
+    ar = jnp.arange(cap, dtype=start.dtype)             # (P,)
+    idx = start[..., None] + ar                         # (Q, L, P)
+    valid = idx < end[..., None]
+    idx = jnp.clip(idx, 0, nnz - 1)
+    docs = jnp.where(valid, postings_doc[idx], -1)
+    imps = jnp.where(valid, postings_impact[idx].astype(jnp.float32), -1.0)
+    qn, ln = query_terms.shape
+    docs = docs.reshape(qn, ln * cap)
+    imps = imps.reshape(qn, ln * cap)
+    top_imps, top_idx = jax.lax.top_k(imps, cap)        # impact-descending
+    top_docs = jnp.take_along_axis(docs, top_idx, axis=1)
+    return top_docs.astype(jnp.int32), top_imps
+
+
+def saat_scores(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray,
+                n_docs: int, rho: int | jnp.ndarray) -> jnp.ndarray:
+    """Accumulate the first ``rho`` postings of each stream.  (Q, n_docs)."""
+
+    def one(docs, imps):
+        mask = (jnp.arange(docs.shape[0]) < rho) & (docs >= 0)
+        contrib = jnp.where(mask, imps, 0.0)
+        return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(contrib)
+
+    return jax.vmap(one)(doc_stream, impact_stream)
+
+
+@functools.partial(jax.jit, static_argnames=("depth",))
+def rank_from_scores(scores: jnp.ndarray, depth: int) -> jnp.ndarray:
+    """Top-``depth`` doc ids, ties broken by ascending doc id; zero-score
+    docs are excluded (padded with -1)."""
+    n_docs = scores.shape[-1]
+
+    def one(s):
+        order = jnp.lexsort((jnp.arange(n_docs), -s))
+        top = order[:depth]
+        return jnp.where(s[top] > 0, top, -1).astype(jnp.int32)
+
+    return jax.vmap(one)(scores)
+
+
+def saat_rank(doc_stream, impact_stream, n_docs: int, rho: int,
+              depth: int) -> jnp.ndarray:
+    """Convenience: anytime ranking at rho, evaluated to ``depth``."""
+    return rank_from_scores(
+        saat_scores(doc_stream, impact_stream, n_docs, rho), depth
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def gather_score_streams(offsets: jnp.ndarray, postings_doc: jnp.ndarray,
+                         postings_score: jnp.ndarray,
+                         query_terms: jnp.ndarray, cap: int):
+    """Gather each query's postings with their (bm25, lm, tfidf) scores —
+    the stage-2 feature-extraction read.  Unsorted (exhaustive use only).
+
+    Returns (docs (Q, L*cap) int32 -1-padded, scores (Q, L*cap, 3))."""
+    nnz = postings_doc.shape[0]
+    q = jnp.clip(query_terms, 0)
+    start = offsets[q]
+    end = offsets[jnp.clip(query_terms + 1, 0)]
+    end = jnp.where(query_terms >= 0, end, start)
+    ar = jnp.arange(cap, dtype=start.dtype)
+    idx = start[..., None] + ar
+    valid = idx < end[..., None]
+    idx = jnp.clip(idx, 0, nnz - 1)
+    docs = jnp.where(valid, postings_doc[idx], -1)
+    scores = jnp.where(valid[..., None], postings_score[idx], 0.0)
+    qn, ln = query_terms.shape
+    return docs.reshape(qn, ln * cap), scores.reshape(qn, ln * cap, 3)
+
+
+def scorer_accumulators(docs: jnp.ndarray, scores3: jnp.ndarray,
+                        n_docs: int):
+    """Dense per-scorer accumulators: (Q, n_docs) x3 from gathered
+    postings.  These are the stage-2 features of the reranker stand-in."""
+
+    def one(d, s):
+        safe = jnp.clip(d, 0)
+        w = (d >= 0)[:, None]
+        z = jnp.zeros((n_docs, 3), jnp.float32)
+        return z.at[safe].add(jnp.where(w, s, 0.0))
+
+    acc = jax.vmap(one)(docs, scores3)       # (Q, n_docs, 3)
+    return acc[..., 0], acc[..., 1], acc[..., 2]

@@ -1,0 +1,58 @@
+"""Similarity scorers used by the paper (Section 3).
+
+Three per-term-per-document similarity formulations, chosen by the paper
+because each can be precomputed for every (term, document) pair at index
+time and treated as an independent term feature:
+
+  * BM25 with k1 = 0.9, b = 0.4 (the Atire/Lucene IR-Reproducibility
+    parameterization cited by the paper, not the Robertson defaults),
+  * query likelihood with Dirichlet-prior smoothing, mu = 2500,
+  * TF x IDF in the paper's normalized formulation.
+
+All functions are pure and operate on posting-aligned arrays, so they work
+both on the whole collection (index build) and on gathered per-query
+postings (query time).  ``jnp`` in the hot path; the index builder calls
+them with numpy arrays (jnp ops accept those and stay on host CPU here).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["CollectionStats", "bm25", "dirichlet_lm", "tfidf", "SCORERS"]
+
+
+@dataclass(frozen=True)
+class CollectionStats:
+    """Global statistics needed by the scorers."""
+
+    n_docs: int          # N
+    total_terms: float   # |C|
+    avg_doc_len: float   # l_avg
+
+
+def bm25(tf, df, doc_len, stats: CollectionStats, *, k1: float = 0.9,
+         b: float = 0.4):
+    """BM25 = log((N - f_t + .5)/(f_t + .5)) * TF_BM25  (paper Section 3)."""
+    idf = jnp.log((stats.n_docs - df + 0.5) / (df + 0.5))
+    denom = tf + k1 * ((1.0 - b) + b * doc_len / stats.avg_doc_len)
+    return idf * (tf * (k1 + 1.0)) / denom
+
+
+def dirichlet_lm(tf, ctf, doc_len, stats: CollectionStats, *,
+                 mu: float = 2500.0):
+    """log((f_td + mu * C_t/|C|) / (l_d + mu)) — Dirichlet-smoothed QL."""
+    prior = ctf / stats.total_terms
+    return jnp.log((tf + mu * prior) / (doc_len + mu))
+
+
+def tfidf(tf, df, doc_len, stats: CollectionStats):
+    """(1/l_d) * (1 + log f_td) * log(1 + N/f_t) — paper Section 3."""
+    return (1.0 / doc_len) * (1.0 + jnp.log(tf)) * jnp.log(1.0 + stats.n_docs / df)
+
+
+#: name -> (callable signature tag) registry; index.py iterates this to
+#: build the per-term score statistics for all three regimes.
+SCORERS = ("bm25", "lm", "tfidf")

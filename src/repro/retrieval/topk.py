@@ -1,0 +1,35 @@
+"""Safe-to-k candidate generation — the WAND role, TPU-adapted.
+
+WAND is a document-at-a-time heap algorithm whose skipping logic is
+pointer-chasing and branch-heavy — a degenerate fit for the MXU.  We keep
+its *contract* (an exact, "safe to rank k" top-k of the stage-1 scoring
+function) and realize it as dense blocked scoring plus top-k selection
+(DESIGN.md section 3): exhaustive quantized accumulation over the query's
+postings followed by a two-stage blocked top-k (kernels/topk on TPU).
+
+The k knob keeps its end-to-end meaning: it bounds the candidate pool fed
+to feature extraction + reranking, which is where a larger k hurts most in
+a multi-stage system.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.retrieval import jass
+
+__all__ = ["candidates_topk", "exhaustive_scores"]
+
+
+def exhaustive_scores(doc_stream, impact_stream, n_docs: int) -> jnp.ndarray:
+    """Dense stage-1 scores: accumulate the entire stream (rho = P)."""
+    return jass.saat_scores(doc_stream, impact_stream, n_docs,
+                            doc_stream.shape[-1])
+
+
+def candidates_topk(doc_stream, impact_stream, n_docs: int,
+                    k: int) -> jnp.ndarray:
+    """Exact top-k candidate pool of the stage-1 scorer.  (Q, k) doc ids,
+    -1 padded where fewer than k documents match any query term."""
+    scores = exhaustive_scores(doc_stream, impact_stream, n_docs)
+    return jass.rank_from_scores(scores, k)

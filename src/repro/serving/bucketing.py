@@ -1,0 +1,45 @@
+"""Class-bucketed batching: dynamic per-query parameters on static shapes.
+
+The cascade predicts one of c ordinal classes per query; each class is a
+*static* parameter setting (k or rho).  TPU executables want static
+shapes, so the server groups queries by predicted class and runs one
+fixed-shape program per bucket (DESIGN.md §3) — the cascade's
+discreteness is exactly what makes per-query dynamism TPU-compatible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["bucketize", "scatter_back"]
+
+
+def bucketize(pred_class: np.ndarray, n_classes: int,
+              pad_multiple: int = 8) -> dict[int, dict]:
+    """Group query indices by predicted class.
+
+    Returns {class: {"idx": (m,) original positions,
+                     "pad_idx": (M,) padded to pad_multiple (repeats last)}}
+    """
+    out = {}
+    pred_class = np.asarray(pred_class)
+    for c in range(n_classes + 1):
+        idx = np.flatnonzero(pred_class == c)
+        if len(idx) == 0:
+            continue
+        m = len(idx)
+        pad = (-m) % pad_multiple
+        pad_idx = np.concatenate([idx, np.repeat(idx[-1:], pad)])
+        out[int(c)] = {"idx": idx, "pad_idx": pad_idx}
+    return out
+
+
+def scatter_back(n_queries: int, buckets: dict[int, dict],
+                 per_bucket: dict[int, np.ndarray]) -> np.ndarray:
+    """Reassemble per-query results from bucket outputs (first rows win)."""
+    sample = next(iter(per_bucket.values()))
+    out = np.zeros((n_queries, *sample.shape[1:]), sample.dtype)
+    for c, b in buckets.items():
+        m = len(b["idx"])
+        out[b["idx"]] = np.asarray(per_bucket[c])[:m]
+    return out

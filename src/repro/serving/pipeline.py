@@ -1,0 +1,127 @@
+"""The multi-stage retrieval pipeline with dynamic trade-off prediction.
+
+End-to-end serving path (paper Figure 1 + our cascade in front):
+
+    query -> static features (core.features, precomputed term stats)
+          -> LR cascade -> predicted class (a k or rho bucket)
+          -> bucketed candidate generation (topk.k or jass.rho per class)
+          -> feature extraction (per-candidate stage-2 features)
+          -> second-stage reranker -> final ranked list
+
+Everything after the class prediction runs per class bucket with static
+shapes (serving/bucketing.py).  ``serve_batch`` also returns the latency
+accounting the paper's efficiency claims are stated in: postings scored
+(rho semantics) and candidate-pool width (k semantics — the rerank cost
+driver).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cascade as cascade_lib
+from repro.core import features as feat_lib
+from repro.retrieval import gold, jass
+from repro.serving import bucketing
+
+__all__ = ["ServingConfig", "RetrievalServer"]
+
+
+@dataclasses.dataclass
+class ServingConfig:
+    knob: str                      # "k" | "rho"
+    cutoffs: tuple[int, ...]       # the 9 parameter values
+    threshold: float = 0.75        # cascade confidence t
+    rerank_depth: int = 100        # final list depth
+    stream_cap: int = 4096         # postings stream length P
+    pad_multiple: int = 8
+
+
+class RetrievalServer:
+    """Owns the index-derived arrays + trained cascade; serves batches."""
+
+    def __init__(self, index, casc: cascade_lib.Cascade,
+                 cfg: ServingConfig):
+        self.index = index
+        self.cascade = casc
+        self.cfg = cfg
+        self.stats = jnp.asarray(index.term_stats.stats)
+        self.ctf = jnp.asarray(index.term_stats.ctf)
+        self.df = jnp.asarray(index.term_stats.df)
+        self.offsets = jnp.asarray(index.offsets)
+        self.pdoc = jnp.asarray(index.postings_doc)
+        self.pimp = jnp.asarray(index.postings_impact.astype(np.float32))
+        self.pscore = jnp.asarray(index.postings_score)
+        self.n_docs = index.corpus.n_docs
+
+    # stage 0: prediction ------------------------------------------------
+    def predict_classes(self, query_terms: np.ndarray) -> np.ndarray:
+        x = feat_lib.query_features(jnp.asarray(query_terms), self.stats,
+                                    self.ctf, self.df)
+        return np.asarray(
+            cascade_lib.predict_batched(self.cascade, x,
+                                        self.cfg.threshold))
+
+    # stages 1-3 per bucket ----------------------------------------------
+    def _serve_bucket(self, query_terms: np.ndarray, param: int):
+        """Candidate generation + feature extraction + rerank for one
+        static parameter setting.  Returns (ranked, width)."""
+        qt = jnp.asarray(query_terms)
+        ds, im = jass.gather_streams(self.offsets, self.pdoc, self.pimp,
+                                     qt, cap=self.cfg.stream_cap)
+        if self.cfg.knob == "rho":
+            rho = min(param, self.cfg.stream_cap)
+            acc = jass.saat_scores(ds, im, self.n_docs, rho)
+            pool = jass.rank_from_scores(acc, self.cfg.rerank_depth)
+            width = rho
+        else:
+            acc = jass.saat_scores(ds, im, self.n_docs, ds.shape[-1])
+            pool = jass.rank_from_scores(acc, param)
+            width = param
+        # feature extraction: stage-2 features (the per-candidate cost the
+        # paper's k knob controls) + the second-stage model
+        qids = jnp.arange(qt.shape[0])
+        sdocs, s3 = jass.gather_score_streams(
+            self.offsets, self.pdoc, self.pscore, qt,
+            cap=self.cfg.stream_cap)
+        a_bm25, a_lm, a_tfidf = jass.scorer_accumulators(
+            sdocs, s3, self.n_docs)
+        stage2 = gold.second_stage_scores(
+            a_bm25, a_lm, a_tfidf,
+            jnp.asarray(self.index.corpus.doc_len), qids)
+        ranked = np.asarray(
+            gold.rerank_pool(stage2, pool, self.cfg.rerank_depth))
+        if ranked.shape[1] < self.cfg.rerank_depth:   # pool narrower than
+            pad = self.cfg.rerank_depth - ranked.shape[1]  # the final list
+            ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
+        return ranked, width
+
+    def serve_batch(self, query_terms: np.ndarray) -> dict:
+        """Full dynamic pipeline over a query batch."""
+        n = query_terms.shape[0]
+        classes = self.predict_classes(query_terms)
+        buckets = bucketing.bucketize(classes, len(self.cfg.cutoffs),
+                                      self.cfg.pad_multiple)
+        results, widths = {}, np.zeros(n)
+        for c, b in buckets.items():
+            param = self.cfg.cutoffs[min(c, len(self.cfg.cutoffs) - 1)]
+            ranked, width = self._serve_bucket(query_terms[b["pad_idx"]],
+                                               int(param))
+            results[c] = ranked
+            widths[b["idx"]] = width
+        ranked_all = bucketing.scatter_back(n, buckets, results)
+        return {
+            "ranked": ranked_all,
+            "classes": classes,
+            "mean_param": float(widths.mean()),
+            "widths": widths,
+        }
+
+    def serve_fixed(self, query_terms: np.ndarray, param: int) -> dict:
+        """Fixed-global-parameter baseline (the tradeoff horizon)."""
+        ranked, width = self._serve_bucket(query_terms, param)
+        return {"ranked": ranked, "mean_param": float(width),
+                "widths": np.full(query_terms.shape[0], width)}

@@ -1,0 +1,73 @@
+"""Batched serving loop with latency accounting.
+
+Wraps serving.pipeline.RetrievalServer in the runtime loop a deployment
+runs: request micro-batching, per-batch latency percentiles, rolling
+envelope compliance against a reference MED table, and the per-class
+bucket census that capacity planning reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import tradeoff
+from repro.serving.pipeline import RetrievalServer
+
+__all__ = ["ServerStats", "serve_loop"]
+
+
+@dataclasses.dataclass
+class ServerStats:
+    n_queries: int
+    latencies_ms: list
+    mean_param: float
+    class_histogram: np.ndarray
+    pct_in_envelope: float | None
+
+    @property
+    def p50_ms(self) -> float:
+        return float(np.percentile(self.latencies_ms, 50))
+
+    @property
+    def p99_ms(self) -> float:
+        return float(np.percentile(self.latencies_ms, 99))
+
+    def summary(self) -> str:
+        env = (f" in-envelope={self.pct_in_envelope:.1%}"
+               if self.pct_in_envelope is not None else "")
+        return (f"q={self.n_queries} p50={self.p50_ms:.1f}ms "
+                f"p99={self.p99_ms:.1f}ms mean_param={self.mean_param:.0f}"
+                + env)
+
+
+def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
+               batch: int = 128, med_table: np.ndarray | None = None,
+               tau: float = 0.05, warmup: int = 1) -> ServerStats:
+    """Run the dynamic pipeline over a query stream in micro-batches."""
+    n = query_terms.shape[0]
+    lat, params, classes_all = [], [], []
+    compliant = []
+    for w in range(warmup):
+        server.serve_batch(query_terms[:batch])
+    for lo in range(0, n - batch + 1, batch):
+        qt = query_terms[lo:lo + batch]
+        t0 = time.perf_counter()
+        out = server.serve_batch(qt)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        params.append(out["widths"])
+        classes_all.append(out["classes"])
+        if med_table is not None:
+            compliant.append(tradeoff.pct_under_target(
+                med_table[lo:lo + batch], out["classes"], tau))
+    classes = np.concatenate(classes_all)
+    return ServerStats(
+        n_queries=len(classes),
+        latencies_ms=lat,
+        mean_param=float(np.concatenate(params).mean()),
+        class_histogram=np.bincount(
+            classes, minlength=len(server.cfg.cutoffs) + 1),
+        pct_in_envelope=float(np.mean(compliant)) if compliant else None,
+    )

@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(scope="session")
+def tiny_system():
+    """Shared tiny corpus/index/query system for retrieval tests."""
+    from repro.core import experiment as E
+
+    return E.build_system(E.ExperimentConfig(
+        n_docs=1500, vocab=4000, n_queries=96, stream_cap=256,
+        pool_depth=400, gold_depth=100, query_batch=48, seed=3))

@@ -1,0 +1,194 @@
+"""Forest, MLP, cascade, labeling, baselines."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import baselines as bl
+from repro.core import cascade as cascade_lib
+from repro.core import forest, labeling, mlp, tradeoff
+
+
+@pytest.fixture(scope="module")
+def ordinal_data(rng):
+    n, F, C = 1200, 20, 9
+    x = rng.normal(size=(n, F)).astype(np.float32)
+    score = x[:, 0] + 0.6 * x[:, 3] - 0.7 * x[:, 7]
+    edges = np.quantile(score, np.linspace(0.1, 0.9, C))
+    y = np.clip(np.digitize(score, edges), 0, C).astype(np.int64)
+    return x, y, C
+
+
+def test_forest_learns(ordinal_data):
+    x, y, _ = ordinal_data
+    yb = (y > 4).astype(np.int64)
+    f = forest.train_forest(x, yb, n_classes=2, n_trees=10, max_depth=6,
+                            seed=0)
+    p = forest.forest_predict_proba(f.as_jax(), jnp.asarray(x), f.max_depth)
+    acc = float((np.argmax(np.asarray(p), 1) == yb).mean())
+    assert acc > 0.8
+    # probabilities well-formed
+    assert np.allclose(np.asarray(p).sum(1), 1.0, atol=1e-5)
+
+
+def test_forest_deterministic(ordinal_data):
+    x, y, _ = ordinal_data
+    yb = (y > 4).astype(np.int64)
+    f1 = forest.train_forest(x, yb, n_classes=2, n_trees=4, seed=3)
+    f2 = forest.train_forest(x, yb, n_classes=2, n_trees=4, seed=3)
+    assert np.array_equal(f1.thresh, f2.thresh)
+
+
+def test_mlp_learns(ordinal_data):
+    x, y, _ = ordinal_data
+    yb = (y > 4).astype(np.int64)
+    m = mlp.train_mlp(x, yb, n_classes=2, epochs=40, hidden=(32,),
+                      lr=5e-3, seed=0)
+    p = mlp.mlp_predict_proba(m.as_jax(), jnp.asarray(x))
+    acc = float((np.argmax(np.asarray(p), 1) == yb).mean())
+    assert acc > 0.75
+
+
+def test_multiclass_to_binary_roundtrip(ordinal_data):
+    _, y, C = ordinal_data
+    b = labeling.multiclass_to_binary(y, C)
+    assert b.shape == (C, len(y))
+    # row i is 0 iff label <= i; reconstruct label = #rows with 1
+    recon = b.sum(0)
+    assert np.array_equal(recon, y)
+
+
+def test_envelope_labels():
+    m = np.array([[0.5, 0.2, 0.04, 0.01],
+                  [0.01, 0.2, 0.3, 0.4],
+                  [0.9, 0.9, 0.9, 0.9]], np.float32)
+    lab = np.asarray(labeling.envelope_labels(jnp.asarray(m), 0.05))
+    assert list(lab) == [2, 0, 4]
+
+
+def test_stratified_folds(ordinal_data):
+    _, y, _ = ordinal_data
+    folds = labeling.stratified_folds(y, 5, seed=1)
+    for cls in np.unique(y):
+        counts = np.bincount(folds[y == cls], minlength=5)
+        assert counts.max() - counts.min() <= 1
+
+
+def test_cascade_sequential_equals_batched(ordinal_data):
+    x, y, C = ordinal_data
+    casc = cascade_lib.train_cascade(
+        x[:600], y[:600], n_cutoffs=C, seed=0,
+        forest_kwargs=dict(n_trees=5, max_depth=5))
+    pred = np.asarray(cascade_lib.predict_batched(casc, jnp.asarray(x[:40]),
+                                                  0.8))
+    for i in range(40):
+        assert cascade_lib.predict_sequential(casc, x[i], 0.8) == pred[i]
+
+
+def test_cascade_threshold_monotone(ordinal_data):
+    """Raising t can only delay exits => predicted class non-decreasing."""
+    x, y, C = ordinal_data
+    casc = cascade_lib.train_cascade(
+        x[:600], y[:600], n_cutoffs=C, seed=0,
+        forest_kwargs=dict(n_trees=5, max_depth=5))
+    p_lo = np.asarray(cascade_lib.predict_batched(casc, jnp.asarray(x), 0.6))
+    p_hi = np.asarray(cascade_lib.predict_batched(casc, jnp.asarray(x), 0.9))
+    assert (p_hi >= p_lo).all()
+
+
+def test_cascade_suppresses_underprediction(ordinal_data):
+    x, y, C = ordinal_data
+    casc = cascade_lib.train_cascade(
+        x[:900], y[:900], n_cutoffs=C, seed=0,
+        forest_kwargs=dict(n_trees=8, max_depth=6))
+    pred = np.asarray(cascade_lib.predict_batched(casc, jnp.asarray(x[900:]),
+                                                  0.8))
+    yt = y[900:]
+    under = float((pred < yt).mean())
+    over = float((pred > yt).mean())
+    assert under < 0.25
+    assert over > under  # the asymmetry the paper designs for
+
+
+def test_metacost_cost_matrix():
+    c = bl.cost_matrix(5)
+    assert c.shape == (5, 5)
+    assert np.all(np.diag(c) == 0)
+    # over-prediction free, under-prediction penalized and increasing
+    assert c[3, 4] == 0.0
+    assert c[4, 0] > c[4, 3] > 0
+
+
+def test_metacost_shifts_up(ordinal_data):
+    x, y, C = ordinal_data
+    ml = bl.train_multilabel(x, y, C + 1, seed=0, n_trees=8, max_depth=6)
+    mc = bl.train_metacost(x, y, C + 1, n_bags=3, seed=0, n_trees=8,
+                           max_depth=6)
+    pm = np.asarray(bl.predict_multilabel(ml, jnp.asarray(x)))
+    pc = np.asarray(bl.predict_multilabel(mc, jnp.asarray(x)))
+    assert (pc < y).mean() <= (pm < y).mean()  # fewer under-predictions
+
+
+def test_tradeoff_interpolation():
+    med_table = np.array([[0.5, 0.2, 0.05, 0.0]] * 10, np.float32)
+    cutoffs = (10, 100, 1000, 10000)
+    hor = tradeoff.horizon(med_table, cutoffs)
+    assert len(hor) == 4
+    labels = np.full(10, 2)
+    pt = tradeoff.method_point("m", med_table, labels, cutoffs)
+    assert pt.mean_cutoff == 1000
+    g = tradeoff.interp_gain(pt, hor)
+    assert abs(g["fixed_k"] - 1000) < 1e-3   # exact point on the horizon
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0, 1), min_size=4, max_size=4))
+def test_envelope_label_minimality(meds):
+    m = np.array(meds, np.float32)[None]
+    lab = int(labeling.envelope_labels(jnp.asarray(m), 0.3)[0])
+    if lab < 4:
+        assert m[0, lab] <= 0.3
+        assert (m[0, :lab] > 0.3).all()
+    else:
+        assert (m[0] > 0.3).all()
+
+
+def test_variable_thresholds(ordinal_data):
+    """Paper §5 roadmap: per-node thresholds — tuned vector must keep
+    envelope compliance while lowering (or matching) the mean cutoff of
+    the most conservative scalar threshold."""
+    import numpy as np
+    from repro.core import cascade as cascade_lib
+
+    x, y, C = ordinal_data
+    casc = cascade_lib.train_cascade(
+        x[:800], y[:800], n_cutoffs=C, seed=0,
+        forest_kwargs=dict(n_trees=6, max_depth=5))
+    # synthetic med table: below-diagonal = out of envelope
+    med = np.where(np.arange(C)[None, :] >= y[:, None], 0.01, 0.5)
+    tv = cascade_lib.tune_thresholds(casc, x[800:1000], med[800:1000],
+                                     list(range(C)), tau=0.05)
+    assert tv.shape == (C,)
+    import jax.numpy as jnp
+    pred_v = np.asarray(cascade_lib.predict_batched(
+        casc, jnp.asarray(x[1000:]), tv))
+    pred_hi = np.asarray(cascade_lib.predict_batched(
+        casc, jnp.asarray(x[1000:]), 0.9))
+    yt = y[1000:]
+    assert (pred_v < yt).mean() <= (pred_hi < yt).mean() + 0.08
+    assert pred_v.mean() <= pred_hi.mean() + 1e-9
+
+
+def test_med_map_basics(rng):
+    import numpy as np
+    from repro.core import med
+
+    a = np.arange(5, dtype=np.int32)[None]
+    assert float(med.med_map(a, a)[0]) == 0.0
+    b = (np.arange(5, dtype=np.int32) + 100)[None]
+    # disjoint: AP over first n_rel=1 diff doc = precision 1 at rank 1
+    assert abs(float(med.med_map(a, b, n_rel=1)[0]) - 1.0) < 1e-6
+    v = float(med.med_map(a, b, n_rel=3)[0])
+    assert 0.0 < v <= 1.0

@@ -1,0 +1,140 @@
+"""Per-kernel allclose vs the pure-jnp oracles, with shape/dtype sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.embedding_bag import ops as eb_ops
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.impact_scan import ops as is_ops
+from repro.kernels.topk import ops as tk_ops
+
+R = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------ flash attn --
+
+@pytest.mark.parametrize("b,s,hq,hkv,hd", [
+    (2, 64, 4, 2, 32), (1, 128, 2, 2, 16), (2, 64, 8, 1, 64),
+    (1, 256, 4, 4, 32),
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (False, None), (True, 16),
+])
+def test_flash_attention_sweep(b, s, hq, hkv, hd, causal, window):
+    q = jnp.asarray(R.normal(size=(b, s, hq, hd)).astype(np.float32))
+    k = jnp.asarray(R.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    v = jnp.asarray(R.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    out = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 block_q=32, block_kv=32)
+    ref = fa_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                 use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(np.float32, 2e-5), ("bfloat16", 2e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float32
+    q = jnp.asarray(R.normal(size=(1, 64, 4, 32))).astype(dt)
+    k = jnp.asarray(R.normal(size=(1, 64, 2, 32))).astype(dt)
+    v = jnp.asarray(R.normal(size=(1, 64, 2, 32))).astype(dt)
+    out = fa_ops.flash_attention(q, k, v, block_q=32, block_kv=32)
+    ref = fa_ops.flash_attention(q, k, v, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ------------------------------------------------------------ impact scan --
+
+@pytest.mark.parametrize("q,p,nd,rho,bp,bd", [
+    (3, 300, 500, 100, 64, 128),
+    (2, 1024, 2048, 1024, 256, 512),
+    (1, 100, 77, 33, 32, 32),
+    (2, 128, 64, 0, 32, 64),      # rho = 0: nothing scored
+    (1, 64, 128, 1000, 32, 64),   # rho > P: everything scored
+])
+def test_impact_scan_sweep(q, p, nd, rho, bp, bd):
+    docs = jnp.asarray(R.integers(-1, nd, (q, p)).astype(np.int32))
+    imps = jnp.asarray((R.random((q, p)) * 255).astype(np.float32))
+    a = is_ops.saat_accumulate(docs, imps, n_docs=nd, rho=rho,
+                               block_p=bp, block_d=bd)
+    b = is_ops.saat_accumulate(docs, imps, n_docs=nd, rho=rho,
+                               use_kernel=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3)
+
+
+def test_impact_scan_rho_semantics():
+    """Kernel must process exactly the first rho stream entries."""
+    docs = jnp.asarray(np.array([[0, 1, 2, 3]], np.int32))
+    imps = jnp.asarray(np.array([[10., 20., 30., 40.]], np.float32))
+    a = np.asarray(is_ops.saat_accumulate(docs, imps, n_docs=4, rho=2,
+                                          block_p=2, block_d=2))
+    assert list(a[0]) == [10.0, 20.0, 0.0, 0.0]
+
+
+# ------------------------------------------------------------------ topk --
+
+@pytest.mark.parametrize("q,n,k,bn", [
+    (2, 1000, 10, 256), (1, 5000, 64, 512), (3, 300, 128, 128),
+    (1, 257, 7, 64),
+])
+def test_topk_sweep(q, n, k, bn):
+    s = jnp.asarray(R.normal(size=(q, n)).astype(np.float32))
+    v1, i1 = tk_ops.topk_select(s, k, block_n=bn)
+    v2, i2 = tk_ops.topk_select(s, k, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+
+
+def test_topk_ties_prefer_low_index():
+    s = jnp.asarray(np.array([[1.0, 5.0, 5.0, 0.0, 5.0]], np.float32))
+    _, idx = tk_ops.topk_select(s, 3, block_n=2)
+    assert list(np.asarray(idx)[0]) == [1, 2, 4]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(5, 200), st.integers(1, 16))
+def test_topk_property(q, n, k):
+    k = min(k, n)
+    s = jnp.asarray(np.random.default_rng(q * n + k)
+                    .normal(size=(q, n)).astype(np.float32))
+    v1, i1 = tk_ops.topk_select(s, k, block_n=32)
+    v2, i2 = tk_ops.topk_select(s, k, use_kernel=False)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# --------------------------------------------------------- embedding bag --
+
+@pytest.mark.parametrize("v,d,b,l,comb", [
+    (100, 16, 8, 5, "sum"), (50, 8, 4, 3, "mean"), (30, 32, 16, 1, "sum"),
+    (200, 64, 2, 7, "mean"),
+])
+def test_embedding_bag_sweep(v, d, b, l, comb):
+    t = jnp.asarray(R.normal(size=(v, d)).astype(np.float32))
+    ids = jnp.asarray(R.integers(-1, v, (b, l)).astype(np.int32))
+    o1 = eb_ops.embedding_bag(t, ids, combiner=comb)
+    o2 = eb_ops.embedding_bag(t, ids, combiner=comb, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+
+
+def test_embedding_bag_all_padding():
+    t = jnp.asarray(R.normal(size=(10, 4)).astype(np.float32))
+    ids = jnp.full((2, 3), -1, jnp.int32)
+    o = eb_ops.embedding_bag(t, ids, combiner="mean")
+    assert np.allclose(np.asarray(o), 0.0)
+
+
+def test_embedding_bag_matches_model_layer():
+    from repro.models.recsys import embedding as E
+
+    t = jnp.asarray(R.normal(size=(40, 8)).astype(np.float32))
+    ids = jnp.asarray(R.integers(-1, 40, (6, 4)).astype(np.int32))
+    np.testing.assert_allclose(
+        np.asarray(eb_ops.embedding_bag(t, ids)),
+        np.asarray(E.bag_fixed(t, ids)), rtol=1e-6)

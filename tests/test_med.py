@@ -1,0 +1,105 @@
+"""MED correctness: closed form vs brute force + invariants."""
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import med
+
+
+def brute_force_med(a, b, weights_fn, max_docs=10):
+    """Exact MED for binary relevance by enumerating assignments."""
+    a = [d for d in a if d >= 0]
+    b = [d for d in b if d >= 0]
+    docs = sorted(set(a) | set(b))
+    wa = {d: weights_fn(a.index(d)) if d in a else 0.0 for d in docs}
+    wb = {d: weights_fn(b.index(d)) if d in b else 0.0 for d in docs}
+    best = 0.0
+    for rel in itertools.product([0, 1], repeat=len(docs)):
+        ma = sum(r * wa[d] for r, d in zip(rel, docs))
+        mb = sum(r * wb[d] for r, d in zip(rel, docs))
+        best = max(best, abs(ma - mb))
+    return best
+
+
+def lists(rng, n_docs=12, da=6, db=6):
+    a = rng.permutation(n_docs)[:da].astype(np.int32)
+    b = rng.permutation(n_docs)[:db].astype(np.int32)
+    return a, b
+
+
+@pytest.mark.parametrize("p", [0.8, 0.95])
+def test_med_rbp_matches_bruteforce(rng, p):
+    for _ in range(20):
+        a, b = lists(rng)
+        got = float(med.med_rbp(a[None], b[None], p=p)[0])
+        want = brute_force_med(a, b, lambda i: (1 - p) * p ** i)
+        assert abs(got - want) < 1e-5
+
+
+def test_med_dcg_matches_bruteforce(rng):
+    for _ in range(20):
+        a, b = lists(rng)
+        got = float(med.med_dcg(a[None], b[None], eval_depth=20)[0])
+        want = brute_force_med(a, b, lambda i: 1.0 / np.log2(i + 2))
+        assert abs(got - want) < 1e-5
+
+
+def test_med_identity_zero(rng):
+    a, _ = lists(rng)
+    assert float(med.med_rbp(a[None], a[None])[0]) == 0.0
+    assert float(med.med_dcg(a[None], a[None])[0]) == 0.0
+    assert float(med.med_err(a[None], a[None])[0]) == 0.0
+
+
+def test_med_err_disjoint_exact(rng):
+    """With disjoint lists the greedy diff-set ERR assignment is exact."""
+    a = np.arange(5, dtype=np.int32)
+    b = np.arange(10, 15, dtype=np.int32)
+    got = float(med.med_err(a[None], b[None], eval_depth=20, r_max=0.5)[0])
+    # assign 0.5 to all docs of a: ERR(a) = sum (1/i+1)*.5*.5^i
+    want = sum((1.0 / (i + 1)) * 0.5 * 0.5 ** i for i in range(5))
+    assert abs(got - want) < 1e-6
+
+
+def test_med_restriction_monotone_in_k(tiny_system):
+    """B_k = gold restricted to top-k pool: MED must be non-increasing
+    in k — the property that makes envelope labeling well-defined."""
+    from repro.core import experiment as E
+
+    tables = E.med_tables(tiny_system, "k", metrics=("rbp", "dcg"))
+    for m in tables.values():
+        diffs = m[:, 1:] - m[:, :-1]
+        assert (diffs <= 1e-5).all()
+
+
+def test_med_rho_monotone(tiny_system):
+    from repro.core import experiment as E
+
+    tables = E.med_tables(tiny_system, "rho", metrics=("rbp",))
+    m = tables["rbp"]
+    assert (m[:, -1] <= m[:, 0] + 1e-6).all()
+    assert np.all(np.abs(m[:, -1]) < 1e-5)   # rho = P is exhaustive
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=8, unique=True),
+       st.lists(st.integers(0, 30), min_size=1, max_size=8, unique=True))
+def test_med_nonnegative_and_bounded(la, lb):
+    a = np.array(la, np.int32)[None]
+    b = np.array(lb, np.int32)[None]
+    for fn in (med.med_rbp, med.med_dcg, med.med_err):
+        v = float(fn(a, b)[0])
+        assert v >= 0.0
+        assert np.isfinite(v)
+
+
+def test_rank_in(rng):
+    b = np.array([5, 3, 9, -1, -1], np.int32)
+    a = np.array([9, 5, 7], np.int32)
+    r = np.asarray(med.rank_in(jnp.asarray(a), jnp.asarray(b)))
+    assert list(r) == [2, 0, -1]

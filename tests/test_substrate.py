@@ -1,0 +1,167 @@
+"""Optimizer, schedules, compression, checkpointing, failover, elastic,
+sharding rules, bucketing."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.ckpt import checkpoint as C
+from repro.ckpt import failover as F
+from repro.distrib import sharding as S
+from repro.optim import adamw, compression, schedules
+from repro.serving import bucketing
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0)
+    params = {"w": jnp.asarray(np.ones(4, np.float32) * 3)}
+    opt = adamw.init_opt_state(params)
+    for _ in range(200):
+        g = {"w": 2 * params["w"]}
+        params, opt, _ = adamw.adamw_update(cfg, params, g, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_grad_clip_applied():
+    cfg = adamw.AdamWConfig(lr=1.0, grad_clip=1e-3, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    opt = adamw.init_opt_state(params)
+    g = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    _, _, m = adamw.adamw_update(cfg, params, g, opt)
+    assert float(m["clip"]) < 1e-8
+
+
+def test_schedules_bounds():
+    for fn in (schedules.warmup_cosine, schedules.warmup_linear_decay):
+        vals = [float(fn(jnp.asarray(s), warmup=10, total=100))
+                for s in range(0, 120, 7)]
+        assert all(0.0 <= v <= 1.0 + 1e-6 for v in vals)
+        assert vals[0] < vals[2]            # warmup rises
+
+
+def test_quantize_roundtrip_bound():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=512)
+                    .astype(np.float32))
+    scale = jnp.max(jnp.abs(x)) / 127.0
+    err = jnp.abs(compression.dequantize(compression.quantize(x, scale),
+                                         scale) - x)
+    assert float(err.max()) <= float(scale) / 2 + 1e-7
+
+
+def test_compressed_allreduce_with_error_feedback():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32))[None]}
+    e = jax.tree.map(jnp.zeros_like, g)
+    total_err = jnp.zeros(())
+    # error feedback: averaged over steps the bias must shrink
+    acc = jnp.zeros((1, 64))
+    for _ in range(8):
+        mean, e = compression.compressed_allreduce(mesh, g, e, "data")
+        acc = acc + mean["w"]
+    avg = acc / 8
+    assert float(jnp.abs(avg - g["w"]).max()) < 2e-3
+
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as td:
+        tree = {"a": np.arange(6).reshape(2, 3),
+                "n": {"b": np.float32(2.5) * np.ones(4)}}
+        w = C.AsyncCheckpointer(td, keep=2)
+        for s in (5, 10, 15):
+            w.save(tree, s, extra={"step": s})
+        w.wait()
+        assert C.latest_step(td) == 15
+        steps = sorted(os.listdir(td))
+        assert len(steps) == 2              # gc keeps 2
+        back, extra = C.restore(td, tree)
+        assert extra["step"] == 15
+        np.testing.assert_array_equal(back["a"], tree["a"])
+
+
+def test_failover_bit_exact_restart():
+    """Preempted + restarted run must equal the uninterrupted run."""
+
+    def init():
+        return {"w": np.zeros(3), "rngsum": np.zeros(())}
+
+    def step(s, i):
+        rng = np.random.default_rng(i)      # data is a pure fn of step
+        return ({"w": s["w"] + rng.normal(size=3),
+                 "rngsum": s["rngsum"] + i}, {})
+
+    with tempfile.TemporaryDirectory() as td:
+        clean = F.run_resilient(init_state=init, train_step=step,
+                                total_steps=25, ckpt_dir=td, ckpt_every=5)
+    with tempfile.TemporaryDirectory() as td:
+        faulty = F.run_resilient(
+            init_state=init, train_step=step, total_steps=25, ckpt_dir=td,
+            ckpt_every=5,
+            fault_plan=F.FaultPlan(preempt_at_steps=(7, 18)))
+    assert faulty.restarts == 2
+    np.testing.assert_allclose(clean.state["w"], faulty.state["w"])
+
+
+def test_fsdpify_idempotent_and_divisible():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    spec = S.fsdpify(P(None, "model"), (1024, 512), mesh)
+    again = S.fsdpify(spec, (1024, 512), mesh)
+    assert spec == again
+
+
+def test_lm_param_specs_cover_tree():
+    from repro.configs import base as cfgbase
+    from repro.models import transformer as T
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = cfgbase.get("mixtral-8x22b").smoke_config()
+    params = cfgbase.abstract_tree(T.init_params(cfg, abstract=True))
+    specs = S.lm_param_specs(params, mesh)
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert isinstance(s, P)
+        assert len(s) <= len(p.shape)
+
+
+def test_elastic_reshard_roundtrip():
+    from repro.distrib import elastic
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tree = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
+    with tempfile.TemporaryDirectory() as td:
+        C.save(td, tree, 1)
+        back, _ = elastic.restore_elastic(
+            td, tree, mesh, lambda t, m: {"w": P(None, None)})
+        np.testing.assert_array_equal(np.asarray(back["w"]), tree["w"])
+
+
+def test_bucketize_partition():
+    pred = np.array([0, 2, 2, 1, 9, 0, 0])
+    buckets = bucketing.bucketize(pred, 9, pad_multiple=4)
+    seen = np.concatenate([b["idx"] for b in buckets.values()])
+    assert sorted(seen) == list(range(7))
+    for b in buckets.values():
+        assert len(b["pad_idx"]) % 4 == 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=40))
+def test_scatter_back_inverts_bucketize(classes):
+    pred = np.array(classes)
+    buckets = bucketing.bucketize(pred, 9, pad_multiple=4)
+    results = {c: np.asarray(b["pad_idx"], np.int64)[:, None]
+               for c, b in buckets.items()}
+    out = bucketing.scatter_back(len(pred), buckets, results)
+    np.testing.assert_array_equal(out[:, 0], np.arange(len(pred)))
