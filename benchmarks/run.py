@@ -8,7 +8,8 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_kernels, paper_tables, roofline
+    from benchmarks import bench_kernels, bench_serving, paper_tables, \
+        roofline
 
     benches = [
         paper_tables.bench_table3,
@@ -23,6 +24,8 @@ def main() -> None:
         bench_kernels.bench_kernels,
         bench_kernels.bench_cascade_latency,
         bench_kernels.bench_serving,
+        bench_serving.bench_dynamic_vs_fixed,
+        bench_serving.bench_compile_amortization,
         roofline.bench_roofline,
     ]
     print("name,us_per_call,derived")

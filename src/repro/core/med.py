@@ -29,6 +29,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "rank_in",
@@ -60,16 +61,21 @@ def rank_in(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 
 def rbp_weights(depth: int, p: float) -> jnp.ndarray:
-    """RBP positional weights (1-p) * p^i for i in [0, depth)."""
-    i = jnp.arange(depth, dtype=jnp.float32)
-    return (1.0 - p) * jnp.power(p, i)
+    """RBP positional weights (1-p) * p^i for i in [0, depth).
+
+    Computed host-side in float64 and embedded as a constant: both lists'
+    weight tables must be *bit-identical* prefixes of the same series, or
+    XLA's independently-fused power computations leave ~1e-9 residue and
+    break the MED(A, A) = 0 identity."""
+    i = np.arange(depth, dtype=np.float64)
+    return jnp.asarray(((1.0 - p) * np.power(p, i)).astype(np.float32))
 
 
 def dcg_weights(depth: int, eval_depth: int) -> jnp.ndarray:
     """DCG positional weights 1/log2(i+2), zero past the evaluation depth."""
-    i = jnp.arange(depth, dtype=jnp.float32)
-    w = 1.0 / jnp.log2(i + 2.0)
-    return jnp.where(i < eval_depth, w, 0.0)
+    i = np.arange(depth, dtype=np.float64)
+    w = 1.0 / np.log2(i + 2.0)
+    return jnp.asarray(np.where(i < eval_depth, w, 0.0).astype(np.float32))
 
 
 def _one_sided(a: jnp.ndarray, b: jnp.ndarray, w_a: jnp.ndarray,

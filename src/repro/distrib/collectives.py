@@ -45,10 +45,10 @@ def sharded_topk(mesh: Mesh, scores: jnp.ndarray, k: int,
         return vv, gg
 
     out_spec = P(None, None)
-    f = jax.shard_map(
+    from repro.distrib.sharding import compat_shard_map
+    f = compat_shard_map(
         local, mesh=mesh,
         in_specs=P(None, axis),
         out_specs=(out_spec, out_spec),
-        check_vma=False,
     )
     return f(scores)

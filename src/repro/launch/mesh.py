@@ -11,7 +11,7 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
-import jax
+from repro.distrib.sharding import make_compat_mesh
 
 __all__ = ["make_production_mesh", "make_smoke_mesh", "HW"]
 
@@ -25,16 +25,12 @@ HW = {
 }
 
 
-def _axis_types(n):
-    return (jax.sharding.AxisType.Auto,) * n
-
-
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_axis_types(len(axes)))
+    return make_compat_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_axis_types(2))
+    return make_compat_mesh((1, 1), ("data", "model"))

@@ -151,11 +151,11 @@ def moe_ffn_shard_map(params: dict, x: jnp.ndarray, cfg: MoEConfig, mesh):
 
     ep_spec = P(ep_axes if len(ep_axes) > 1 else ep_axes[0], None, None)
     tok_spec = P(axes if len(axes) > 1 else axes[0], None)
-    f = jax.shard_map(
+    from repro.distrib.sharding import compat_shard_map
+    f = compat_shard_map(
         local, mesh=mesh,
         in_specs=(ep_spec, ep_spec, ep_spec, P(None, None), tok_spec),
         out_specs=(tok_spec, P()),
-        check_vma=False,
     )
     y, aux = f(params["w_gate"], params["w_up"], params["w_down"],
                params["router"], x)

@@ -73,11 +73,11 @@ def compressed_allreduce(mesh, grads: Any, errors: Any, axis: str = "data"):
         return (jax.tree.map(lambda a: a[None], mean),
                 jax.tree.map(lambda a: a[None], new_e))
 
-    f = jax.shard_map(
+    from repro.distrib.sharding import compat_shard_map
+    f = compat_shard_map(
         body,
         mesh=mesh,
         in_specs=(spec_tree, spec_tree),
         out_specs=(spec_tree, spec_tree),
-        check_vma=False,
     )
     return f(grads, errors)

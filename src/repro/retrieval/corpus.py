@@ -121,7 +121,8 @@ def make_queries(corpus: Corpus, n_queries: int = 40_000, max_len: int = 5,
     flat = rng.choice(band, size=int(lengths.sum()), p=w).astype(np.int32)
     pos = 0
     for i, L in enumerate(lengths):
-        terms[i, :L] = np.unique(flat[pos:pos + L])[:L]
+        u = np.unique(flat[pos:pos + L])   # may dedupe to fewer than L
+        terms[i, :len(u)] = u
         lengths[i] = np.count_nonzero(terms[i] >= 0)
         pos += L
     return QueryLog(terms=terms, lengths=lengths.astype(np.int32), seed=seed)

@@ -24,7 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["gather_streams", "saat_scores", "rank_from_scores", "saat_rank"]
+__all__ = ["gather_streams", "saat_scores", "saat_scores_masked",
+           "rank_from_scores", "saat_rank"]
 
 
 @functools.partial(jax.jit, static_argnames=("cap",))
@@ -69,6 +70,37 @@ def saat_scores(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray,
         return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(contrib)
 
     return jax.vmap(one)(doc_stream, impact_stream)
+
+
+def saat_scores_masked(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray,
+                       rho_vec: jnp.ndarray, n_docs: int, *,
+                       use_kernel: bool = False,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Accumulate the first ``rho_vec[q]`` postings of each query's stream.
+
+    The single-dispatch serving engine's form of ``saat_scores``: rho is a
+    *traced* (Q,) vector, so one executable serves every rho bucket — the
+    per-query truncation becomes a contribution mask instead of a static
+    stream length.  With a constant rho_vec this computes bit-identical
+    accumulators to ``saat_scores`` (same mask, same scatter-add).
+
+    ``use_kernel`` routes the accumulation through the Pallas
+    ``impact_scan`` kernel (the TPU path; rho enters pre-masked so the
+    kernel runs at full stream length with zeroed tails).
+    """
+    p = doc_stream.shape[-1]
+    mask = ((jnp.arange(p)[None, :] < rho_vec[:, None])
+            & (doc_stream >= 0))
+    contrib = jnp.where(mask, impact_stream, 0.0)
+    if use_kernel:
+        from repro.kernels.impact_scan import ops as is_ops
+        return is_ops.saat_accumulate(doc_stream, contrib, n_docs=n_docs,
+                                      rho=p, interpret=interpret)
+
+    def one(docs, c):
+        return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(c)
+
+    return jax.vmap(one)(doc_stream, contrib)
 
 
 @functools.partial(jax.jit, static_argnames=("depth",))

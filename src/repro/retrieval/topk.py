@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.retrieval import jass
 
-__all__ = ["candidates_topk", "exhaustive_scores"]
+__all__ = ["candidates_topk", "exhaustive_scores", "select_pool"]
 
 
 def exhaustive_scores(doc_stream, impact_stream, n_docs: int) -> jnp.ndarray:
@@ -33,3 +33,20 @@ def candidates_topk(doc_stream, impact_stream, n_docs: int,
     -1 padded where fewer than k documents match any query term."""
     scores = exhaustive_scores(doc_stream, impact_stream, n_docs)
     return jass.rank_from_scores(scores, k)
+
+
+def select_pool(scores: jnp.ndarray, depth: int, *,
+                use_kernel: bool = False,
+                interpret: bool = True) -> jnp.ndarray:
+    """Top-``depth`` doc ids of dense (Q, N) scores, -1 where the score is
+    not positive — ``jass.rank_from_scores`` semantics, optionally routed
+    through the Pallas blocked top-k kernel (``kernels/topk``) on TPU.
+
+    Both paths break ties toward the lower doc id, so kernel and oracle
+    select identical pools.
+    """
+    if use_kernel:
+        from repro.kernels.topk import ops as tk_ops
+        vals, idxs = tk_ops.topk_select(scores, depth, interpret=interpret)
+        return jnp.where(vals > 0, idxs, -1).astype(jnp.int32)
+    return jass.rank_from_scores(scores, depth)

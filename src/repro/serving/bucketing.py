@@ -1,17 +1,39 @@
 """Class-bucketed batching: dynamic per-query parameters on static shapes.
 
 The cascade predicts one of c ordinal classes per query; each class is a
-*static* parameter setting (k or rho).  TPU executables want static
-shapes, so the server groups queries by predicted class and runs one
-fixed-shape program per bucket (DESIGN.md §3) — the cascade's
-discreteness is exactly what makes per-query dynamism TPU-compatible.
+*static* parameter setting (k or rho).  ``bucketize``/``scatter_back``
+implement the original per-bucket execution model (one fixed-shape
+program per class), kept as the reference path the single-dispatch
+engine (serving/engine.py) is tested against.  ``pad_length``/``pad_rows``
+are the whole-batch padding grid that engine compiles for: the predicted
+parameter rides along as data, so only the padded batch shape — never the
+class census — decides which executable runs.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["bucketize", "scatter_back"]
+__all__ = ["bucketize", "scatter_back", "pad_length", "pad_rows"]
+
+
+def pad_length(n: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` >= n (the padded-batch grid the
+    single-dispatch engine compiles for)."""
+    return n + (-n) % multiple
+
+
+def pad_rows(arr: np.ndarray, multiple: int, fill) -> np.ndarray:
+    """Pad axis 0 of ``arr`` to the pad grid with constant ``fill`` rows.
+
+    Fill rows are inert downstream: -1 query terms gather no postings and
+    rank to all -1; the engine slices padding off before returning."""
+    arr = np.asarray(arr)
+    pad = pad_length(arr.shape[0], multiple) - arr.shape[0]
+    if pad == 0:
+        return arr
+    width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, width, constant_values=fill)
 
 
 def bucketize(pred_class: np.ndarray, n_classes: int,
@@ -28,7 +50,7 @@ def bucketize(pred_class: np.ndarray, n_classes: int,
         if len(idx) == 0:
             continue
         m = len(idx)
-        pad = (-m) % pad_multiple
+        pad = pad_length(m, pad_multiple) - m
         pad_idx = np.concatenate([idx, np.repeat(idx[-1:], pad)])
         out[int(c)] = {"idx": idx, "pad_idx": pad_idx}
     return out

@@ -1,0 +1,210 @@
+"""Single-dispatch bucketed serving engine.
+
+The seed server ran stages 1-3 once *per class bucket*: every distinct
+predicted k/rho value re-gathered the posting streams, re-materialized the
+(Q, n_docs) stage-2 accumulators, and compiled a fresh XLA executable
+(static rho / static pool width).  That makes the dynamic-parameter
+machinery scale with the number of live buckets — the opposite of the
+paper's efficiency argument (cf. Mackenzie et al., arXiv:1704.03970:
+bucketed execution only pays when per-bucket overhead is amortized).
+
+This engine issues a *constant* number of dispatches per batch:
+
+  gather   — posting streams + stage-2 score streams, once per batch
+  stage1   — accumulate with a traced (Q,) rho mask (all rho buckets in
+             one executable) and select the candidate pool at a static
+             max-k, masked per query by a traced pool-width vector (all k
+             buckets in one executable)
+  stage2   — dense per-scorer accumulators + second-stage scores
+  rerank   — final list from the per-query pool
+
+The predicted parameter enters every stage as *data* (a traced vector),
+never as a static argument, so the executable count is O(1) per padded
+batch shape instead of O(unique predicted params).  Executables are
+AOT-compiled and cached keyed by input shapes; ``warmup`` pre-compiles
+the configured pad-multiple grid at server init.  ``n_compiles`` is the
+jit-cache probe the compile-count regression test reads.
+
+Kernel routing: on TPU, accumulation goes through the Pallas
+``impact_scan`` kernel and pool selection through ``kernels/topk``
+(``use_kernel=None`` auto-detects); elsewhere the jnp oracles run, which
+are bit-identical to the per-bucket reference path
+(``pipeline.serve_batch_reference``).
+
+One deliberate behavior change vs the seed: stage-2 noise qids are the
+query's batch position everywhere.  The seed's per-bucket path restarted
+qids at 0 inside each bucket, so the same query drew *different* stage-2
+noise in the dynamic vs fixed paths (and depending on its bucket's
+composition); both paths now score a given query identically, and the
+reference path was updated to match.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval import gold, jass
+from repro.retrieval import topk as topk_lib
+from repro.serving import bucketing
+
+__all__ = ["ServingEngine"]
+
+
+# --------------------------------------------------------------- stages --
+# Module-level so the engine's AOT cache keys stay stable; static config
+# enters via functools.partial, per-query parameters stay traced.
+
+def _stage_gather(offsets, pdoc, pimp, pscore, qt, *, cap: int):
+    ds, im = jass.gather_streams(offsets, pdoc, pimp, qt, cap=cap)
+    sdocs, s3 = jass.gather_score_streams(offsets, pdoc, pscore, qt,
+                                          cap=cap)
+    return ds, im, sdocs, s3
+
+
+def _stage1_rho(ds, im, rho_vec, *, n_docs: int, depth: int,
+                use_kernel: bool, interpret: bool):
+    acc = jass.saat_scores_masked(ds, im, rho_vec, n_docs,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+    return topk_lib.select_pool(acc, depth, use_kernel=use_kernel,
+                                interpret=interpret)
+
+
+def _stage1_k(ds, im, k_vec, *, n_docs: int, max_k: int,
+              use_kernel: bool, interpret: bool):
+    # exhaustive stage-1 scores (rho = P), one shared max-k selection;
+    # the per-query pool width is a traced mask over the shared pool
+    full = jnp.full(ds.shape[:1], ds.shape[-1], jnp.int32)
+    acc = jass.saat_scores_masked(ds, im, full, n_docs,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret)
+    pool = topk_lib.select_pool(acc, max_k, use_kernel=use_kernel,
+                                interpret=interpret)
+    keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
+    return jnp.where(keep, pool, -1)
+
+
+def _stage2(sdocs, s3, doc_len, qids, *, n_docs: int):
+    a_bm25, a_lm, a_tfidf = jass.scorer_accumulators(sdocs, s3, n_docs)
+    return gold.second_stage_scores(a_bm25, a_lm, a_tfidf, doc_len, qids)
+
+
+def _stage_rerank(stage2, pool, *, depth: int):
+    return gold.rerank_pool(stage2, pool, depth)
+
+
+class ServingEngine:
+    """Owns the AOT executable cache and the staged batch-once pipeline.
+
+    ``serve(query_terms, param_vec)`` runs the four stages over the whole
+    (padded) batch and returns (ranked, per-stage timings).
+    """
+
+    def __init__(self, index, cfg, *, use_kernel: bool | None = None):
+        self.cfg = cfg
+        on_tpu = jax.default_backend() == "tpu"
+        self.use_kernel = on_tpu if use_kernel is None else use_kernel
+        self.interpret = not on_tpu
+        self.offsets = jnp.asarray(index.offsets)
+        self.pdoc = jnp.asarray(index.postings_doc)
+        self.pimp = jnp.asarray(index.postings_impact.astype(np.float32))
+        self.pscore = jnp.asarray(index.postings_score)
+        self.doc_len = jnp.asarray(index.corpus.doc_len)
+        self.n_docs = index.corpus.n_docs
+        self.max_k = int(max(cfg.cutoffs))
+        self._cache: dict = {}
+        self.n_compiles = 0
+
+        self._kern = dict(use_kernel=self.use_kernel,
+                          interpret=self.interpret)
+        self._gather = functools.partial(_stage_gather,
+                                         cap=cfg.stream_cap)
+        self._stage2 = functools.partial(_stage2, n_docs=self.n_docs)
+        self._rerank = functools.partial(_stage_rerank,
+                                         depth=cfg.rerank_depth)
+
+    def _stage1_for(self, pool_width: int):
+        """stage1 fn + cache name for a given static pool width (the
+        shared executable uses ``max_k``; serve_fixed may request wider)."""
+        if self.cfg.knob == "rho":
+            return ("stage1", functools.partial(
+                _stage1_rho, n_docs=self.n_docs,
+                depth=self.cfg.rerank_depth, **self._kern))
+        return (f"stage1:{pool_width}", functools.partial(
+            _stage1_k, n_docs=self.n_docs, max_k=pool_width,
+            **self._kern))
+
+    # ------------------------------------------------------ exec cache --
+    def _compiled(self, name: str, fn, args):
+        """Shape-keyed AOT cache lookup; compiles on miss."""
+        key = (name,) + tuple((a.shape, str(a.dtype)) for a in args)
+        exe = self._cache.get(key)
+        if exe is None:
+            exe = jax.jit(fn).lower(*args).compile()
+            self._cache[key] = exe
+            self.n_compiles += 1
+        return exe
+
+    def padded_batch(self, n: int) -> int:
+        return bucketing.pad_length(n, self.cfg.pad_multiple)
+
+    # --------------------------------------------------------- serving --
+    def serve(self, query_terms: np.ndarray, param_vec: np.ndarray,
+              pool_width: int | None = None):
+        """Batch-once pipeline.  param_vec: (n,) predicted k or rho.
+
+        ``pool_width`` (k knob only) overrides the shared pool's static
+        width — serve_fixed uses it to honor fixed params beyond the
+        cutoff grid with a dedicated executable instead of a silent clamp.
+
+        Returns (ranked (n, rerank_depth) np.ndarray, timings dict in ms).
+        """
+        n, qlen = query_terms.shape
+        qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
+                                self.cfg.pad_multiple, fill=-1)
+        pv = bucketing.pad_rows(np.asarray(param_vec, np.int32),
+                                self.cfg.pad_multiple, fill=1)
+        qids = np.arange(qt.shape[0], dtype=np.int32)
+
+        timings = {}
+
+        def timed(label, name, fn, *a):
+            # compile (cold shapes only) outside the timed region so the
+            # per-stage numbers report steady-state latency, not XLA
+            a = tuple(jnp.asarray(x) for x in a)
+            exe = self._compiled(name, fn, a)
+            t0 = time.perf_counter()
+            out = exe(*a)
+            jax.block_until_ready(out)
+            timings[label] = (time.perf_counter() - t0) * 1e3
+            return out
+
+        s1_name, s1_fn = self._stage1_for(int(pool_width or self.max_k))
+        ds, im, sdocs, s3 = timed(
+            "gather_ms", "gather", self._gather,
+            self.offsets, self.pdoc, self.pimp, self.pscore, qt)
+        pool = timed("stage1_ms", s1_name, s1_fn, ds, im, pv)
+        stage2 = timed("stage2_ms", "stage2", self._stage2,
+                       sdocs, s3, self.doc_len, qids)
+        ranked = timed("rerank_ms", "rerank", self._rerank, stage2, pool)
+        ranked = np.asarray(ranked)[:n]
+        if ranked.shape[1] < self.cfg.rerank_depth:  # pool narrower than
+            pad = self.cfg.rerank_depth - ranked.shape[1]  # the final list
+            ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
+        return ranked, timings
+
+    def warmup(self, batch_sizes, query_len: int) -> int:
+        """Pre-compile the pipeline for each padded batch size in
+        ``batch_sizes`` (the configured pad-multiple grid).  Returns the
+        number of executables compiled."""
+        before = self.n_compiles
+        for b in sorted({self.padded_batch(int(b)) for b in batch_sizes}):
+            qt = np.full((b, query_len), -1, np.int32)
+            pv = np.ones(b, np.int32)
+            self.serve(qt, pv)
+        return self.n_compiles - before

@@ -16,6 +16,7 @@ framework never changes — only the two stages and the feature extractor.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -46,12 +47,21 @@ class FunnelConfig:
 def request_features(user_feats: jnp.ndarray,
                      hist_items: jnp.ndarray) -> jnp.ndarray:
     """Static pre-retrieval request features (the Table-1/2 analog):
-    user-vector stats + history-length/diversity stats."""
+    user-vector stats + history-length/diversity stats.
+
+    History diversity (distinct non-padding items) is computed by a
+    sorted-adjacent-unique count rather than a per-row Python ``set()``
+    loop, so the whole extractor is jittable and batch-scalable."""
     uf = user_feats.astype(jnp.float32)
     mask = (hist_items >= 0).astype(jnp.float32)
     hl = jnp.sum(mask, axis=1, keepdims=True)
-    hdiv = jnp.asarray([[len(set(np.asarray(r).tolist()) - {-1})]
-                        for r in hist_items], jnp.float32)
+    # distinct items >= 0: after an ascending sort the -1 padding leads,
+    # and each distinct value contributes exactly one "first occurrence"
+    srt = jnp.sort(hist_items, axis=1)
+    first = srt[:, :1] >= 0
+    fresh = (srt[:, 1:] != srt[:, :-1]) & (srt[:, 1:] >= 0)
+    hdiv = jnp.sum(jnp.concatenate([first, fresh], axis=1)
+                   .astype(jnp.float32), axis=1, keepdims=True)
     feats = jnp.concatenate([
         uf,
         jnp.mean(uf, 1, keepdims=True), jnp.std(uf, 1, keepdims=True),
@@ -62,7 +72,8 @@ def request_features(user_feats: jnp.ndarray,
 
 
 def _bst_scores(bst_params, bst_cfg, hist_items, cand: jnp.ndarray,
-                stage1: jnp.ndarray, bst_weight: float = 0.3):
+                stage1: jnp.ndarray, bst_weight: float = 0.3,
+                norm_width: jnp.ndarray | None = None):
     """Stage-2 scores of each candidate item for each request.
 
     As in production funnels, the stage-1 retrieval score is a stage-2
@@ -71,9 +82,15 @@ def _bst_scores(bst_params, bst_cfg, hist_items, cand: jnp.ndarray,
     the pool can satisfy any envelope (measured — see examples/
     recsys_funnel.py).
 
-    cand: (B, P) item ids (-1 padded); stage1: (B, P) -> (B, P) scores."""
+    cand: (B, P) item ids (-1 padded); stage1: (B, P) -> (B, P) scores.
+    ``norm_width`` (B,) restricts each request's min-max normalization to
+    its own top-``norm_width`` prefix — required when a shared pool is
+    wider than a request's predicted k, or the request's ranking would
+    depend on the widest k co-batched with it."""
+    if norm_width is None:
+        norm_width = jnp.full(cand.shape[:1], cand.shape[-1], jnp.int32)
 
-    def one(hist, items, s1):
+    def one(hist, items, s1, nw):
         b = items.shape[0]
         batch = {
             "hist_items": jnp.broadcast_to(hist, (b, hist.shape[0])),
@@ -81,7 +98,9 @@ def _bst_scores(bst_params, bst_cfg, hist_items, cand: jnp.ndarray,
             "profile": jnp.zeros((b, bst_cfg.n_profile), jnp.float32),
         }
         s = BS.bst_logits(bst_params, bst_cfg, batch)
-        lo, hi = jnp.min(s1), jnp.max(s1)
+        prefix = jnp.arange(b) < nw
+        lo = jnp.min(jnp.where(prefix, s1, jnp.inf))
+        hi = jnp.max(jnp.where(prefix, s1, -jnp.inf))
         s1n = (s1 - lo) / jnp.maximum(hi - lo, 1e-9)
         # richer histories give the behavioral model more say — this is
         # what makes the optimal k *request-dependent* (long-history
@@ -91,7 +110,7 @@ def _bst_scores(bst_params, bst_cfg, hist_items, cand: jnp.ndarray,
         total = s1n + w * jnp.tanh(s)
         return jnp.where(items >= 0, total, -jnp.inf)
 
-    return jax.vmap(one)(hist_items, cand, stage1)
+    return jax.vmap(one)(hist_items, cand, stage1, norm_width)
 
 
 def funnel_gold_runs(cfg: FunnelConfig, tower_params, bst_params,
@@ -121,6 +140,34 @@ def label_requests(cfg: FunnelConfig, gold, runs) -> np.ndarray:
     return np.asarray(labeling.envelope_labels(table, cfg.tau)), table
 
 
+@functools.partial(jax.jit, static_argnames=("tower_cfg", "bst_cfg",
+                                             "max_k", "eval_depth"))
+def _serve_single_dispatch(tower_params, bst_params, user_feats,
+                           hist_items, k_vec, *, tower_cfg, bst_cfg,
+                           max_k: int, eval_depth: int):
+    """Batch-once funnel serving: run the towers and the stage-2 model
+    once at a static shared pool width; the predicted per-request k is a
+    traced prefix mask over that shared pool, so every k bucket in the
+    batch is served by this one executable.
+
+    ``max_k`` is the largest *predicted* cutoff in the batch (not the
+    global maximum), so stage-2 compute still scales with what the
+    cascade asked for; the executable count stays bounded by the cutoff
+    grid instead of growing with distinct per-batch class combinations.
+    Each request's stage-1 normalization spans only its own k prefix
+    (norm_width), so its ranking is independent of batch composition."""
+    ids, vals = RT.retrieve_topk(tower_params, tower_cfg, user_feats,
+                                 max_k)
+    s2 = _bst_scores(bst_params, bst_cfg, hist_items, ids, vals,
+                     norm_width=k_vec)
+    masked = jnp.where(jnp.arange(max_k)[None, :] < k_vec[:, None],
+                       s2, -jnp.inf)
+    order = jnp.argsort(-masked, axis=1)[:, :eval_depth]
+    ranked = jnp.take_along_axis(ids, order, axis=1)
+    live = jnp.take_along_axis(masked, order, axis=1) > -jnp.inf
+    return jnp.where(live, ranked, -1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class Funnel:
     cfg: FunnelConfig
@@ -135,17 +182,14 @@ class Funnel:
             self.cascade, feats, self.threshold))
         ks = np.array(self.cfg.cutoffs)[
             np.minimum(classes, len(self.cfg.cutoffs) - 1)]
+        ranked = np.asarray(_serve_single_dispatch(
+            self.tower_params, self.bst_params,
+            jnp.asarray(user_feats), jnp.asarray(hist_items),
+            jnp.asarray(ks, jnp.int32),
+            tower_cfg=self.cfg.tower, bst_cfg=self.cfg.bst,
+            max_k=int(ks.max()),
+            eval_depth=self.cfg.eval_depth))
         out = np.full((user_feats.shape[0], self.cfg.eval_depth), -1,
                       np.int32)
-        # bucketed by predicted k (static shapes per bucket)
-        for k in np.unique(ks):
-            sel = np.flatnonzero(ks == k)
-            ids, vals = RT.retrieve_topk(self.tower_params, self.cfg.tower,
-                                         user_feats[sel], int(k))
-            s2 = _bst_scores(self.bst_params, self.cfg.bst,
-                             hist_items[sel], ids, vals)
-            order = jnp.argsort(-s2, axis=1)[:, :self.cfg.eval_depth]
-            ranked = np.asarray(jnp.take_along_axis(ids, order, axis=1))
-            w = min(self.cfg.eval_depth, ranked.shape[1])
-            out[sel, :w] = ranked[:, :w]
+        out[:, :ranked.shape[1]] = ranked[:, :self.cfg.eval_depth]
         return {"ranked": out, "k": ks, "mean_k": float(ks.mean())}

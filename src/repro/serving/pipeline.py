@@ -4,21 +4,28 @@ End-to-end serving path (paper Figure 1 + our cascade in front):
 
     query -> static features (core.features, precomputed term stats)
           -> LR cascade -> predicted class (a k or rho bucket)
-          -> bucketed candidate generation (topk.k or jass.rho per class)
+          -> single-dispatch candidate generation (traced per-query k/rho)
           -> feature extraction (per-candidate stage-2 features)
           -> second-stage reranker -> final ranked list
 
-Everything after the class prediction runs per class bucket with static
-shapes (serving/bucketing.py).  ``serve_batch`` also returns the latency
-accounting the paper's efficiency claims are stated in: postings scored
-(rho semantics) and candidate-pool width (k semantics — the rerank cost
-driver).
+Everything after the class prediction runs through the batch-once
+single-dispatch engine (serving/engine.py): streams and stage-2
+accumulators are gathered once per batch, and the predicted parameter is
+a traced vector, so the executable count is constant regardless of how
+many distinct classes the cascade predicts.  ``serve_batch_reference``
+keeps the original per-bucket execution model for equivalence testing.
+
+``serve_batch`` returns the latency accounting the paper's efficiency
+claims are stated in: postings scored (rho semantics), candidate-pool
+width (k semantics — the rerank cost driver), and per-stage wall-clock.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,6 +33,7 @@ from repro.core import cascade as cascade_lib
 from repro.core import features as feat_lib
 from repro.retrieval import gold, jass
 from repro.serving import bucketing
+from repro.serving.engine import ServingEngine
 
 __all__ = ["ServingConfig", "RetrievalServer"]
 
@@ -38,39 +46,113 @@ class ServingConfig:
     rerank_depth: int = 100        # final list depth
     stream_cap: int = 4096         # postings stream length P
     pad_multiple: int = 8
+    use_kernel: bool | None = None  # None: Pallas on TPU, jnp oracle else
 
 
 class RetrievalServer:
     """Owns the index-derived arrays + trained cascade; serves batches."""
 
     def __init__(self, index, casc: cascade_lib.Cascade,
-                 cfg: ServingConfig):
+                 cfg: ServingConfig, *,
+                 warmup_batch_sizes: tuple[int, ...] = (),
+                 warmup_query_len: int = 0):
         self.index = index
         self.cascade = casc
         self.cfg = cfg
         self.stats = jnp.asarray(index.term_stats.stats)
         self.ctf = jnp.asarray(index.term_stats.ctf)
         self.df = jnp.asarray(index.term_stats.df)
-        self.offsets = jnp.asarray(index.offsets)
-        self.pdoc = jnp.asarray(index.postings_doc)
-        self.pimp = jnp.asarray(index.postings_impact.astype(np.float32))
-        self.pscore = jnp.asarray(index.postings_score)
         self.n_docs = index.corpus.n_docs
+        # the engine owns the device copies of the postings arrays; the
+        # reference path reads them from there (they dominate memory)
+        self.engine = ServingEngine(index, cfg, use_kernel=cfg.use_kernel)
+        self._predict_fn = None
+        if warmup_batch_sizes and warmup_query_len:
+            self.engine.warmup(warmup_batch_sizes, warmup_query_len)
+            if casc is not None:   # pre-compile the fused predict too
+                for b in sorted({self.engine.padded_batch(int(x))
+                                 for x in warmup_batch_sizes}):
+                    self.predict_classes(
+                        np.full((b, warmup_query_len), -1, np.int32))
 
     # stage 0: prediction ------------------------------------------------
     def predict_classes(self, query_terms: np.ndarray) -> np.ndarray:
-        x = feat_lib.query_features(jnp.asarray(query_terms), self.stats,
-                                    self.ctf, self.df)
-        return np.asarray(
-            cascade_lib.predict_batched(self.cascade, x,
-                                        self.cfg.threshold))
+        """Featurize + cascade, fused into one jitted executable.
 
-    # stages 1-3 per bucket ----------------------------------------------
-    def _serve_bucket(self, query_terms: np.ndarray, param: int):
-        """Candidate generation + feature extraction + rerank for one
-        static parameter setting.  Returns (ranked, width)."""
+        Run eagerly the cascade is hundreds of small forest ops and
+        dominates batch latency; jitted it is the negligible overhead the
+        paper claims.  Queries are padded to the engine's batch grid so
+        the prediction executable count matches the engine's: one per
+        padded shape."""
+        n = query_terms.shape[0]
+        qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
+                                self.cfg.pad_multiple, fill=-1)
+        if self._predict_fn is None:
+            def _predict(q):
+                x = feat_lib.query_features(q, self.stats, self.ctf,
+                                            self.df)
+                return cascade_lib.predict_batched(self.cascade, x,
+                                                   self.cfg.threshold)
+            self._predict_fn = jax.jit(_predict)
+        return np.asarray(self._predict_fn(jnp.asarray(qt)))[:n]
+
+    def _params_of(self, classes: np.ndarray) -> np.ndarray:
+        cuts = np.asarray(self.cfg.cutoffs)
+        p = cuts[np.minimum(classes, len(cuts) - 1)]
+        if self.cfg.knob == "rho":
+            p = np.minimum(p, self.cfg.stream_cap)
+        return p.astype(np.int64)
+
+    def serve_batch(self, query_terms: np.ndarray) -> dict:
+        """Full dynamic pipeline over a query batch, single-dispatch."""
+        t0 = time.perf_counter()
+        classes = self.predict_classes(query_terms)
+        predict_ms = (time.perf_counter() - t0) * 1e3
+        widths = self._params_of(classes)
+        ranked, timings = self.engine.serve(query_terms, widths)
+        timings["predict_ms"] = predict_ms
+        timings["total_ms"] = (time.perf_counter() - t0) * 1e3
+        return {
+            "ranked": ranked,
+            "classes": classes,
+            "mean_param": float(widths.mean()),
+            "widths": widths.astype(np.float64),
+            "timings": timings,
+            "n_compiles": self.engine.n_compiles,
+        }
+
+    def serve_fixed(self, query_terms: np.ndarray, param: int) -> dict:
+        """Fixed-global-parameter baseline (the tradeoff horizon) — same
+        engine, constant parameter vector, so it shares executables with
+        the dynamic path."""
+        t0 = time.perf_counter()
+        n = query_terms.shape[0]
+        pool_width = None
+        if self.cfg.knob == "rho":
+            param = min(param, self.cfg.stream_cap)
+        elif param > self.engine.max_k:
+            # wider than the shared pool: request a dedicated executable
+            # at this width rather than silently truncating the pool
+            pool_width = param
+        widths = np.full(n, param, np.int64)
+        ranked, timings = self.engine.serve(query_terms, widths,
+                                            pool_width=pool_width)
+        timings["predict_ms"] = 0.0
+        timings["total_ms"] = (time.perf_counter() - t0) * 1e3
+        return {"ranked": ranked, "mean_param": float(param),
+                "widths": widths.astype(np.float64), "timings": timings,
+                "n_compiles": self.engine.n_compiles}
+
+    # ------------------------------------------- reference (per-bucket) --
+    def _serve_bucket(self, query_terms: np.ndarray, param: int,
+                      qids: np.ndarray):
+        """Original per-bucket path: candidate generation + feature
+        extraction + rerank at one static parameter setting.  Re-gathers
+        streams and re-materializes the stage-2 accumulators per call —
+        kept as the equivalence oracle for the engine."""
         qt = jnp.asarray(query_terms)
-        ds, im = jass.gather_streams(self.offsets, self.pdoc, self.pimp,
+        eng = self.engine
+        ds, im = jass.gather_streams(eng.offsets, eng.pdoc, eng.pimp,
                                      qt, cap=self.cfg.stream_cap)
         if self.cfg.knob == "rho":
             rho = min(param, self.cfg.stream_cap)
@@ -81,17 +163,14 @@ class RetrievalServer:
             acc = jass.saat_scores(ds, im, self.n_docs, ds.shape[-1])
             pool = jass.rank_from_scores(acc, param)
             width = param
-        # feature extraction: stage-2 features (the per-candidate cost the
-        # paper's k knob controls) + the second-stage model
-        qids = jnp.arange(qt.shape[0])
         sdocs, s3 = jass.gather_score_streams(
-            self.offsets, self.pdoc, self.pscore, qt,
+            eng.offsets, eng.pdoc, eng.pscore, qt,
             cap=self.cfg.stream_cap)
         a_bm25, a_lm, a_tfidf = jass.scorer_accumulators(
             sdocs, s3, self.n_docs)
         stage2 = gold.second_stage_scores(
             a_bm25, a_lm, a_tfidf,
-            jnp.asarray(self.index.corpus.doc_len), qids)
+            jnp.asarray(self.index.corpus.doc_len), jnp.asarray(qids))
         ranked = np.asarray(
             gold.rerank_pool(stage2, pool, self.cfg.rerank_depth))
         if ranked.shape[1] < self.cfg.rerank_depth:   # pool narrower than
@@ -99,8 +178,9 @@ class RetrievalServer:
             ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
         return ranked, width
 
-    def serve_batch(self, query_terms: np.ndarray) -> dict:
-        """Full dynamic pipeline over a query batch."""
+    def serve_batch_reference(self, query_terms: np.ndarray) -> dict:
+        """Per-bucket execution model (one static-shape program per
+        predicted class) — O(unique classes) dispatches and compiles."""
         n = query_terms.shape[0]
         classes = self.predict_classes(query_terms)
         buckets = bucketing.bucketize(classes, len(self.cfg.cutoffs),
@@ -109,7 +189,7 @@ class RetrievalServer:
         for c, b in buckets.items():
             param = self.cfg.cutoffs[min(c, len(self.cfg.cutoffs) - 1)]
             ranked, width = self._serve_bucket(query_terms[b["pad_idx"]],
-                                               int(param))
+                                               int(param), b["pad_idx"])
             results[c] = ranked
             widths[b["idx"]] = width
         ranked_all = bucketing.scatter_back(n, buckets, results)
@@ -119,9 +199,3 @@ class RetrievalServer:
             "mean_param": float(widths.mean()),
             "widths": widths,
         }
-
-    def serve_fixed(self, query_terms: np.ndarray, param: int) -> dict:
-        """Fixed-global-parameter baseline (the tradeoff horizon)."""
-        ranked, width = self._serve_bucket(query_terms, param)
-        return {"ranked": ranked, "mean_param": float(width),
-                "widths": np.full(query_terms.shape[0], width)}

@@ -26,6 +26,8 @@ class ServerStats:
     mean_param: float
     class_histogram: np.ndarray
     pct_in_envelope: float | None
+    stage_ms: dict | None = None        # mean per-stage wall-clock
+    n_compiles: int | None = None       # engine executable-cache size
 
     @property
     def p50_ms(self) -> float:
@@ -38,9 +40,16 @@ class ServerStats:
     def summary(self) -> str:
         env = (f" in-envelope={self.pct_in_envelope:.1%}"
                if self.pct_in_envelope is not None else "")
+        stages = ""
+        if self.stage_ms:
+            stages = " " + " ".join(
+                f"{k.removesuffix('_ms')}={v:.1f}ms"
+                for k, v in self.stage_ms.items())
+        comp = (f" compiles={self.n_compiles}"
+                if self.n_compiles is not None else "")
         return (f"q={self.n_queries} p50={self.p50_ms:.1f}ms "
                 f"p99={self.p99_ms:.1f}ms mean_param={self.mean_param:.0f}"
-                + env)
+                + env + stages + comp)
 
 
 def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
@@ -49,7 +58,7 @@ def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
     """Run the dynamic pipeline over a query stream in micro-batches."""
     n = query_terms.shape[0]
     lat, params, classes_all = [], [], []
-    compliant = []
+    compliant, stage_rows = [], []
     for w in range(warmup):
         server.serve_batch(query_terms[:batch])
     for lo in range(0, n - batch + 1, batch):
@@ -59,10 +68,16 @@ def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
         lat.append((time.perf_counter() - t0) * 1e3)
         params.append(out["widths"])
         classes_all.append(out["classes"])
+        if out.get("timings"):
+            stage_rows.append(out["timings"])
         if med_table is not None:
             compliant.append(tradeoff.pct_under_target(
                 med_table[lo:lo + batch], out["classes"], tau))
     classes = np.concatenate(classes_all)
+    stage_ms = None
+    if stage_rows:
+        stage_ms = {k: float(np.mean([r[k] for r in stage_rows]))
+                    for k in stage_rows[0]}
     return ServerStats(
         n_queries=len(classes),
         latencies_ms=lat,
@@ -70,4 +85,7 @@ def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
         class_histogram=np.bincount(
             classes, minlength=len(server.cfg.cutoffs) + 1),
         pct_in_envelope=float(np.mean(compliant)) if compliant else None,
+        stage_ms=stage_ms,
+        n_compiles=getattr(getattr(server, "engine", None),
+                           "n_compiles", None),
     )

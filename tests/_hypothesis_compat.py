@@ -1,0 +1,89 @@
+"""Import-or-stub shim for ``hypothesis``.
+
+Test modules import ``given``/``settings``/``st`` from here instead of
+from ``hypothesis`` directly, so collection never hard-fails when the
+package is absent (CI installs the pinned requirements-dev.txt; bare
+containers fall back to this shim).
+
+The fallback is a deterministic miniature of the hypothesis API surface
+these tests use: each ``@given`` test runs ``max_examples`` times on
+samples drawn from a seeded RNG — weaker than real property search, but
+the properties still execute instead of the module failing to import.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import functools
+    import inspect
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value=0, max_value=(2 ** 31 - 1)):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: bool(r.getrandbits(1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False, **_kw):
+            def sample(r):
+                n = r.randint(min_size, max_size)
+                if not unique:
+                    return [elements.sample(r) for _ in range(n)]
+                out: list = []
+                seen: set = set()
+                # bounded rejection sampling; small discrete domains may
+                # yield fewer than n elements, which hypothesis also allows
+                for _ in range(50 * max(n, 1)):
+                    v = elements.sample(r)
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                    if len(out) == n:
+                        break
+                return out
+            return _Strategy(sample)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run(*args, **kw):
+                n = getattr(run, "_compat_max_examples", 10)
+                rng = random.Random(1234)
+                for _ in range(n):
+                    fn(*args, *(s.sample(rng) for s in strategies), **kw)
+            # hide the strategy-filled parameters from pytest's fixture
+            # resolution (hypothesis does the same via its own signature)
+            del run.__wrapped__
+            run.__signature__ = inspect.Signature()
+            return run
+        return deco
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -15,9 +15,9 @@ _SCRIPT = textwrap.dedent("""
     from repro.models import moe as M
     from repro.distrib import hints as H
     from repro.distrib.collectives import sharded_topk
+    from repro.distrib.sharding import make_compat_mesh
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_compat_mesh((2, 2), ("data", "model"))
 
     # --- shard_map MoE == GSPMD MoE (fwd + grad) ---
     cfg_g = M.MoEConfig(n_experts=8, top_k=2, d_ff_expert=16,
@@ -49,8 +49,7 @@ _SCRIPT = textwrap.dedent("""
 
     # --- compressed all-reduce across real shards ---
     from repro.optim import compression
-    mesh1 = jax.make_mesh((4,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+    mesh1 = make_compat_mesh((4,), ("data",))
     g4 = {"w": jnp.asarray(np.random.default_rng(2)
                            .normal(size=(4, 128)).astype(np.float32))}
     e4 = jax.tree.map(jnp.zeros_like, g4)

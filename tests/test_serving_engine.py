@@ -1,0 +1,133 @@
+"""Single-dispatch serving engine: equivalence with the per-bucket
+reference path, constant compile count as class diversity grows, and
+scatter_back/padding round-trips."""
+
+import numpy as np
+import pytest
+
+from repro.core import experiment as E
+from repro.serving import bucketing
+from repro.serving import pipeline as serve_lib
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    return E.build_system(E.ExperimentConfig(
+        n_docs=400, vocab=900, n_queries=40, stream_cap=128,
+        pool_depth=100, gold_depth=50, query_batch=16, seed=21))
+
+
+def _server(sys_, knob, cutoffs, **cfg_kw):
+    """Server with a stubbed predictor — engine behavior is independent of
+    how classes are produced, so tests control them directly."""
+    cfg = serve_lib.ServingConfig(
+        knob=knob, cutoffs=cutoffs, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap, **cfg_kw)
+    return serve_lib.RetrievalServer(sys_.index, None, cfg)
+
+
+def _stub_classes(server, classes):
+    server.predict_classes = lambda qt, c=np.asarray(classes): c
+
+
+# ------------------------------------------------------- equivalence (a) --
+
+@pytest.mark.parametrize("knob", ["k", "rho"])
+def test_single_dispatch_bit_identical_to_reference(small_system, knob):
+    sys_ = small_system
+    cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+    server = _server(sys_, knob, cuts)
+    n = 20                               # deliberately not a pad multiple
+    classes = np.arange(n) % (len(cuts) + 1)   # every bucket live
+    _stub_classes(server, classes)
+    qt = sys_.queries.terms[:n]
+    dyn = server.serve_batch(qt)
+    ref = server.serve_batch_reference(qt)
+    np.testing.assert_array_equal(dyn["ranked"], ref["ranked"])
+    np.testing.assert_array_equal(dyn["widths"], ref["widths"])
+    assert dyn["mean_param"] == ref["mean_param"]
+
+
+def test_fixed_path_matches_reference_single_bucket(small_system):
+    """serve_fixed == the reference path with every query in one bucket."""
+    sys_ = small_system
+    server = _server(sys_, "k", sys_.k_cutoffs)
+    _stub_classes(server, np.full(16, 2))
+    qt = sys_.queries.terms[:16]
+    fixed = server.serve_fixed(qt, int(sys_.k_cutoffs[2]))
+    ref = server.serve_batch_reference(qt)
+    np.testing.assert_array_equal(fixed["ranked"], ref["ranked"])
+
+
+# ------------------------------------------------------ compile count (b) --
+
+def test_compile_count_constant_in_class_diversity(small_system):
+    sys_ = small_system
+    cuts = sys_.k_cutoffs
+    server = _server(sys_, "k", cuts)
+    qt = sys_.queries.terms[:24]
+    _stub_classes(server, np.zeros(24, np.int64))
+    server.serve_batch(qt)               # compile for this padded shape
+    base = server.engine.n_compiles
+    assert base > 0
+    for n_distinct in (1, 2, 4, len(cuts) + 1):
+        _stub_classes(server, np.arange(24) % n_distinct)
+        out = server.serve_batch(qt)
+        assert out["n_compiles"] == base, (
+            f"recompiled at {n_distinct} distinct classes")
+    # the fixed baseline rides the same executables
+    server.serve_fixed(qt, int(cuts[-1]))
+    assert server.engine.n_compiles == base
+
+
+def test_warmup_precompiles_pad_grid(small_system):
+    sys_ = small_system
+    server = _server(sys_, "k", sys_.k_cutoffs)
+    qlen = sys_.queries.terms.shape[1]
+    compiled = server.engine.warmup([8, 16, 24], qlen)
+    assert compiled == server.engine.n_compiles > 0
+    before = server.engine.n_compiles
+    for n in (5, 8, 13, 16, 23):         # all land on warmed shapes
+        _stub_classes(server, np.arange(n) % 3)
+        server.serve_batch(sys_.queries.terms[:n])
+    assert server.engine.n_compiles == before
+
+
+# ----------------------------------------------- scatter_back/padding (c) --
+
+def test_scatter_back_round_trips_under_padding():
+    rng = np.random.default_rng(0)
+    n, depth, n_classes, pad_multiple = 37, 5, 4, 8
+    classes = rng.integers(0, n_classes + 1, n)
+    ranked = rng.integers(0, 1000, (n, depth)).astype(np.int32)
+    buckets = bucketing.bucketize(classes, n_classes, pad_multiple)
+    assert all(len(b["pad_idx"]) % pad_multiple == 0
+               for b in buckets.values())
+    per_bucket = {c: ranked[b["pad_idx"]] for c, b in buckets.items()}
+    out = bucketing.scatter_back(n, buckets, per_bucket)
+    np.testing.assert_array_equal(out, ranked)
+
+
+def test_pad_rows_grid_and_inertness():
+    a = np.arange(10, dtype=np.int32).reshape(5, 2)
+    p = bucketing.pad_rows(a, 8, fill=-1)
+    assert p.shape == (8, 2)
+    np.testing.assert_array_equal(p[:5], a)
+    assert (p[5:] == -1).all()
+    assert bucketing.pad_rows(p, 8, fill=-1) is p      # already on grid
+    assert bucketing.pad_length(0, 8) == 0
+    assert bucketing.pad_length(9, 8) == 16
+
+
+# --------------------------------------------------------------- timings --
+
+def test_serve_batch_reports_stage_timings(small_system):
+    sys_ = small_system
+    server = _server(sys_, "rho", sys_.rho_cutoffs)
+    _stub_classes(server, np.arange(8) % 3)
+    out = server.serve_batch(sys_.queries.terms[:8])
+    t = out["timings"]
+    for key in ("predict_ms", "gather_ms", "stage1_ms", "stage2_ms",
+                "rerank_ms", "total_ms"):
+        assert key in t and t[key] >= 0.0
+    assert t["total_ms"] >= t["gather_ms"]

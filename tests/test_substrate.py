@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.ckpt import checkpoint as C
@@ -56,8 +55,7 @@ def test_quantize_roundtrip_bound():
 
 
 def test_compressed_allreduce_with_error_feedback():
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = S.make_compat_mesh((1,), ("data",))
     g = {"w": jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32))[None]}
     e = jax.tree.map(jnp.zeros_like, g)
     total_err = jnp.zeros(())
@@ -110,8 +108,7 @@ def test_failover_bit_exact_restart():
 
 
 def test_fsdpify_idempotent_and_divisible():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = S.make_compat_mesh((1, 1), ("data", "model"))
     spec = S.fsdpify(P(None, "model"), (1024, 512), mesh)
     again = S.fsdpify(spec, (1024, 512), mesh)
     assert spec == again
@@ -121,8 +118,7 @@ def test_lm_param_specs_cover_tree():
     from repro.configs import base as cfgbase
     from repro.models import transformer as T
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = S.make_compat_mesh((1, 1), ("data", "model"))
     cfg = cfgbase.get("mixtral-8x22b").smoke_config()
     params = cfgbase.abstract_tree(T.init_params(cfg, abstract=True))
     specs = S.lm_param_specs(params, mesh)
@@ -137,8 +133,7 @@ def test_lm_param_specs_cover_tree():
 def test_elastic_reshard_roundtrip():
     from repro.distrib import elastic
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = S.make_compat_mesh((1, 1), ("data", "model"))
     tree = {"w": np.arange(16, dtype=np.float32).reshape(4, 4)}
     with tempfile.TemporaryDirectory() as td:
         C.save(td, tree, 1)
