@@ -1,4 +1,5 @@
-"""Serving benchmarks: dynamic vs fixed wall-clock under single dispatch.
+"""Serving benchmarks: dynamic vs fixed wall-clock under single dispatch,
+plus the async admission path (RetrievalService) end to end.
 
 The honest comparison the paper's efficiency claim needs: the dynamic
 path (cascade prediction + traced per-query parameter) must not cost more
@@ -6,13 +7,26 @@ wall-clock than serving everyone at the fixed maximum parameter.  With
 the single-dispatch engine both paths share the same executables, so the
 dynamic overhead is exactly the cascade forward pass — reported here as
 per-stage timings plus the executable-cache size (compile count).
+
+Machine-readable output: every run (``python benchmarks/bench_serving.py``
+or via ``benchmarks/run.py``) writes ``artifacts/BENCH_serving.json``
+with p50/p99, the queue-delay vs service-time breakdown, per-stage ms,
+compile count, and the dynamic-vs-fixed speedup, so the perf trajectory
+is tracked across PRs.  ``--smoke`` runs the tiny scale for CI.
 """
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
 import time
 
 import numpy as np
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                          "BENCH_serving.json")
 
 
 def _build_server():
@@ -88,3 +102,122 @@ def bench_compile_amortization() -> list[tuple]:
         ("serving/per_bucket_reference_128q", ref_s / 128 * 1e6,
          f"{n_buckets}_live_buckets"),
     ]
+
+
+def bench_admission_service() -> list[tuple]:
+    """The unified async path: deadline-driven admission end to end.
+
+    Feeds a query stream through RetrievalService (threaded: prediction
+    for batch N+1 overlapping dispatch of batch N) and reports request
+    latency percentiles with the queue-vs-service breakdown the
+    deployment loop tunes deadlines against.
+    """
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import EngineBackend, RetrievalService
+
+    sys_, server = _build_server()
+    n_stream = min(512, sys_.queries.n_queries)
+    qt = sys_.queries.terms[:n_stream]
+    backend = EngineBackend(server, query_len=qt.shape[1])
+    service = RetrievalService(backend, AdmissionConfig(
+        max_batch=128, pad_multiple=server.cfg.pad_multiple,
+        max_wait_ms=2.0, default_deadline_ms=100.0))
+    service.warmup_now([128])             # deploy-time shape
+    with service:
+        service.serve_all(list(qt[:128]))     # cascade jit warmup
+        t0 = time.time()
+        results = service.serve_all(list(qt))
+        wall_s = time.time() - t0
+    # total_ms spans submit -> resolve (incl. the predict/execute handoff
+    # wait), the same clock deadline_met is judged against
+    lat = [r["total_ms"] for r in results]
+    met = np.mean([r["deadline_met"] for r in results])
+    return [
+        ("serving/admission_request_p50_ms", float(np.percentile(lat, 50)),
+         f"{n_stream}q_stream"),
+        ("serving/admission_request_p99_ms", float(np.percentile(lat, 99)),
+         f"deadline_met={met:.0%}"),
+        ("serving/admission_queue_p50_ms",
+         float(np.percentile([r["queue_ms"] for r in results], 50)),
+         "admission delay"),
+        ("serving/admission_service_p50_ms",
+         float(np.percentile([r["service_ms"] for r in results], 50)),
+         "backend execute"),
+        ("serving/admission_throughput_qps", n_stream / wall_s,
+         f"shapes={sorted(service.queue.shape_counts)}"),
+        ("serving/admission_warmed_shapes", len(service.warmup.compiled),
+         "learned warmup policy"),
+    ]
+
+
+# ----------------------------------------------------------- JSON output --
+
+def payload_from_rows(rows: list[tuple]) -> dict:
+    """Distill the serving rows into the cross-PR trajectory record."""
+    by_name = {name: (val, derived) for name, val, derived in rows}
+
+    def val(name):
+        return float(by_name[name][0]) if name in by_name else None
+
+    stage_ms = {
+        name.removeprefix("serving/stage_").removesuffix("_us"):
+            float(v) / 1e3
+        for name, (v, _) in by_name.items()
+        if name.startswith("serving/stage_")}
+    ratio = val("serving/dynamic_vs_fixed_ratio")
+    n_compiles = val("serving/executable_cache")
+    return {
+        "p50_ms": val("serving/admission_request_p50_ms"),
+        "p99_ms": val("serving/admission_request_p99_ms"),
+        "queue_p50_ms": val("serving/admission_queue_p50_ms"),
+        "service_p50_ms": val("serving/admission_service_p50_ms"),
+        "throughput_qps": val("serving/admission_throughput_qps"),
+        "stage_ms": stage_ms,
+        "n_compiles": None if n_compiles is None else int(n_compiles),
+        "dynamic_vs_fixed_ratio": ratio,
+        "dynamic_vs_fixed_speedup": None if not ratio else 1.0 / ratio,
+        "rows": [[name, float(v), str(d)] for name, v, d in rows],
+    }
+
+
+def write_bench_json(rows: list[tuple], path: str | None = None) -> str:
+    from benchmarks import common
+    path = path or os.environ.get("REPRO_BENCH_JSON", BENCH_JSON)
+    payload = payload_from_rows(rows)
+    payload["scale"] = common.scale_name()
+    payload["unix_time"] = time.time()
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return os.path.abspath(path)
+
+
+BENCHES = [bench_dynamic_vs_fixed, bench_compile_amortization,
+           bench_admission_service]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale, interpret mode (CI)")
+    ap.add_argument("--out", default=None,
+                    help=f"JSON output path (default {BENCH_JSON})")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SCALE"] = "tiny"
+
+    print("name,us_per_call,derived")
+    rows: list[tuple] = []
+    for b in BENCHES:
+        for row in b():
+            rows.append(row)
+            name, v, derived = row
+            print(f"{name},{v:.1f},{derived}", flush=True)
+    path = write_bench_json(rows, args.out)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -26,18 +26,26 @@ def main() -> None:
         bench_kernels.bench_serving,
         bench_serving.bench_dynamic_vs_fixed,
         bench_serving.bench_compile_amortization,
+        bench_serving.bench_admission_service,
         roofline.bench_roofline,
     ]
     print("name,us_per_call,derived")
     failures = 0
+    serving_rows = []
     for b in benches:
         try:
-            for name, us, derived in b():
+            for row in b():
+                name, us, derived = row
+                if name.startswith("serving/"):
+                    serving_rows.append(row)
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception:
             failures += 1
             print(f"{b.__name__},nan,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
+    if serving_rows:   # the cross-PR perf trajectory record
+        path = bench_serving.write_bench_json(serving_rows)
+        print(f"wrote {path}", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benchmark(s) failed")
 

@@ -1,9 +1,12 @@
-"""End-to-end multi-stage serving with dynamic trade-off prediction.
+"""End-to-end multi-stage serving through the unified RetrievalService.
 
-Spins up the full runtime: featurizer -> LR cascade -> class-bucketed
-candidate generation (k or rho knob) -> feature extraction -> second-stage
-rerank, then compares dynamic vs fixed-parameter serving on throughput,
-mean parameter, and early-precision agreement.
+Spins up the full runtime: featurizer -> LR cascade -> single-dispatch
+candidate generation (k or rho knob) -> feature extraction -> second-
+stage rerank, behind the async front door: per-request deadlines, a
+deadline-ordered admission queue over the pad grid, prediction/dispatch
+overlap, and the learned warmup policy.  Compares dynamic vs fixed-
+parameter serving on throughput, mean parameter, and early-precision
+agreement.
 
 Run:  PYTHONPATH=src python examples/serve_retrieval.py [--knob rho]
 """
@@ -17,6 +20,8 @@ from repro.core import cascade as cascade_lib
 from repro.core import experiment as E
 from repro.core import labeling
 from repro.serving import pipeline as sp
+from repro.serving.admission import AdmissionConfig
+from repro.serving.service import EngineBackend, RetrievalService
 
 
 def main() -> None:
@@ -24,6 +29,7 @@ def main() -> None:
     ap.add_argument("--knob", default="k", choices=["k", "rho"])
     ap.add_argument("--tau", type=float, default=0.05)
     ap.add_argument("--threshold", type=float, default=0.75)
+    ap.add_argument("--deadline-ms", type=float, default=200.0)
     args = ap.parse_args()
 
     sys_ = E.build_system(E.ExperimentConfig(
@@ -45,37 +51,48 @@ def main() -> None:
     server = sp.RetrievalServer(
         sys_.index, casc, sp.ServingConfig(
             knob=args.knob, cutoffs=cutoffs, threshold=args.threshold,
-            rerank_depth=100, stream_cap=sys_.cfg.stream_cap),
-        warmup_batch_sizes=(256,),
-        warmup_query_len=sys_.queries.terms.shape[1])
+            rerank_depth=100, stream_cap=sys_.cfg.stream_cap))
+    backend = EngineBackend(server,
+                            query_len=sys_.queries.terms.shape[1])
+    service = RetrievalService(backend, AdmissionConfig(
+        max_batch=256, default_deadline_ms=args.deadline_ms,
+        pad_multiple=server.cfg.pad_multiple))
+    service.warmup_now([256])             # deploy-time shape
 
     qt = sys_.queries.terms[:256]
-    out = server.serve_batch(qt)              # cascade jit warmup
-    t0 = time.time()
-    out = server.serve_batch(qt)
-    dyn_s = time.time() - t0
+    with service:
+        service.serve_all(list(qt))       # cascade jit warmup
+        service.reset_stats()             # report steady state only
+        t0 = time.time()
+        results = service.serve_all(list(qt))
+        dyn_s = time.time() - t0
+    out_ranked = np.stack([r["ranked"] for r in results])
+
     fixed = server.serve_fixed(qt, cutoffs[-1])
     t0 = time.time()
     fixed = server.serve_fixed(qt, cutoffs[-1])
     fix_s = time.time() - t0
 
     overlap = []
-    for a, b in zip(out["ranked"], fixed["ranked"]):
+    for a, b in zip(out_ranked, fixed["ranked"]):
         sa = {d for d in a[:10] if d >= 0}
         sb = {d for d in b[:10] if d >= 0}
         if sb:
             overlap.append(len(sa & sb) / len(sb))
 
+    stats = service.stats()
+    mean_param = float(np.mean([r["width"] for r in results]))
     print(f"\n{'':<12}{'mean ' + args.knob:>12}{'q/s':>10}")
-    print(f"{'dynamic':<12}{out['mean_param']:>12.0f}{256 / dyn_s:>10.0f}")
+    print(f"{'dynamic':<12}{mean_param:>12.0f}{256 / dyn_s:>10.0f}")
     print(f"{'fixed max':<12}{fixed['mean_param']:>12.0f}"
           f"{256 / fix_s:>10.0f}")
     print(f"\ntop-10 agreement dynamic vs fixed-max: "
-          f"{np.mean(overlap):.2%} (single dispatch, "
-          f"{len(set(out['classes']))} live buckets, "
-          f"{out['n_compiles']} executables)")
-    print("per-stage ms:", {k: round(v, 2)
-                            for k, v in out["timings"].items()})
+          f"{np.mean(overlap):.2%} "
+          f"({len({r['class'] for r in results})} live buckets, "
+          f"{stats.n_compiles} executables)")
+    print("service:", stats.summary())
+    print("shape census:", dict(service.queue.shape_counts),
+          "| warmed:", sorted(service.warmup.compiled))
 
 
 if __name__ == "__main__":

@@ -1,17 +1,22 @@
-"""Serving driver: the multi-stage retrieval system with the cascade in
-front, as a batched request loop.
+"""Serving driver: the multi-stage retrieval system behind the unified
+async RetrievalService front door.
 
   PYTHONPATH=src python -m repro.launch.serve --knob k --batches 8
 
-On a pod the same pipeline shards the candidate universe over 'model' and
-request batches over ('pod','data'); here it runs the CPU-scale system and
-reports per-batch latency, mean parameter, and envelope compliance.
+Requests are submitted one at a time with per-request deadlines; the
+admission queue forms deadline-ordered batches over the pad grid, the
+cascade prediction for batch N+1 overlaps the engine dispatch of batch N,
+and the warmup policy pre-compiles the padded shapes the queue actually
+produces.  On a pod the same service shards the candidate universe over
+'model' and request batches over ('pod','data') inside the backend; here
+it runs the CPU-scale system and reports latency percentiles with the
+queue-delay vs service-time breakdown, mean parameter, and envelope
+compliance.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 import numpy as np
 
@@ -19,6 +24,8 @@ from repro.core import cascade as cascade_lib
 from repro.core import experiment as E
 from repro.core import labeling, tradeoff
 from repro.serving import pipeline as sp
+from repro.serving.admission import AdmissionConfig
+from repro.serving.service import EngineBackend, RetrievalService
 
 
 def main() -> None:
@@ -28,6 +35,7 @@ def main() -> None:
     ap.add_argument("--threshold", type=float, default=0.75)
     ap.add_argument("--batch", type=int, default=128)
     ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--deadline-ms", type=float, default=100.0)
     ap.add_argument("--n-docs", type=int, default=8000)
     ap.add_argument("--n-queries", type=int, default=1024)
     args = ap.parse_args()
@@ -45,24 +53,39 @@ def main() -> None:
     server = sp.RetrievalServer(
         sys_.index, casc, sp.ServingConfig(
             knob=args.knob, cutoffs=cutoffs, threshold=args.threshold,
-            rerank_depth=100, stream_cap=sys_.cfg.stream_cap),
-        warmup_batch_sizes=(args.batch,),
-        warmup_query_len=sys_.queries.terms.shape[1])
+            rerank_depth=100, stream_cap=sys_.cfg.stream_cap))
+    backend = EngineBackend(server,
+                            query_len=sys_.queries.terms.shape[1])
+    service = RetrievalService(backend, AdmissionConfig(
+        max_batch=args.batch, pad_multiple=server.cfg.pad_multiple,
+        default_deadline_ms=args.deadline_ms))
+    service.warmup_now([args.batch])       # deploy-time shape; the
+    # warmup policy keeps compiling whatever shapes admission produces
 
-    print(f"{'batch':>6}{'lat_ms':>9}{'q/s':>8}{'mean_' + args.knob:>10}"
-          f"{'in_envelope':>12}{'stage1_ms':>11}")
     qn = sys_.queries.n_queries
-    for bi in range(args.batches):
-        lo = (bi * args.batch) % max(qn - args.batch, 1)
-        qt = sys_.queries.terms[lo:lo + args.batch]
-        t0 = time.time()
-        out = server.serve_batch(qt)
-        dt = time.time() - t0
-        pct = tradeoff.pct_under_target(
-            med[lo:lo + args.batch], out["classes"], args.tau)
-        print(f"{bi:>6}{dt * 1e3:>9.1f}{args.batch / dt:>8.0f}"
-              f"{out['mean_param']:>10.0f}{pct:>11.1%}"
-              f"{out['timings']['stage1_ms']:>11.1f}")
+    with service:
+        print(f"{'batch':>6}{'p50_ms':>9}{'q/s':>8}"
+              f"{'mean_' + args.knob:>10}{'in_envelope':>12}"
+              f"{'queue_p50':>11}")
+        for bi in range(args.batches):
+            lo = (bi * args.batch) % max(qn - args.batch, 1)
+            qt = sys_.queries.terms[lo:lo + args.batch]
+            results = service.serve_all(list(qt),
+                                        deadline_ms=args.deadline_ms)
+            classes = np.array([r["class"] for r in results])
+            pct = tradeoff.pct_under_target(
+                med[lo:lo + args.batch], classes, args.tau)
+            lat_s = np.mean([r["total_ms"] for r in results]) / 1e3
+            batch_p50 = float(np.percentile(
+                [r["total_ms"] for r in results], 50))
+            print(f"{bi:>6}{batch_p50:>9.1f}"
+                  f"{args.batch / max(lat_s, 1e-9):>8.0f}"
+                  f"{np.mean([r['width'] for r in results]):>10.0f}"
+                  f"{pct:>11.1%}"
+                  f"{np.percentile([r['queue_ms'] for r in results], 50):>10.1f}")
+    print(service.stats().summary())
+    print("warmed shapes:", sorted(service.warmup.compiled),
+          "| shape census:", dict(service.queue.shape_counts))
 
 
 if __name__ == "__main__":

@@ -42,6 +42,7 @@ reference path was updated to match.
 from __future__ import annotations
 
 import functools
+import threading
 import time
 
 import jax
@@ -53,6 +54,15 @@ from repro.retrieval import topk as topk_lib
 from repro.serving import bucketing
 
 __all__ = ["ServingEngine"]
+
+
+class _PendingCompile:
+    """In-flight marker in the executable cache (see ``_compiled``)."""
+
+    def __init__(self):
+        self.ready = threading.Event()
+        self.exe = None
+        self.err: BaseException | None = None
 
 
 # --------------------------------------------------------------- stages --
@@ -118,6 +128,7 @@ class ServingEngine:
         self.n_docs = index.corpus.n_docs
         self.max_k = int(max(cfg.cutoffs))
         self._cache: dict = {}
+        self._cache_lock = threading.Lock()
         self.n_compiles = 0
 
         self._kern = dict(use_kernel=self.use_kernel,
@@ -141,14 +152,41 @@ class ServingEngine:
 
     # ------------------------------------------------------ exec cache --
     def _compiled(self, name: str, fn, args):
-        """Shape-keyed AOT cache lookup; compiles on miss."""
+        """Shape-keyed AOT cache lookup; compiles on miss.
+
+        Thread-safe: the service's background warmup thread compiles
+        concurrently with the exec thread, so a miss installs a pending
+        marker under the lock and exactly one thread compiles each key
+        (others block on its event instead of duplicating the compile or
+        double-counting ``n_compiles``)."""
         key = (name,) + tuple((a.shape, str(a.dtype)) for a in args)
-        exe = self._cache.get(key)
-        if exe is None:
-            exe = jax.jit(fn).lower(*args).compile()
-            self._cache[key] = exe
-            self.n_compiles += 1
-        return exe
+        owner = False
+        with self._cache_lock:
+            entry = self._cache.get(key)
+            if entry is None:
+                entry = self._cache[key] = _PendingCompile()
+                owner = True
+        if isinstance(entry, _PendingCompile):
+            if owner:
+                try:
+                    exe = jax.jit(fn).lower(*args).compile()
+                except BaseException as e:
+                    with self._cache_lock:
+                        self._cache.pop(key, None)
+                    entry.err = e
+                    entry.ready.set()
+                    raise
+                with self._cache_lock:
+                    self._cache[key] = exe
+                    self.n_compiles += 1
+                entry.exe = exe
+                entry.ready.set()
+                return exe
+            entry.ready.wait()
+            if entry.err is not None:
+                raise entry.err
+            return entry.exe
+        return entry
 
     def padded_batch(self, n: int) -> int:
         return bucketing.pad_length(n, self.cfg.pad_multiple)
@@ -198,13 +236,22 @@ class ServingEngine:
             ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
         return ranked, timings
 
+    def warmup_shape(self, batch_size: int, query_len: int) -> int:
+        """Pre-compile the full pipeline for one padded batch size (the
+        unit the learned warmup policy requests).  Returns executables
+        compiled (0 when the shape was already warm)."""
+        before = self.n_compiles
+        b = self.padded_batch(int(batch_size))
+        qt = np.full((b, query_len), -1, np.int32)
+        pv = np.ones(b, np.int32)
+        self.serve(qt, pv)
+        return self.n_compiles - before
+
     def warmup(self, batch_sizes, query_len: int) -> int:
         """Pre-compile the pipeline for each padded batch size in
         ``batch_sizes`` (the configured pad-multiple grid).  Returns the
         number of executables compiled."""
         before = self.n_compiles
         for b in sorted({self.padded_batch(int(b)) for b in batch_sizes}):
-            qt = np.full((b, query_len), -1, np.int32)
-            pv = np.ones(b, np.int32)
-            self.serve(qt, pv)
+            self.warmup_shape(b, query_len)
         return self.n_compiles - before

@@ -176,12 +176,25 @@ class Funnel:
     cascade: cascade_lib.Cascade
     threshold: float = 0.75
 
-    def serve(self, user_feats, hist_items) -> dict:
-        feats = request_features(user_feats, hist_items)
-        classes = np.asarray(cascade_lib.predict_batched(
+    # The predict/execute split is the serving.service.Backend contract:
+    # ``predict`` is the admission-side cascade (overlappable with the
+    # previous batch's dispatch), ``execute`` the stage-1/2 funnel proper.
+
+    def predict(self, user_feats, hist_items) -> np.ndarray:
+        """Pre-retrieval features -> predicted class per request."""
+        feats = request_features(jnp.asarray(user_feats),
+                                 jnp.asarray(hist_items))
+        return np.asarray(cascade_lib.predict_batched(
             self.cascade, feats, self.threshold))
-        ks = np.array(self.cfg.cutoffs)[
+
+    def params_of(self, classes: np.ndarray) -> np.ndarray:
+        return np.array(self.cfg.cutoffs)[
             np.minimum(classes, len(self.cfg.cutoffs) - 1)]
+
+    def execute(self, user_feats, hist_items,
+                classes: np.ndarray) -> dict:
+        """Run the funnel at the predicted per-request depths."""
+        ks = self.params_of(np.asarray(classes))
         ranked = np.asarray(_serve_single_dispatch(
             self.tower_params, self.bst_params,
             jnp.asarray(user_feats), jnp.asarray(hist_items),
@@ -189,7 +202,12 @@ class Funnel:
             tower_cfg=self.cfg.tower, bst_cfg=self.cfg.bst,
             max_k=int(ks.max()),
             eval_depth=self.cfg.eval_depth))
-        out = np.full((user_feats.shape[0], self.cfg.eval_depth), -1,
-                      np.int32)
+        out = np.full((np.asarray(user_feats).shape[0],
+                       self.cfg.eval_depth), -1, np.int32)
         out[:, :ranked.shape[1]] = ranked[:, :self.cfg.eval_depth]
-        return {"ranked": out, "k": ks, "mean_k": float(ks.mean())}
+        return {"ranked": out, "k": ks, "classes": np.asarray(classes),
+                "mean_k": float(ks.mean())}
+
+    def serve(self, user_feats, hist_items) -> dict:
+        return self.execute(user_feats, hist_items,
+                            self.predict(user_feats, hist_items))

@@ -66,7 +66,17 @@ class RetrievalServer:
         # the engine owns the device copies of the postings arrays; the
         # reference path reads them from there (they dominate memory)
         self.engine = ServingEngine(index, cfg, use_kernel=cfg.use_kernel)
+        # built eagerly (jax.jit is lazy until called) so concurrent
+        # predict_classes callers — the service's admit + warmup threads —
+        # never race a lazy init
         self._predict_fn = None
+        if casc is not None:
+            def _predict(q):
+                x = feat_lib.query_features(q, self.stats, self.ctf,
+                                            self.df)
+                return cascade_lib.predict_batched(self.cascade, x,
+                                                   self.cfg.threshold)
+            self._predict_fn = jax.jit(_predict)
         if warmup_batch_sizes and warmup_query_len:
             self.engine.warmup(warmup_batch_sizes, warmup_query_len)
             if casc is not None:   # pre-compile the fused predict too
@@ -87,28 +97,24 @@ class RetrievalServer:
         n = query_terms.shape[0]
         qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
                                 self.cfg.pad_multiple, fill=-1)
-        if self._predict_fn is None:
-            def _predict(q):
-                x = feat_lib.query_features(q, self.stats, self.ctf,
-                                            self.df)
-                return cascade_lib.predict_batched(self.cascade, x,
-                                                   self.cfg.threshold)
-            self._predict_fn = jax.jit(_predict)
         return np.asarray(self._predict_fn(jnp.asarray(qt)))[:n]
 
-    def _params_of(self, classes: np.ndarray) -> np.ndarray:
+    def params_of(self, classes: np.ndarray) -> np.ndarray:
+        """Predicted class -> engine parameter (k or rho) vector."""
         cuts = np.asarray(self.cfg.cutoffs)
         p = cuts[np.minimum(classes, len(cuts) - 1)]
         if self.cfg.knob == "rho":
             p = np.minimum(p, self.cfg.stream_cap)
         return p.astype(np.int64)
 
+    _params_of = params_of            # pre-service-API spelling
+
     def serve_batch(self, query_terms: np.ndarray) -> dict:
         """Full dynamic pipeline over a query batch, single-dispatch."""
         t0 = time.perf_counter()
         classes = self.predict_classes(query_terms)
         predict_ms = (time.perf_counter() - t0) * 1e3
-        widths = self._params_of(classes)
+        widths = self.params_of(classes)
         ranked, timings = self.engine.serve(query_terms, widths)
         timings["predict_ms"] = predict_ms
         timings["total_ms"] = (time.perf_counter() - t0) * 1e3

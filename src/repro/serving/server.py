@@ -1,22 +1,41 @@
-"""Batched serving loop with latency accounting.
+"""Deprecated synchronous front-end, now a shim over RetrievalService.
 
-Wraps serving.pipeline.RetrievalServer in the runtime loop a deployment
-runs: request micro-batching, per-batch latency percentiles, rolling
-envelope compliance against a reference MED table, and the per-class
-bucket census that capacity planning reads.
+``serve_loop`` predates the unified async API (serving/service.py); it is
+kept for one PR as a thin wrapper so existing callers keep working, and
+will be removed.  New code should construct the service directly:
+
+    from repro.serving.service import EngineBackend, RetrievalService
+    service = RetrievalService(EngineBackend(server))
+    results = service.serve_all(query_terms)
+
+``ServerStats`` remains the shared stats surface: the service's
+``stats()`` returns one, now with the queue-delay vs service-time
+breakdown the admission path exposes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 
 import numpy as np
 
 from repro.core import tradeoff
+from repro.serving import bucketing
+from repro.serving.admission import AdmissionConfig
 from repro.serving.pipeline import RetrievalServer
+from repro.serving.service import EngineBackend, RetrievalService
 
 __all__ = ["ServerStats", "serve_loop"]
+
+
+def _pct(xs, q: float) -> float:
+    """Percentile that degrades to nan on an empty sample instead of
+    raising — an idle server has no latency, not a crash."""
+    xs = np.asarray(xs, np.float64)
+    if xs.size == 0:
+        return float("nan")
+    return float(np.percentile(xs, q))
 
 
 @dataclasses.dataclass
@@ -28,14 +47,16 @@ class ServerStats:
     pct_in_envelope: float | None
     stage_ms: dict | None = None        # mean per-stage wall-clock
     n_compiles: int | None = None       # engine executable-cache size
+    queue_ms: list | None = None        # per-request admission delay
+    service_ms: list | None = None      # per-batch backend execute time
 
     @property
     def p50_ms(self) -> float:
-        return float(np.percentile(self.latencies_ms, 50))
+        return _pct(self.latencies_ms, 50)
 
     @property
     def p99_ms(self) -> float:
-        return float(np.percentile(self.latencies_ms, 99))
+        return _pct(self.latencies_ms, 99)
 
     def summary(self) -> str:
         env = (f" in-envelope={self.pct_in_envelope:.1%}"
@@ -47,45 +68,46 @@ class ServerStats:
                 for k, v in self.stage_ms.items())
         comp = (f" compiles={self.n_compiles}"
                 if self.n_compiles is not None else "")
+        queue = ""
+        if self.queue_ms is not None:
+            # where a request's latency goes: waiting for admission vs
+            # being served — the breakdown deadline tuning reads
+            queue = (f" queue_p50={_pct(self.queue_ms, 50):.1f}ms"
+                     f" queue_p99={_pct(self.queue_ms, 99):.1f}ms"
+                     f" service_p50={_pct(self.service_ms, 50):.1f}ms")
         return (f"q={self.n_queries} p50={self.p50_ms:.1f}ms "
                 f"p99={self.p99_ms:.1f}ms mean_param={self.mean_param:.0f}"
-                + env + stages + comp)
+                + env + queue + stages + comp)
 
 
 def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
                batch: int = 128, med_table: np.ndarray | None = None,
                tau: float = 0.05, warmup: int = 1) -> ServerStats:
-    """Run the dynamic pipeline over a query stream in micro-batches."""
+    """Deprecated: run the dynamic pipeline over a query stream.
+
+    Thin wrapper over ``RetrievalService`` now; the admission queue forms
+    the micro-batches (max_batch = ``batch``), and the trailing partial
+    batch is served padded instead of silently dropped, so ``n_queries``
+    counts every query in the stream.
+    """
+    warnings.warn(
+        "serve_loop is deprecated; use serving.service.RetrievalService "
+        "with an EngineBackend", DeprecationWarning, stacklevel=2)
     n = query_terms.shape[0]
-    lat, params, classes_all = [], [], []
-    compliant, stage_rows = [], []
-    for w in range(warmup):
-        server.serve_batch(query_terms[:batch])
-    for lo in range(0, n - batch + 1, batch):
-        qt = query_terms[lo:lo + batch]
-        t0 = time.perf_counter()
-        out = server.serve_batch(qt)
-        lat.append((time.perf_counter() - t0) * 1e3)
-        params.append(out["widths"])
-        classes_all.append(out["classes"])
-        if out.get("timings"):
-            stage_rows.append(out["timings"])
-        if med_table is not None:
-            compliant.append(tradeoff.pct_under_target(
-                med_table[lo:lo + batch], out["classes"], tau))
-    classes = np.concatenate(classes_all)
-    stage_ms = None
-    if stage_rows:
-        stage_ms = {k: float(np.mean([r[k] for r in stage_rows]))
-                    for k in stage_rows[0]}
-    return ServerStats(
-        n_queries=len(classes),
-        latencies_ms=lat,
-        mean_param=float(np.concatenate(params).mean()),
-        class_histogram=np.bincount(
-            classes, minlength=len(server.cfg.cutoffs) + 1),
-        pct_in_envelope=float(np.mean(compliant)) if compliant else None,
-        stage_ms=stage_ms,
-        n_compiles=getattr(getattr(server, "engine", None),
-                           "n_compiles", None),
-    )
+    backend = EngineBackend(server, query_len=query_terms.shape[1])
+    service = RetrievalService(backend, AdmissionConfig(
+        max_batch=batch, pad_multiple=server.cfg.pad_multiple))
+    for _ in range(warmup):
+        server.serve_batch(query_terms[:min(batch, n)])
+    # submit the stream in arrival order; equal deadlines keep FIFO, so
+    # batches are exactly the contiguous micro-batches (plus the tail)
+    results = service.serve_all(list(query_terms))
+    classes = np.array([r["class"] for r in results])
+    stats = service.stats()
+    stats.pct_in_envelope = None
+    if med_table is not None:
+        compliant = [
+            tradeoff.pct_under_target(med_table[lo:hi], classes[lo:hi], tau)
+            for lo, hi in bucketing.batch_slices(n, batch)]
+        stats.pct_in_envelope = float(np.mean(compliant))
+    return stats

@@ -1,0 +1,592 @@
+"""Unified async serving API: one RetrievalService over pluggable backends.
+
+The repo grew two parallel serving front-ends — the text-retrieval
+``pipeline.RetrievalServer`` + ``server.serve_loop`` and the recsys
+``funnel.Funnel`` — each with its own batch loop, stats, and warmup
+convention.  This module replaces both front doors with one
+request/response API:
+
+    service = RetrievalService(EngineBackend(server))
+    with service:
+        fut = service.submit(query_row, deadline_ms=50.0)
+        out = fut.result()          # {"ranked": ..., "queue_ms": ..., ...}
+
+* **Admission** (serving/admission.py): requests carry deadlines; the
+  queue forms batches by deadline and max-batch-size over the engine's
+  pad grid and returns per-request futures.
+* **Backends**: anything implementing the small ``Backend`` protocol —
+  ``EngineBackend`` (cascade + single-dispatch engine) and
+  ``FunnelBackend`` (two-tower + BST funnel) ship here; multi-host
+  sharded serving becomes a third backend later, with no service change.
+* **Overlap**: the backend splits into ``predict`` (the admission-side
+  cascade) and ``execute`` (the staged engine dispatch); the service runs
+  them on separate threads connected by a bounded handoff queue, so the
+  cascade prediction for batch N+1 overlaps the engine dispatch of
+  batch N.
+* **Learned warmup** (``WarmupPolicy``): instead of an explicit
+  ``warmup_batch_sizes`` list, the policy watches the admission queue's
+  padded-batch-size census and pre-compiles the most common shapes on a
+  background thread.
+
+``step()`` runs one admission+dispatch cycle inline (no threads) — the
+deterministic mode tests and synchronous callers use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue as queue_lib
+import threading
+import time
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.serving.admission import AdmissionConfig, AdmissionQueue, Batch
+
+__all__ = ["Backend", "EngineBackend", "FunnelBackend", "WarmupPolicy",
+           "RetrievalService"]
+
+
+# ------------------------------------------------------------- backends --
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a workload must provide to be served by RetrievalService.
+
+    ``predict`` is the cheap admission-side stage (the cascade); the
+    service overlaps it with the previous batch's ``execute``.  Both
+    operate on a *collated* batch so the service never inspects payloads.
+    """
+
+    pad_multiple: int
+    n_classes: int                    # cascade classes (histogram width)
+
+    def collate(self, payloads: list):
+        """Stack per-request payload rows into one batch object."""
+        ...
+
+    def predict(self, batch):
+        """Admission-side parameter prediction (cascade forward pass)."""
+        ...
+
+    def execute(self, batch, pred) -> tuple[list[dict], dict]:
+        """Serve the batch at the predicted parameters.  Returns
+        (per-request result dicts, per-stage timings in ms)."""
+        ...
+
+    def warmup_shape(self, padded_size: int) -> int | None:
+        """Pre-compile executables for one padded batch size; returns the
+        number of fresh compiles (0 if already warm), or None when the
+        backend cannot warm yet (e.g. request sizing still unknown) — the
+        policy will retry such shapes later."""
+        ...
+
+    @property
+    def n_compiles(self) -> int | None:
+        """Executable-cache size, when the backend tracks one."""
+        ...
+
+
+class EngineBackend:
+    """Text-retrieval backend: LR cascade + single-dispatch ServingEngine.
+
+    Payload per request: one ``(qlen,)`` int32 query-term row.
+    """
+
+    def __init__(self, server, query_len: int | None = None):
+        self.server = server
+        self.pad_multiple = server.cfg.pad_multiple
+        self.n_classes = len(server.cfg.cutoffs) + 1
+        self.query_len = query_len     # learned from the first batch
+
+    def collate(self, payloads: list) -> np.ndarray:
+        qt = np.stack([np.asarray(p, np.int32) for p in payloads])
+        self.query_len = qt.shape[1]
+        return qt
+
+    def predict(self, qt: np.ndarray) -> np.ndarray:
+        return self.server.predict_classes(qt)
+
+    def execute(self, qt, classes) -> tuple[list[dict], dict]:
+        widths = self.server.params_of(np.asarray(classes))
+        ranked, timings = self.server.engine.serve(qt, widths)
+        results = [
+            {"ranked": ranked[i], "class": int(classes[i]),
+             "width": float(widths[i])}
+            for i in range(qt.shape[0])
+        ]
+        return results, timings
+
+    def warmup_shape(self, padded_size: int) -> int | None:
+        if not self.query_len:
+            return None                # no batch seen yet to size queries
+        n = self.server.engine.warmup_shape(padded_size, self.query_len)
+        if self.server.cascade is not None:
+            self.server.predict_classes(
+                np.full((padded_size, self.query_len), -1, np.int32))
+        return n
+
+    @property
+    def n_compiles(self) -> int | None:
+        return self.server.engine.n_compiles
+
+
+class FunnelBackend:
+    """Recsys-funnel backend: two-tower stage 1 + BST stage 2.
+
+    Payload per request: ``(user_feats_row, hist_items_row)``.  The
+    funnel's single-dispatch executable is shape-keyed, so the backend
+    pads batches to the same grid the admission queue censuses; padding
+    rows (zero features, empty history, class 0) are sliced off before
+    results resolve.
+    """
+
+    def __init__(self, funnel, pad_multiple: int = 8):
+        self.funnel = funnel
+        self.pad_multiple = pad_multiple
+        self.n_classes = len(funnel.cfg.cutoffs) + 1
+        self._warm_shapes: set[int] = set()
+
+    def collate(self, payloads: list):
+        uf = np.stack([np.asarray(p[0], np.float32) for p in payloads])
+        hist = np.stack([np.asarray(p[1], np.int32) for p in payloads])
+        return uf, hist
+
+    def _pad(self, uf, hist, classes=None):
+        from repro.serving import bucketing
+        n = uf.shape[0]
+        uf = bucketing.pad_rows(uf, self.pad_multiple, fill=0.0)
+        hist = bucketing.pad_rows(hist, self.pad_multiple, fill=-1)
+        if classes is not None:
+            classes = bucketing.pad_rows(
+                np.asarray(classes), self.pad_multiple, fill=0)
+        return n, uf, hist, classes
+
+    def predict(self, batch) -> np.ndarray:
+        n, uf, hist, _ = self._pad(*batch)
+        return self.funnel.predict(uf, hist)[:n]
+
+    def execute(self, batch, classes) -> tuple[list[dict], dict]:
+        n, uf, hist, cls = self._pad(*batch, classes)
+        t0 = time.perf_counter()
+        out = self.funnel.execute(uf, hist, cls)
+        timings = {"funnel_ms": (time.perf_counter() - t0) * 1e3}
+        results = [
+            {"ranked": out["ranked"][i], "class": int(classes[i]),
+             "width": float(out["k"][i])}
+            for i in range(n)
+        ]
+        return results, timings
+
+    def warmup_shape(self, padded_size: int) -> int:
+        if padded_size in self._warm_shapes:
+            return 0
+        cfg = self.funnel.cfg
+        uf = np.zeros((padded_size, cfg.tower.d_user_in), np.float32)
+        hist = np.full((padded_size, cfg.bst.seq_len), -1, np.int32)
+        self.funnel.predict(uf, hist)
+        # the funnel executable is additionally static in max_k — the
+        # largest cutoff *predicted in the batch* — so warm every class's
+        # variant, or the first batch predicting a deep pool still
+        # compiles on the serving path
+        classes = np.zeros(padded_size, np.int64)
+        for c in range(len(cfg.cutoffs)):
+            self.funnel.execute(uf, hist, np.full_like(classes, c))
+        self._warm_shapes.add(padded_size)
+        return len(cfg.cutoffs)
+
+    @property
+    def n_compiles(self) -> int | None:
+        return None                    # jit cache owned by jax, not us
+
+
+# --------------------------------------------------------------- warmup --
+
+class WarmupPolicy:
+    """Learned warmup: pre-compile the padded batch shapes the admission
+    queue actually produces, instead of an operator-supplied list.
+
+    ``observe`` feeds the policy one formed batch's padded size; once a
+    shape has been seen ``min_count`` times it is scheduled for
+    compilation (the service's background thread calls ``run``).  At most
+    ``max_shapes`` distinct shapes are ever compiled — the padded grid is
+    discrete, so a handful of shapes covers the mass of the distribution.
+    """
+
+    def __init__(self, min_count: int = 1, max_shapes: int = 8):
+        self.min_count = min_count
+        self.max_shapes = max_shapes
+        self.counts: dict[int, int] = {}
+        self.compiled: set[int] = set()
+        self.failed: dict[int, Exception] = {}
+        self._pending: queue_lib.SimpleQueue = queue_lib.SimpleQueue()
+        self._scheduled: set[int] = set()
+        self._lock = threading.Lock()
+
+    def observe(self, padded_size: int) -> None:
+        with self._lock:
+            self.counts[padded_size] = self.counts.get(padded_size, 0) + 1
+            if (self.counts[padded_size] >= self.min_count
+                    and padded_size not in self._scheduled
+                    and len(self._scheduled) < self.max_shapes):
+                self._scheduled.add(padded_size)
+                self._pending.put(padded_size)
+
+    def top_shapes(self, k: int | None = None) -> list[int]:
+        """Most frequently observed padded sizes, descending."""
+        with self._lock:
+            order = sorted(self.counts, key=lambda s: (-self.counts[s], s))
+        return order[:k or self.max_shapes]
+
+    def run(self, backend: Backend, block: bool = False,
+            timeout: float | None = 0.05) -> int:
+        """Compile scheduled shapes on the calling thread.  Returns the
+        number of shapes compiled this call."""
+        done = 0
+        while True:
+            try:
+                shape = self._pending.get(block=block, timeout=timeout)
+            except queue_lib.Empty:
+                return done
+            if shape in self.compiled:
+                continue
+            try:
+                n = backend.warmup_shape(shape)
+            except Exception as e:     # noqa: BLE001 — warmup must never
+                self.failed[shape] = e  # kill the background thread; the
+                continue               # shape just compiles at serve time
+            if n is None:
+                # backend can't warm yet (e.g. request sizing unknown):
+                # leave it schedulable for a later pass
+                with self._lock:
+                    self._scheduled.discard(shape)
+                continue
+            self.compiled.add(shape)
+            done += 1
+
+    def prewarm(self, backend: Backend, sizes) -> int:
+        """Synchronous explicit warmup (deploy-time / benchmarks)."""
+        from repro.serving import bucketing
+        n = 0
+        for s in sizes:
+            s = bucketing.pad_length(int(s), backend.pad_multiple)
+            if s not in self.compiled:
+                if backend.warmup_shape(s) is None:
+                    continue           # backend can't size this shape yet
+                self.compiled.add(s)
+                with self._lock:
+                    self._scheduled.add(s)
+                n += 1
+        return n
+
+
+# -------------------------------------------------------------- service --
+
+@dataclasses.dataclass
+class _BatchRecord:
+    n: int
+    predict_ms: float
+    service_ms: float
+    queue_ms: list                     # per request: admission delay
+    total_ms: list                     # per request: submit -> resolve
+    timings: dict
+    classes: list
+    widths: list
+
+
+class RetrievalService:
+    """One async request/response front door over any ``Backend``.
+
+    Threaded mode (``start``/``stop`` or context manager): an admission
+    thread forms batches and runs ``backend.predict``; an execution
+    thread runs ``backend.execute`` and resolves futures — so prediction
+    for batch N+1 overlaps dispatch of batch N.  A third daemon thread
+    drains the warmup policy.
+
+    Inline mode: ``step()`` performs one poll→predict→execute cycle on
+    the calling thread (deterministic; used by tests and ``serve_all``
+    when the service is not started).
+    """
+
+    _SENTINEL = object()
+
+    def __init__(self, backend: Backend,
+                 admission: AdmissionConfig | None = None,
+                 warmup: WarmupPolicy | None = None,
+                 handoff_depth: int = 2):
+        if admission is None:
+            admission = AdmissionConfig(pad_multiple=backend.pad_multiple)
+        elif admission.pad_multiple != backend.pad_multiple:
+            # the backend's grid is ground truth: a mismatched census
+            # would warm shapes the engine never pads to
+            admission = dataclasses.replace(
+                admission, pad_multiple=backend.pad_multiple)
+        self.backend = backend
+        self.queue = AdmissionQueue(admission)
+        self.warmup = WarmupPolicy() if warmup is None else warmup
+        self._handoff: queue_lib.Queue = queue_lib.Queue(handoff_depth)
+        self._records: list[_BatchRecord] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Condition()
+        self._gen = 0                  # bumps on submit/flush (lost-wakeup
+        self._stop = threading.Event()  # guard for the admit loop)
+        self._outstanding = 0
+        self._threads: list[threading.Thread] = []
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, payload, deadline_ms: float | None = None):
+        fut = self.queue.submit(payload, deadline_ms)
+        with self._lock:
+            self._outstanding += 1
+        fut.add_done_callback(self._on_done)
+        with self._wake:
+            self._gen += 1
+            self._wake.notify_all()
+        return fut
+
+    def submit_many(self, payloads, deadline_ms: float | None = None):
+        return [self.submit(p, deadline_ms) for p in payloads]
+
+    def flush(self) -> None:
+        """Force the pending set into batches immediately."""
+        self.queue.flush()
+        with self._wake:
+            self._gen += 1
+            self._wake.notify_all()
+
+    def _on_done(self, _fut) -> None:
+        with self._lock:
+            self._outstanding -= 1
+
+    # ------------------------------------------------------------ inline --
+    def step(self, now: float | None = None) -> int:
+        """Run one admission+dispatch cycle inline.  Returns the number
+        of requests served (0 when no batch was ready)."""
+        b = self.queue.poll(now)
+        if b is None:
+            return 0
+        self.warmup.observe(b.padded_size)
+        self._run_batch(b)
+        return len(b)
+
+    def serve_all(self, payloads, deadline_ms: float | None = None,
+                  timeout: float | None = None) -> list[dict]:
+        """Submit a request stream and wait for every result (in
+        submission order).  Uses the worker threads when started, else
+        serves inline."""
+        futs = self.submit_many(payloads, deadline_ms)
+        self.flush()
+        if not self._threads:
+            while self.step():
+                pass
+        return [f.result(timeout) for f in futs]
+
+    # --------------------------------------------------------- execution --
+    def _run_batch(self, b: Batch, pre=None) -> None:
+        try:
+            if pre is None:
+                batch = self.backend.collate(b.payloads)
+                t0 = time.perf_counter()
+                pred = self.backend.predict(batch)
+                predict_ms = (time.perf_counter() - t0) * 1e3
+            else:
+                batch, pred, predict_ms = pre
+            t0 = time.perf_counter()
+            results, timings = self.backend.execute(batch, pred)
+            t_done = time.perf_counter()
+            service_ms = (t_done - t0) * 1e3
+        except Exception as e:                 # noqa: BLE001
+            for r in b.requests:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            return
+        queue_ms = [(b.t_formed - r.t_submit) * 1e3 for r in b.requests]
+        # total spans submit -> results ready, so it also counts the
+        # handoff wait between predict and execute in threaded mode —
+        # the number deadline_met is judged against
+        total_ms = [(t_done - r.t_submit) * 1e3 for r in b.requests]
+        rec = _BatchRecord(
+            n=len(b), predict_ms=predict_ms, service_ms=service_ms,
+            queue_ms=queue_ms, total_ms=total_ms, timings=dict(timings),
+            classes=[res.get("class") for res in results],
+            widths=[res.get("width") for res in results])
+        with self._lock:
+            self._records.append(rec)
+        for req, res, qms, tms in zip(b.requests, results, queue_ms,
+                                      total_ms):
+            res = dict(res)
+            res["queue_ms"] = qms
+            res["predict_ms"] = predict_ms
+            res["service_ms"] = service_ms
+            res["total_ms"] = tms
+            res["deadline_met"] = t_done <= req.deadline
+            if not req.future.done():
+                req.future.set_result(res)
+
+    # ----------------------------------------------------------- threads --
+    def _admit_loop(self) -> None:
+        while not self._stop.is_set():
+            with self._wake:
+                gen0 = self._gen
+            b = self.queue.poll()
+            if b is None:
+                delay = self.queue.next_event(time.perf_counter())
+                with self._wake:
+                    # a submit/flush between poll() and here bumped _gen
+                    # and its notify found no waiter — re-poll instead of
+                    # sleeping on stale state (classic lost wakeup)
+                    if self._gen == gen0:
+                        self._wake.wait(0.05 if delay is None
+                                        else min(delay, 0.05) or 0.0005)
+                continue
+            try:
+                batch = self.backend.collate(b.payloads)
+                # census after collate so the backend can size warmup
+                # queries for shapes the background thread compiles
+                self.warmup.observe(b.padded_size)
+                t0 = time.perf_counter()
+                pred = self.backend.predict(batch)
+                predict_ms = (time.perf_counter() - t0) * 1e3
+                item = (b, (batch, pred, predict_ms))
+            except Exception as e:             # noqa: BLE001
+                for r in b.requests:
+                    if not r.future.done():
+                        r.future.set_exception(e)
+                continue
+            placed = False
+            while not self._stop.is_set():
+                try:
+                    self._handoff.put(item, timeout=0.05)
+                    placed = True
+                    break
+                except queue_lib.Full:
+                    continue
+            if not placed:             # stopped mid-handoff: don't strand
+                for r in b.requests:   # waiters on an unresolved future
+                    r.future.cancel()
+        self._handoff.put((self._SENTINEL, None))
+
+    def _exec_loop(self) -> None:
+        while True:
+            b, pre = self._handoff.get()
+            if b is self._SENTINEL:
+                return
+            self._run_batch(b, pre)
+
+    def _warmup_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.warmup.run(self.backend, block=True, timeout=0.1)
+            except Exception:          # noqa: BLE001 — stay alive; the
+                pass                   # policy records per-shape failures
+
+    def start(self) -> "RetrievalService":
+        if self._threads:
+            return self
+        self._stop.clear()
+        self._threads = [
+            threading.Thread(target=self._admit_loop,
+                             name="svc-admit", daemon=True),
+            threading.Thread(target=self._exec_loop,
+                             name="svc-exec", daemon=True),
+            threading.Thread(target=self._warmup_loop,
+                             name="svc-warmup", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request has resolved."""
+        t_end = None if timeout is None else time.perf_counter() + timeout
+        while True:
+            with self._lock:
+                left = self._outstanding
+            if left == 0:
+                return True
+            if not self._threads:
+                if not self.step():
+                    self.flush()
+            if t_end is not None and time.perf_counter() > t_end:
+                return False
+            if self._threads:
+                time.sleep(0.001)
+
+    def stop(self, drain: bool = True) -> None:
+        if drain:
+            self.flush()
+            self.drain()
+        self._stop.set()
+        with self._wake:
+            self._wake.notify_all()
+        for t in self._threads:
+            t.join(timeout=5.0)
+        self._threads = []
+        if not drain:                  # abort path: resolve, don't strand
+            self.queue.flush()
+            while (b := self.queue.poll()) is not None:
+                for r in b.requests:
+                    r.future.cancel()
+        # drain leftovers (the sentinel, plus — if a join timed out mid-
+        # compile — predicted batches whose waiters must not strand)
+        while not self._handoff.empty():
+            try:
+                item, _ = self._handoff.get_nowait()
+            except queue_lib.Empty:
+                break
+            if item is not self._SENTINEL:
+                for r in item.requests:
+                    r.future.cancel()
+
+    def __enter__(self) -> "RetrievalService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=exc == (None, None, None))
+
+    # ------------------------------------------------------------- stats --
+    def warmup_now(self, sizes) -> int:
+        """Explicit synchronous warmup (deploy-time escape hatch)."""
+        return self.warmup.prewarm(self.backend, sizes)
+
+    def reset_stats(self) -> None:
+        """Drop accumulated batch records (e.g. after a warmup pass, so
+        reported percentiles reflect steady state only)."""
+        with self._lock:
+            self._records.clear()
+
+    def stats(self):
+        """Aggregate service-side accounting into a ServerStats.
+
+        ``latencies_ms`` is *per request*, submit -> resolve (admission
+        delay + predict + handoff + execute), so p50/p99 are true request
+        latency percentiles."""
+        from repro.serving.server import ServerStats
+        with self._lock:
+            recs = list(self._records)
+        lat = [t for r in recs for t in r.total_ms]
+        queue_ms = [q for r in recs for q in r.queue_ms]
+        service_ms = [r.service_ms for r in recs]
+        classes = np.array([c for r in recs for c in r.classes
+                            if c is not None], np.int64)
+        widths = np.array([w for r in recs for w in r.widths
+                           if w is not None], np.float64)
+        stage_ms = None
+        rows = [r.timings for r in recs if r.timings]
+        if rows:
+            keys = set().union(*rows)
+            stage_ms = {k: float(np.mean([r[k] for r in rows if k in r]))
+                        for k in sorted(keys)}
+        return ServerStats(
+            n_queries=int(sum(r.n for r in recs)),
+            latencies_ms=lat,
+            mean_param=float(widths.mean()) if widths.size else float("nan"),
+            class_histogram=np.bincount(
+                classes, minlength=self.backend.n_classes),
+            pct_in_envelope=None,
+            stage_ms=stage_ms,
+            n_compiles=self.backend.n_compiles,
+            queue_ms=queue_ms,
+            service_ms=service_ms,
+        )

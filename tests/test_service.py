@@ -1,0 +1,337 @@
+"""Unified async RetrievalService: deadline-driven admission, futures
+bit-identical to the synchronous serve_batch path, pad-grid round-trips,
+compile count O(1) under mixed batch sizes, the Funnel backend, and the
+ServerStats / serve_loop satellites."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import experiment as E
+from repro.serving import pipeline as serve_lib
+from repro.serving import server as server_lib
+from repro.serving.admission import AdmissionConfig, AdmissionQueue
+from repro.serving.service import (EngineBackend, FunnelBackend,
+                                   RetrievalService, WarmupPolicy)
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    return E.build_system(E.ExperimentConfig(
+        n_docs=400, vocab=900, n_queries=40, stream_cap=128,
+        pool_depth=100, gold_depth=50, query_batch=16, seed=21))
+
+
+def _server(sys_, knob="k", **cfg_kw):
+    cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+    cfg = serve_lib.ServingConfig(
+        knob=knob, cutoffs=cuts, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap, **cfg_kw)
+    server = serve_lib.RetrievalServer(sys_.index, None, cfg)
+    # stub predictor: classes are a pure function of batch position, so
+    # the service path and a direct serve_batch of the same rows agree
+    server.predict_classes = (
+        lambda qt: np.arange(qt.shape[0]) % (len(cuts) + 1))
+    return server
+
+
+# ------------------------------------------------- admission queue (pure) --
+
+def test_batches_form_in_deadline_order():
+    q = AdmissionQueue(AdmissionConfig(max_batch=4, pad_multiple=4,
+                                       max_wait_ms=1e6,
+                                       service_estimate_ms=2.0))
+    # submit out of deadline order; payloads carry their deadline
+    deadlines = [50.0, 10.0, 90.0, 30.0, 70.0, 20.0]
+    for i, d in enumerate(deadlines):
+        q.submit(("req", i, d), deadline_ms=d, now=0.0)
+    # 6 pending >= max_batch: the *four most urgent* leave first, in
+    # deadline order — not the four that arrived first
+    b1 = q.poll(now=0.0)
+    assert b1 is not None and b1.trigger == "full"
+    assert [p[2] for p in b1.payloads] == [10.0, 20.0, 30.0, 50.0]
+    assert b1.padded_size == 4
+    assert q.poll(now=0.0) is None        # remainder not urgent yet
+    b2 = q.poll(now=0.0685)               # 70ms deadline enters 2ms slack
+    assert b2 is not None and b2.trigger == "deadline"
+    assert [p[2] for p in b2.payloads] == [70.0, 90.0]
+    assert b2.padded_size == 4            # 2 requests snapped to the grid
+    assert len(q) == 0
+
+
+def test_full_batch_and_max_wait_triggers():
+    cfg = AdmissionConfig(max_batch=2, pad_multiple=2, max_wait_ms=5.0,
+                          service_estimate_ms=0.0)
+    q = AdmissionQueue(cfg)
+    q.submit("a", deadline_ms=1e6, now=0.0)
+    assert q.poll(now=0.0) is None
+    q.submit("b", deadline_ms=1e6, now=0.001)
+    b = q.poll(now=0.001)                 # full batch fires immediately
+    assert b is not None and b.trigger == "full" and len(b) == 2
+    q.submit("c", deadline_ms=1e6, now=0.002)
+    assert q.poll(now=0.003) is None
+    b = q.poll(now=0.0075)                # oldest waited max_wait_ms
+    assert b is not None and b.trigger == "wait" and len(b) == 1
+    assert q.shape_counts == {2: 2}
+
+
+def test_next_event_schedules_wakeups():
+    cfg = AdmissionConfig(max_batch=8, pad_multiple=8, max_wait_ms=5.0,
+                          service_estimate_ms=1.0)
+    q = AdmissionQueue(cfg)
+    assert q.next_event(0.0) is None      # empty: sleep until submit
+    q.submit("a", deadline_ms=3.0, now=0.0)
+    # fire at min(wait bound 5ms, deadline 3ms - estimate 1ms) = 2ms
+    assert q.next_event(0.0) == pytest.approx(0.002)
+    assert q.next_event(0.0015) == pytest.approx(0.0005)
+    assert q.next_event(0.01) == 0.0
+
+
+# --------------------------------------- futures vs serve_batch (inline) --
+
+def test_futures_bit_identical_to_serve_batch(small_system):
+    server = _server(small_system)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    qt = small_system.queries.terms[:16]
+    results = service.serve_all(list(qt))      # one full batch
+    direct = server.serve_batch(qt)
+    for i, res in enumerate(results):
+        np.testing.assert_array_equal(res["ranked"], direct["ranked"][i])
+        assert res["width"] == direct["widths"][i]
+        assert res["class"] == direct["classes"][i]
+        assert res["queue_ms"] >= 0.0 and res["service_ms"] > 0.0
+        # total spans submit -> resolve, so it bounds the parts
+        assert res["total_ms"] >= res["service_ms"]
+
+
+def test_partial_and_oversized_streams_round_trip_pad_grid(small_system):
+    """37 requests through max_batch=16 -> batches 16/16/5, the tail
+    padded to the grid; every future resolves to the same rows a direct
+    serve_batch of its micro-batch produces."""
+    server = _server(small_system)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    qt = small_system.queries.terms[:37]
+    results = service.serve_all(list(qt))
+    assert len(results) == 37
+    assert dict(service.queue.shape_counts) == {16: 2, 8: 1}
+    for lo, hi in ((0, 16), (16, 32), (32, 37)):
+        direct = server.serve_batch(qt[lo:hi])
+        got = np.stack([r["ranked"] for r in results[lo:hi]])
+        np.testing.assert_array_equal(got, direct["ranked"])
+    stats = service.stats()
+    assert stats.n_queries == 37
+    assert stats.class_histogram.sum() == 37
+    assert len(stats.queue_ms) == 37 and len(stats.service_ms) == 3
+
+
+def test_rho_knob_served_through_service(small_system):
+    server = _server(small_system, knob="rho")
+    service = RetrievalService(EngineBackend(server),
+                               AdmissionConfig(max_batch=8,
+                                               pad_multiple=8))
+    qt = small_system.queries.terms[:8]
+    results = service.serve_all(list(qt))
+    direct = server.serve_batch(qt)
+    np.testing.assert_array_equal(
+        np.stack([r["ranked"] for r in results]), direct["ranked"])
+
+
+# ------------------------------------------------------- threaded service --
+
+def test_threaded_service_resolves_futures_with_deadlines(small_system):
+    server = _server(small_system)
+    service = RetrievalService(
+        EngineBackend(server, query_len=small_system.queries.terms.shape[1]),
+        AdmissionConfig(max_batch=8, pad_multiple=8, max_wait_ms=2.0))
+    service.warmup_now([8])               # compile off the serving path
+    qt = small_system.queries.terms[:19]
+    # enqueue before starting the workers so batch composition is the
+    # deterministic FIFO chunking (8, 8, 3) regardless of thread timing
+    futs = service.submit_many(list(qt), deadline_ms=10_000.0)
+    with service:
+        out = [f.result(timeout=60.0) for f in futs]
+    assert len(out) == 19
+    direct = server.serve_batch(qt[:8])   # first full batch is FIFO
+    np.testing.assert_array_equal(
+        np.stack([r["ranked"] for r in out[:8]]), direct["ranked"])
+    assert all(r["deadline_met"] for r in out)
+    assert service.stats().n_queries == 19
+
+
+def test_service_propagates_backend_errors(small_system):
+    server = _server(small_system)
+    backend = EngineBackend(server)
+    backend.execute = lambda batch, pred: (_ for _ in ()).throw(
+        RuntimeError("boom"))
+    service = RetrievalService(backend, AdmissionConfig(max_batch=4,
+                                                        pad_multiple=4))
+    fut = service.submit(small_system.queries.terms[0])
+    service.flush()
+    service.step()
+    with pytest.raises(RuntimeError, match="boom"):
+        fut.result(timeout=5.0)
+
+
+# ----------------------------------------- compile count / learned warmup --
+
+def test_compile_count_constant_under_mixed_batch_sizes(small_system):
+    """Acceptance: engine compile count stays O(1) in padded shapes while
+    the admission queue produces mixed batch sizes."""
+    server = _server(small_system)
+    service = RetrievalService(
+        EngineBackend(server, query_len=small_system.queries.terms.shape[1]),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    service.warmup_now([8, 16])           # the full padded-shape grid
+    base = server.engine.n_compiles
+    assert base > 0
+    for n in (3, 5, 8, 11, 16, 13, 4):    # all snap to warmed {8, 16}
+        service.serve_all(list(small_system.queries.terms[:n]))
+    assert server.engine.n_compiles == base
+    assert set(service.queue.shape_counts) <= {8, 16}
+
+
+def test_prewarm_before_sizing_does_not_poison_the_shape(small_system):
+    """An EngineBackend that hasn't seen a batch can't size warmup
+    queries yet; the policy must keep the shape schedulable instead of
+    marking it compiled forever."""
+    server = _server(small_system)
+    backend = EngineBackend(server)           # query_len unknown
+    policy = WarmupPolicy()
+    assert policy.prewarm(backend, [16]) == 0
+    assert policy.compiled == set()
+    backend.collate([small_system.queries.terms[0]])   # learns sizing
+    assert policy.prewarm(backend, [16]) == 1
+    assert policy.compiled == {16}
+    assert server.engine.n_compiles > 0
+
+
+def test_warmup_policy_learns_shapes_from_census(small_system):
+    server = _server(small_system)
+    backend = EngineBackend(
+        server, query_len=small_system.queries.terms.shape[1])
+    policy = WarmupPolicy(min_count=2, max_shapes=4)
+    service = RetrievalService(backend,
+                               AdmissionConfig(max_batch=8, pad_multiple=8),
+                               warmup=policy)
+    qt = small_system.queries.terms
+    service.serve_all(list(qt[:5]))       # one shape-8 batch: below count
+    assert policy.top_shapes() == [8]
+    assert service.warmup.run(backend) == 0
+    service.serve_all(list(qt[:7]))       # second observation schedules it
+    before = server.engine.n_compiles
+    assert service.warmup.run(backend) == 1    # drains on worker thread
+    assert policy.compiled == {8}
+    assert server.engine.n_compiles == before  # serving already warmed 8
+    service.serve_all(list(qt[:3]))       # warmed shape: no new compiles
+    assert server.engine.n_compiles == before
+
+
+# ----------------------------------------------------------------- funnel --
+
+@pytest.fixture(scope="module")
+def tiny_funnel():
+    import jax.numpy as jnp
+
+    from repro.core import cascade as cascade_lib
+    from repro.models.recsys import bst as BS
+    from repro.models.recsys import retrieval_tower as RT
+    from repro.serving import funnel as F
+
+    tower_cfg = RT.TowerConfig(d_user_in=8, embed_dim=8, hidden=(16,),
+                               n_candidates=500)
+    bst_cfg = BS.BSTConfig(embed_dim=8, seq_len=6, n_heads=2,
+                           item_vocab=500, n_profile=4, mlp=(16, 8))
+    cfg = F.FunnelConfig(tower=tower_cfg, bst=bst_cfg,
+                         cutoffs=(10, 20, 50), pool_depth=100,
+                         eval_depth=20, tau=0.05)
+    tower = RT.init_tower(tower_cfg, seed=0)
+    bst = BS.init_bst(bst_cfg, seed=1)
+    rng = np.random.default_rng(0)
+    uf = rng.normal(size=(32, 8)).astype(np.float32)
+    hist = rng.integers(-1, 500, (32, 6)).astype(np.int32)
+    gold, runs = F.funnel_gold_runs(cfg, tower, bst, jnp.asarray(uf),
+                                    jnp.asarray(hist))
+    labels, _ = F.label_requests(cfg, gold, runs)
+    feats = np.asarray(F.request_features(jnp.asarray(uf),
+                                          jnp.asarray(hist)))
+    casc = cascade_lib.train_cascade(
+        feats, labels, n_cutoffs=len(cfg.cutoffs),
+        forest_kwargs=dict(n_trees=4, max_depth=4))
+    return F.Funnel(cfg, tower, bst, casc), uf, hist
+
+
+def test_funnel_backend_smoke(tiny_funnel):
+    """The recsys funnel serves through the same RetrievalService front
+    door as the text engine — the Backend protocol in action."""
+    funnel, uf, hist = tiny_funnel
+    service = RetrievalService(
+        FunnelBackend(funnel, pad_multiple=8),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    payloads = [(uf[i], hist[i]) for i in range(16)]
+    results = service.serve_all(payloads)
+    direct = funnel.serve(uf[:16], hist[:16])    # grid-aligned batch
+    for i, res in enumerate(results):
+        np.testing.assert_array_equal(res["ranked"], direct["ranked"][i])
+        assert res["width"] == direct["k"][i]
+        assert res["ranked"].shape == (funnel.cfg.eval_depth,)
+    stats = service.stats()
+    assert stats.n_queries == 16
+    assert stats.class_histogram.sum() == 16
+    assert math.isfinite(stats.mean_param)
+
+
+def test_funnel_backend_pads_partial_batches(tiny_funnel):
+    funnel, uf, hist = tiny_funnel
+    service = RetrievalService(
+        FunnelBackend(funnel, pad_multiple=8),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    results = service.serve_all([(uf[i], hist[i]) for i in range(5)])
+    assert len(results) == 5
+    assert dict(service.queue.shape_counts) == {8: 1}
+    for res in results:
+        valid = res["ranked"][res["ranked"] >= 0]
+        assert valid.size > 0
+        assert (valid < funnel.cfg.tower.n_candidates).all()
+
+
+def test_funnel_backend_warmup_shape(tiny_funnel):
+    funnel, _, _ = tiny_funnel
+    backend = FunnelBackend(funnel, pad_multiple=8)
+    # one executable per cutoff (static max_k) at this padded shape
+    assert backend.warmup_shape(8) == len(funnel.cfg.cutoffs)
+    assert backend.warmup_shape(8) == 0       # already warm
+
+
+# ----------------------------------------- ServerStats / serve_loop shim --
+
+def test_server_stats_empty_percentiles_nan():
+    stats = server_lib.ServerStats(
+        n_queries=0, latencies_ms=[], mean_param=float("nan"),
+        class_histogram=np.zeros(4, np.int64), pct_in_envelope=None)
+    assert math.isnan(stats.p50_ms) and math.isnan(stats.p99_ms)
+    assert "p50=nan" in stats.summary()       # renders, not raises
+
+
+def test_server_stats_summary_queue_breakdown():
+    stats = server_lib.ServerStats(
+        n_queries=2, latencies_ms=[2.0, 4.0], mean_param=10.0,
+        class_histogram=np.array([2]), pct_in_envelope=None,
+        queue_ms=[0.5, 1.5], service_ms=[2.0])
+    s = stats.summary()
+    assert "queue_p50=1.0ms" in s and "service_p50=2.0ms" in s
+
+
+def test_serve_loop_shim_serves_tail_and_warns(small_system):
+    server = _server(small_system)
+    qt = small_system.queries.terms[:20]      # 20 = 2*8 + tail of 4
+    with pytest.warns(DeprecationWarning, match="RetrievalService"):
+        stats = server_lib.serve_loop(server, qt, batch=8, warmup=0)
+    assert stats.n_queries == 20              # tail no longer dropped
+    assert stats.class_histogram.sum() == 20
+    assert stats.p99_ms >= stats.p50_ms > 0
+    assert stats.queue_ms is not None and len(stats.queue_ms) == 20
