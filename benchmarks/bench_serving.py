@@ -20,7 +20,9 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
+import textwrap
 import time
 
 import numpy as np
@@ -150,6 +152,90 @@ def bench_admission_service() -> list[tuple]:
     ]
 
 
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os, sys, json, time
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=%(n_dev)d")
+    sys.path.insert(0, %(src)r)
+    import numpy as np
+    from repro.core import experiment as E
+    from repro.distrib.sharding import make_compat_mesh
+    from repro.serving import pipeline as sp
+
+    sys_ = E.build_system(E.ExperimentConfig(
+        n_docs=%(n_docs)d, vocab=%(n_docs)d * 2, n_queries=256,
+        stream_cap=%(cap)d, pool_depth=1000, gold_depth=200,
+        query_batch=128))
+
+    def make_server(mesh=None):
+        cfg = sp.ServingConfig(knob="k", cutoffs=sys_.k_cutoffs,
+                               rerank_depth=100,
+                               stream_cap=sys_.cfg.stream_cap)
+        srv = sp.RetrievalServer(sys_.index, None, cfg, mesh=mesh)
+        srv.predict_classes = (
+            lambda qt: np.arange(qt.shape[0]) %% (len(sys_.k_cutoffs) + 1))
+        return srv
+
+    def best_qps(server, qt, n=3):
+        server.serve_batch(qt)            # warm
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            server.serve_batch(qt)
+            ts.append(time.perf_counter() - t0)
+        return qt.shape[0] / min(ts)
+
+    qt = sys_.queries.terms[:128]
+    single = make_server()
+    sharded = make_server(make_compat_mesh((1, %(n_shards)d),
+                                           ("data", "model")))
+    a = single.serve_batch(qt)["ranked"]
+    b = sharded.serve_batch(qt)["ranked"]
+    print(json.dumps({
+        "single_qps": best_qps(single, qt),
+        "sharded_qps": best_qps(sharded, qt),
+        "n_shards": %(n_shards)d,
+        "bit_identical": bool(np.array_equal(a, b)),
+    }))
+""")
+
+
+def bench_sharded_vs_single() -> list[tuple]:
+    """Mesh-sharded engine vs single device, on a forced-host-device mesh.
+
+    Runs in a subprocess (XLA's forced device count must be set before
+    backend init).  On emulated CPU devices the sharded path pays real
+    collective overhead for no real parallel FLOPs — the number tracks
+    that overhead across PRs; on TPU the same code path is the scaling
+    story.  Also asserts the sharded output is bit-identical.
+    """
+    n_shards = int(os.environ.get("REPRO_BENCH_SHARDS", "4"))
+    smoke = os.environ.get("REPRO_BENCH_SCALE") == "tiny"
+    script = _SHARDED_SCRIPT % dict(
+        n_dev=n_shards,
+        src=os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src"),
+        n_docs=2000 if smoke else 8000,
+        cap=512 if smoke else 2048,
+        n_shards=n_shards,
+    )
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"sharded bench subprocess failed:\n{r.stderr}")
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    if not out["bit_identical"]:
+        raise RuntimeError("sharded engine diverged from single-device")
+    ratio = out["sharded_qps"] / out["single_qps"]
+    return [
+        ("serving/single_device_qps", out["single_qps"], "128q batch"),
+        (f"serving/sharded_{n_shards}dev_qps", out["sharded_qps"],
+         "forced host devices, candidates over 'model'"),
+        ("serving/sharded_vs_single_throughput", ratio,
+         f"bit_identical={out['bit_identical']}"),
+    ]
+
+
 # ----------------------------------------------------------- JSON output --
 
 def payload_from_rows(rows: list[tuple]) -> dict:
@@ -166,7 +252,19 @@ def payload_from_rows(rows: list[tuple]) -> dict:
         if name.startswith("serving/stage_")}
     ratio = val("serving/dynamic_vs_fixed_ratio")
     n_compiles = val("serving/executable_cache")
+    has_sharded = any(name.startswith("serving/sharded_")
+                      or name == "serving/single_device_qps"
+                      for name in by_name)
     return {
+        "sharded_vs_single_device": {
+            "single_qps": val("serving/single_device_qps"),
+            "sharded_qps": next(
+                (float(v) for name, (v, _) in by_name.items()
+                 if name.startswith("serving/sharded_")
+                 and name.endswith("dev_qps")), None),
+            "throughput_ratio": val(
+                "serving/sharded_vs_single_throughput"),
+        } if has_sharded else None,
         "p50_ms": val("serving/admission_request_p50_ms"),
         "p99_ms": val("serving/admission_request_p99_ms"),
         "queue_p50_ms": val("serving/admission_queue_p50_ms"),
@@ -193,7 +291,7 @@ def write_bench_json(rows: list[tuple], path: str | None = None) -> str:
 
 
 BENCHES = [bench_dynamic_vs_fixed, bench_compile_amortization,
-           bench_admission_service]
+           bench_admission_service, bench_sharded_vs_single]
 
 
 def main(argv=None) -> None:

@@ -27,6 +27,7 @@ def main() -> None:
         bench_serving.bench_dynamic_vs_fixed,
         bench_serving.bench_compile_amortization,
         bench_serving.bench_admission_service,
+        bench_serving.bench_sharded_vs_single,
         roofline.bench_roofline,
     ]
     print("name,us_per_call,derived")

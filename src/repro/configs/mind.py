@@ -76,7 +76,10 @@ def dryrun_bundle(shape: str, mesh, mode: str = "cost") -> Bundle:
             best = jnp.max(scores, axis=1).astype(jnp.float32)  # (B, N)
             if use_sharded:                               # §Perf iter R1
                 from repro.distrib.collectives import sharded_topk
-                return sharded_topk(mesh, best, k)
+                # axis named explicitly: sharded_topk validates it against
+                # the mesh and raises a clear ValueError (not a KeyError)
+                # when a caller hands it a mesh without that axis
+                return sharded_topk(mesh, best, k, axis="model")
             return jax.lax.top_k(best, k)
 
         meta = dict(arch=ARCH, shape=shape, kind="retrieve",

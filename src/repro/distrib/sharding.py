@@ -22,10 +22,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["dp_axes", "fsdpify", "lm_param_specs", "lm_opt_specs",
-           "sage_param_specs", "recsys_param_specs", "tree_shardings",
-           "batch_specs_lm", "MeshInfo", "make_compat_mesh",
-           "compat_shard_map"]
+__all__ = ["dp_axes", "dp_axis_spec", "fsdpify", "lm_param_specs",
+           "lm_opt_specs", "sage_param_specs", "recsys_param_specs",
+           "tree_shardings", "batch_specs_lm", "MeshInfo",
+           "make_compat_mesh", "compat_shard_map"]
 
 
 def make_compat_mesh(axis_shapes, axis_names) -> Mesh:
@@ -68,6 +68,17 @@ def compat_shard_map(f, mesh: Mesh, in_specs, out_specs):
 
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_axis_spec(mesh: Mesh):
+    """The PartitionSpec *entry* for a batch dimension: every
+    data-parallel axis of the mesh (None when the mesh has none) — the
+    serving engine shards request batches with ``P(dp_axis_spec(mesh),
+    ...)`` while candidates shard over 'model'."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return None
+    return dp if len(dp) > 1 else dp[0]
 
 
 class MeshInfo:

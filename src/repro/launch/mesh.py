@@ -11,9 +11,12 @@ jax device state (the dry-run sets XLA_FLAGS before first jax init).
 
 from __future__ import annotations
 
+import os
+
 from repro.distrib.sharding import make_compat_mesh
 
-__all__ = ["make_production_mesh", "make_smoke_mesh", "HW"]
+__all__ = ["make_production_mesh", "make_smoke_mesh",
+           "make_serving_mesh", "force_host_device_count", "HW"]
 
 
 #: TPU v5e hardware constants used by the roofline (per chip)
@@ -34,3 +37,43 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh():
     """1-device mesh with the production axis names (CPU tests)."""
     return make_compat_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(n_model: int | None = None, n_data: int = 1,
+                      n_pod: int = 1):
+    """Mesh for the sharded serving engine over the host's devices.
+
+    Candidates (the doc dimension) shard over 'model'; request batches
+    over ('pod', 'data').  ``n_model=None`` takes every device left after
+    the data axes.  Raises when the host has too few devices — on CPU,
+    call ``force_host_device_count`` (or set XLA_FLAGS) *before* JAX
+    initializes to emulate a pod.
+    """
+    import jax
+    n_dev = len(jax.devices())
+    if n_model is None:
+        n_model = max(1, n_dev // (n_data * n_pod))
+    need = n_pod * n_data * n_model
+    if need > n_dev:
+        raise ValueError(
+            f"make_serving_mesh: need {need} devices "
+            f"(pod={n_pod} x data={n_data} x model={n_model}) but only "
+            f"{n_dev} visible; on CPU force more with "
+            "force_host_device_count(n) before first JAX use.")
+    if n_pod > 1:
+        return make_compat_mesh((n_pod, n_data, n_model),
+                                ("pod", "data", "model"))
+    return make_compat_mesh((n_data, n_model), ("data", "model"))
+
+
+def force_host_device_count(n: int) -> None:
+    """Emulate ``n`` host (CPU) devices via XLA_FLAGS.
+
+    Must run before JAX initializes its backends (same contract as the
+    dry-run's flag handling); a no-op when the flag is already set.
+    """
+    flag = f"--xla_force_host_platform_device_count={n}"
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()

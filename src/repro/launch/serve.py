@@ -7,11 +7,12 @@ Requests are submitted one at a time with per-request deadlines; the
 admission queue forms deadline-ordered batches over the pad grid, the
 cascade prediction for batch N+1 overlaps the engine dispatch of batch N,
 and the warmup policy pre-compiles the padded shapes the queue actually
-produces.  On a pod the same service shards the candidate universe over
-'model' and request batches over ('pod','data') inside the backend; here
-it runs the CPU-scale system and reports latency percentiles with the
-queue-delay vs service-time breakdown, mean parameter, and envelope
-compliance.
+produces.  ``--shards N`` serves through the mesh-sharded engine
+(candidate universe over 'model', request batches over ('pod','data'))
+via ``ShardedEngineBackend`` — on CPU pair it with
+``--force-host-devices`` to emulate the pod.  Reports latency percentiles
+with the queue-delay vs service-time breakdown, mean parameter, and
+envelope compliance.
 """
 
 from __future__ import annotations
@@ -19,13 +20,6 @@ from __future__ import annotations
 import argparse
 
 import numpy as np
-
-from repro.core import cascade as cascade_lib
-from repro.core import experiment as E
-from repro.core import labeling, tradeoff
-from repro.serving import pipeline as sp
-from repro.serving.admission import AdmissionConfig
-from repro.serving.service import EngineBackend, RetrievalService
 
 
 def main() -> None:
@@ -38,7 +32,32 @@ def main() -> None:
     ap.add_argument("--deadline-ms", type=float, default=100.0)
     ap.add_argument("--n-docs", type=int, default=8000)
     ap.add_argument("--n-queries", type=int, default=1024)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="model-axis shards for the candidate dimension")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="data-axis shards for request batches")
+    ap.add_argument("--force-host-devices", type=int, default=0,
+                    help="emulate N CPU devices (set before first JAX use)")
     args = ap.parse_args()
+
+    from repro.launch import mesh as mesh_lib
+    if args.force_host_devices:
+        # before anything touches a jax device: the flag only works if
+        # the backends have not initialized yet
+        mesh_lib.force_host_device_count(args.force_host_devices)
+
+    from repro.core import cascade as cascade_lib
+    from repro.core import experiment as E
+    from repro.core import labeling, tradeoff
+    from repro.serving import pipeline as sp
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import (EngineBackend, RetrievalService,
+                                       ShardedEngineBackend)
+
+    mesh = None
+    if args.shards > 1 or args.data_shards > 1:
+        mesh = mesh_lib.make_serving_mesh(n_model=args.shards,
+                                          n_data=args.data_shards)
 
     sys_ = E.build_system(E.ExperimentConfig(
         n_docs=args.n_docs, vocab=args.n_docs * 2,
@@ -53,11 +72,16 @@ def main() -> None:
     server = sp.RetrievalServer(
         sys_.index, casc, sp.ServingConfig(
             knob=args.knob, cutoffs=cutoffs, threshold=args.threshold,
-            rerank_depth=100, stream_cap=sys_.cfg.stream_cap))
-    backend = EngineBackend(server,
-                            query_len=sys_.queries.terms.shape[1])
+            rerank_depth=100, stream_cap=sys_.cfg.stream_cap),
+        mesh=mesh)
+    backend_cls = ShardedEngineBackend if mesh is not None else EngineBackend
+    backend = backend_cls(server,
+                          query_len=sys_.queries.terms.shape[1])
+    if mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} — candidates over 'model', "
+              f"batches over data axes (pad grid {backend.pad_multiple})")
     service = RetrievalService(backend, AdmissionConfig(
-        max_batch=args.batch, pad_multiple=server.cfg.pad_multiple,
+        max_batch=args.batch, pad_multiple=backend.pad_multiple,
         default_deadline_ms=args.deadline_ms))
     service.warmup_now([args.batch])       # deploy-time shape; the
     # warmup policy keeps compiling whatever shapes admission produces

@@ -24,6 +24,7 @@ from repro.retrieval import jass
 
 __all__ = [
     "second_stage_scores",
+    "second_stage_mix",
     "rerank_pool",
     "gold_run_k",
     "candidate_run_k",
@@ -43,6 +44,33 @@ def _hash_noise(doc_ids: jnp.ndarray, qid: jnp.ndarray, seed: int) -> jnp.ndarra
     return (h & jnp.uint32(0xFFFF)).astype(jnp.float32) / 65536.0
 
 
+def second_stage_mix(acc_bm25: jnp.ndarray, acc_lm: jnp.ndarray,
+                     acc_tfidf: jnp.ndarray, bounds, doc_len: jnp.ndarray,
+                     qids: jnp.ndarray, doc_ids: jnp.ndarray, *,
+                     seed: int = 11,
+                     noise_weight: float = 0.35) -> jnp.ndarray:
+    """The second-stage mixture with explicit normalization bounds.
+
+    ``bounds`` is ((lo, hi), ...) per accumulator, each (Q, 1) — the
+    per-query min/max over the *full* doc axis.  Split out so the
+    mesh-sharded engine can compute bounds with pmin/pmax collectives over
+    its doc shards and still run bit-identical mixing arithmetic on each
+    local (Q, width) block.  ``doc_ids`` are the global ids of the block's
+    columns (the noise hash keys on them).
+    """
+
+    def norm(x, lo, hi):
+        return (x - lo) / jnp.maximum(hi - lo, 1e-9)
+
+    (b_lo, b_hi), (l_lo, l_hi), (t_lo, t_hi) = bounds
+    prior = 1.0 / jnp.log(2.0 + doc_len.astype(jnp.float32))
+    noise = jax.vmap(lambda q: _hash_noise(doc_ids, q, seed))(qids)
+    return (0.45 * norm(acc_bm25, b_lo, b_hi)
+            + 0.25 * norm(acc_lm, l_lo, l_hi)
+            + 0.15 * norm(acc_tfidf, t_lo, t_hi)
+            + 0.05 * prior[None, :] + noise_weight * noise)
+
+
 def second_stage_scores(acc_bm25: jnp.ndarray, acc_lm: jnp.ndarray,
                         acc_tfidf: jnp.ndarray, doc_len: jnp.ndarray,
                         qids: jnp.ndarray, *, seed: int = 11,
@@ -56,18 +84,15 @@ def second_stage_scores(acc_bm25: jnp.ndarray, acc_lm: jnp.ndarray,
     """
     n_docs = acc_bm25.shape[-1]
 
-    def norm(x):
-        lo = jnp.min(x, axis=-1, keepdims=True)
-        hi = jnp.max(x, axis=-1, keepdims=True)
-        return (x - lo) / jnp.maximum(hi - lo, 1e-9)
+    def bound(x):
+        return (jnp.min(x, axis=-1, keepdims=True),
+                jnp.max(x, axis=-1, keepdims=True))
 
-    prior = 1.0 / jnp.log(2.0 + doc_len.astype(jnp.float32))
-    noise = jax.vmap(
-        lambda q: _hash_noise(jnp.arange(n_docs), q, seed)
-    )(qids)
-    return (0.45 * norm(acc_bm25) + 0.25 * norm(acc_lm)
-            + 0.15 * norm(acc_tfidf) + 0.05 * prior[None, :]
-            + noise_weight * noise)
+    return second_stage_mix(
+        acc_bm25, acc_lm, acc_tfidf,
+        (bound(acc_bm25), bound(acc_lm), bound(acc_tfidf)),
+        doc_len, qids, jnp.arange(n_docs),
+        seed=seed, noise_weight=noise_weight)
 
 
 @functools.partial(jax.jit, static_argnames=("depth",))

@@ -14,8 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["bucketize", "scatter_back", "pad_length", "pad_rows",
-           "batch_slices"]
+__all__ = ["bucketize", "scatter_back", "pad_length", "pad_rows"]
 
 
 def pad_length(n: int, multiple: int) -> int:
@@ -35,15 +34,6 @@ def pad_rows(arr: np.ndarray, multiple: int, fill) -> np.ndarray:
         return arr
     width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
     return np.pad(arr, width, constant_values=fill)
-
-
-def batch_slices(n: int, batch: int):
-    """Yield (lo, hi) micro-batch bounds covering all ``n`` rows —
-    including the trailing partial batch, which ``pad_rows`` then snaps to
-    the grid.  (The pre-service serve_loop stepped ``range(0, n - batch +
-    1, batch)`` and silently dropped the remainder.)"""
-    for lo in range(0, n, batch):
-        yield lo, min(lo + batch, n)
 
 
 def bucketize(pred_class: np.ndarray, n_classes: int,

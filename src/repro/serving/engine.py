@@ -42,18 +42,21 @@ reference path was updated to match.
 from __future__ import annotations
 
 import functools
+import math
 import threading
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.retrieval import gold, jass
 from repro.retrieval import topk as topk_lib
 from repro.serving import bucketing
 
-__all__ = ["ServingEngine"]
+__all__ = ["ServingEngine", "ShardedServingEngine"]
 
 
 class _PendingCompile:
@@ -127,6 +130,9 @@ class ServingEngine:
         self.doc_len = jnp.asarray(index.corpus.doc_len)
         self.n_docs = index.corpus.n_docs
         self.max_k = int(max(cfg.cutoffs))
+        # the padded-batch grid; the mesh-sharded engine widens it so
+        # batches also divide over the data-parallel axes
+        self.batch_multiple = cfg.pad_multiple
         self._cache: dict = {}
         self._cache_lock = threading.Lock()
         self.n_compiles = 0
@@ -189,7 +195,14 @@ class ServingEngine:
         return entry
 
     def padded_batch(self, n: int) -> int:
-        return bucketing.pad_length(n, self.cfg.pad_multiple)
+        return bucketing.pad_length(n, self.batch_multiple)
+
+    def _place(self, name: str, j: int, x):
+        """Hook: device placement for argument ``j`` of stage ``name``
+        (the sharded engine commits inputs to their mesh shardings so the
+        AOT executables never reshard on the serving path)."""
+        del name, j
+        return x
 
     # --------------------------------------------------------- serving --
     def serve(self, query_terms: np.ndarray, param_vec: np.ndarray,
@@ -204,9 +217,9 @@ class ServingEngine:
         """
         n, qlen = query_terms.shape
         qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
-                                self.cfg.pad_multiple, fill=-1)
+                                self.batch_multiple, fill=-1)
         pv = bucketing.pad_rows(np.asarray(param_vec, np.int32),
-                                self.cfg.pad_multiple, fill=1)
+                                self.batch_multiple, fill=1)
         qids = np.arange(qt.shape[0], dtype=np.int32)
 
         timings = {}
@@ -214,7 +227,8 @@ class ServingEngine:
         def timed(label, name, fn, *a):
             # compile (cold shapes only) outside the timed region so the
             # per-stage numbers report steady-state latency, not XLA
-            a = tuple(jnp.asarray(x) for x in a)
+            a = tuple(self._place(name, j, jnp.asarray(x))
+                      for j, x in enumerate(a))
             exe = self._compiled(name, fn, a)
             t0 = time.perf_counter()
             out = exe(*a)
@@ -255,3 +269,216 @@ class ServingEngine:
         for b in sorted({self.padded_batch(int(b)) for b in batch_sizes}):
             self.warmup_shape(b, query_len)
         return self.n_compiles - before
+
+
+# ----------------------------------------------------- mesh-sharded stages --
+# Per-shard bodies (run inside shard_map).  The doc/candidate dimension is
+# sharded over the 'model' axis, request batches over the data axes.  The
+# posting streams stay *replicated* over 'model' — the rho mask is defined
+# on the global impact-ordered stream, so sharding it would change which
+# postings the knob admits — while every (Q, n_docs) accumulator shrinks
+# to (Q, n_docs / n_shards) per device.  Each shard scatter-adds only the
+# contributions of docs it owns; pool selection sends only k-sized
+# survivor lists over the interconnect (collectives.merge_local_topk).
+# The traced rho-mask / pool-width-mask design is unchanged, so the AOT
+# executable count stays O(1) per padded batch shape on any mesh.
+
+def _local_accumulate(ds, contrib, *, axis: str, width: int):
+    """This shard's slice of the (Q, n_docs) scatter-add.
+
+    Contributions of docs outside [lo, lo + width) are zeroed and land on
+    column 0 — the same inert +0.0 the unsharded path adds for stream
+    padding — so each real doc receives exactly the unsharded sequence of
+    additions and the local block is a bit-identical slice."""
+    lo = jax.lax.axis_index(axis) * width
+    own = (ds >= lo) & (ds < lo + width)
+    c = jnp.where(own, contrib, 0.0)
+    idx = jnp.clip(ds - lo, 0, width - 1)
+
+    def one(i, cc):
+        return jnp.zeros(width, jnp.float32).at[i].add(cc)
+
+    return jax.vmap(one)(idx, c)
+
+
+def _pool_from_local(acc, depth: int, *, axis: str, width: int):
+    """select_pool over doc-sharded accumulators: local top-k clamped to
+    the shard width, global ids from the true shard offset, merged with
+    lowest-doc-id tie-breaking (bit-identical to rank_from_scores'
+    lexsort; padded doc columns score 0.0, sit at the highest global ids,
+    and are masked to -1 by the same >0 rule as real zero-score docs)."""
+    from repro.distrib import collectives
+    kl = min(depth, width)
+    v, i = jax.lax.top_k(acc, kl)
+    lo = jax.lax.axis_index(axis) * width
+    gi = (i + lo).astype(jnp.int32)
+    mv, mg = collectives.merge_local_topk(v, gi, depth, axis)
+    return jnp.where(mv > 0, mg, -1)
+
+
+def _sh_stage1_rho(ds, im, rho_vec, *, axis: str, width: int, depth: int):
+    p = ds.shape[-1]
+    mask = (jnp.arange(p)[None, :] < rho_vec[:, None]) & (ds >= 0)
+    acc = _local_accumulate(ds, jnp.where(mask, im, 0.0),
+                            axis=axis, width=width)
+    return _pool_from_local(acc, depth, axis=axis, width=width)
+
+
+def _sh_stage1_k(ds, im, k_vec, *, axis: str, width: int, max_k: int):
+    # exhaustive stage-1 scores (rho = P) like _stage1_k, pool width as a
+    # traced mask over the shared max-k pool
+    acc = _local_accumulate(ds, jnp.where(ds >= 0, im, 0.0),
+                            axis=axis, width=width)
+    pool = _pool_from_local(acc, max_k, axis=axis, width=width)
+    keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
+    return jnp.where(keep, pool, -1)
+
+
+def _sh_stage2(sdocs, s3, doc_len, qids, *, axis: str, width: int,
+               n_docs: int):
+    """Doc-sharded stage 2: local scorer accumulators + the second-stage
+    mixture, with per-query normalization bounds reduced over the mesh
+    (pmin/pmax of local min/max — exact, so bit-identical to the global
+    min/max; padded doc columns are masked out of the bounds)."""
+    lo = jax.lax.axis_index(axis) * width
+    own = (sdocs >= lo) & (sdocs < lo + width)
+    idx = jnp.clip(sdocs - lo, 0, width - 1)
+
+    def one(i, s, ow):
+        z = jnp.zeros((width, 3), jnp.float32)
+        return z.at[i].add(jnp.where(ow[:, None], s, 0.0))
+
+    acc = jax.vmap(one)(idx, s3, own)            # (Q, width, 3)
+    a_bm25, a_lm, a_tfidf = acc[..., 0], acc[..., 1], acc[..., 2]
+    gcols = lo + jnp.arange(width)               # global doc ids here
+    real = (gcols < n_docs)[None, :]
+
+    def bound(x):
+        b_lo = jax.lax.pmin(jnp.min(jnp.where(real, x, jnp.inf),
+                                    axis=-1, keepdims=True), axis)
+        b_hi = jax.lax.pmax(jnp.max(jnp.where(real, x, -jnp.inf),
+                                    axis=-1, keepdims=True), axis)
+        return b_lo, b_hi
+
+    return gold.second_stage_mix(
+        a_bm25, a_lm, a_tfidf,
+        (bound(a_bm25), bound(a_lm), bound(a_tfidf)),
+        doc_len, qids, gcols)
+
+
+def _sh_rerank(stage2, pool, *, axis: str, width: int, depth: int):
+    """rerank_pool over doc-sharded stage-2 scores: the owning shard
+    contributes each pool member's score, pmax assembles the full (Q, k)
+    score matrix (pool ids are tiny — this is the only stage-2 collective),
+    then every shard runs the identical lexsort rerank."""
+    lo = jax.lax.axis_index(axis) * width
+    own = (pool >= lo) & (pool < lo + width)
+    s = jnp.where(own,
+                  jnp.take_along_axis(
+                      stage2, jnp.clip(pool - lo, 0, width - 1), axis=1),
+                  -jnp.inf)
+    s = jax.lax.pmax(s, axis)
+
+    def one(sc, p):
+        order = jnp.lexsort((p, -sc))
+        top = order[:depth]
+        return jnp.where(sc[top] > -jnp.inf, p[top], -1).astype(jnp.int32)
+
+    return jax.vmap(one)(s, pool)
+
+
+class ShardedServingEngine(ServingEngine):
+    """The single-dispatch engine over a device mesh.
+
+    Layout: the candidate/doc dimension of every stage-1/stage-2
+    accumulator shards over ``axis`` ('model'); request batches shard over
+    the data-parallel axes ('pod', 'data').  ``n_docs`` is padded up to a
+    multiple of the shard count with inert columns, so uneven shards need
+    no special cases and global doc ids are true row offsets.  Outputs are
+    bit-identical to the unsharded engine (and therefore to
+    ``pipeline.serve_batch_reference``) — see the per-stage bodies above
+    for why each collective preserves exact arithmetic.
+
+    The AOT executable cache, ``warmup``/``warmup_shape``, ``n_compiles``
+    and the serve() surface are inherited unchanged; ``batch_multiple``
+    widens the pad grid to also divide over the data axes, which
+    ``ShardedEngineBackend`` reports as its admission ``pad_multiple``.
+
+    Kernel routing note: the per-shard bodies run the jnp oracles (the
+    Pallas impact_scan/topk kernels are not yet plumbed through
+    shard_map); on TPU this engine still shards memory and collectives
+    correctly, it just scores with XLA ops.
+    """
+
+    def __init__(self, index, cfg, mesh, *, axis: str = "model",
+                 use_kernel: bool | None = None):
+        from repro.distrib import collectives
+        from repro.distrib.sharding import (compat_shard_map, dp_axes,
+                                            dp_axis_spec)
+        super().__init__(index, cfg, use_kernel=use_kernel)
+        self.n_shards = collectives.require_axis(
+            mesh, axis, what="ShardedServingEngine")
+        self.mesh = mesh
+        self.axis = axis
+        self.dp = dp_axes(mesh)
+        self.dp_size = (int(np.prod([mesh.shape[a] for a in self.dp]))
+                        if self.dp else 1)
+        self.batch_multiple = math.lcm(cfg.pad_multiple, self.dp_size)
+        self.doc_pad = bucketing.pad_length(self.n_docs, self.n_shards)
+        self.shard_width = self.doc_pad // self.n_shards
+
+        dspec = dp_axis_spec(mesh)
+        b1, b2 = P(dspec), P(dspec, None)
+        #: per-stage input PartitionSpecs (arg order = serve()'s)
+        self._specs = {
+            "gather": (P(None), P(None), P(None), P(None, None), b2),
+            "stage1": (b2, b2, b1),
+            "stage2": (b2, P(dspec, None, None), P(axis), b1),
+            "rerank": (P(dspec, axis), b2),
+        }
+        # commit the static inputs to their mesh shardings once, so the
+        # per-call device_put in _place short-circuits instead of
+        # re-broadcasting the memory-dominating postings index per batch
+        self.offsets = jax.device_put(self.offsets,
+                                      NamedSharding(mesh, P(None)))
+        self.pdoc = jax.device_put(self.pdoc, NamedSharding(mesh, P(None)))
+        self.pimp = jax.device_put(self.pimp, NamedSharding(mesh, P(None)))
+        self.pscore = jax.device_put(self.pscore,
+                                     NamedSharding(mesh, P(None, None)))
+        # doc_len padded to the sharded width and committed to its shard
+        dl = np.asarray(index.corpus.doc_len)
+        dl = np.pad(dl, (0, self.doc_pad - self.n_docs),
+                    constant_values=1)
+        self.doc_len = jax.device_put(dl, NamedSharding(mesh, P(axis)))
+
+        def smap(fn, in_specs, out_specs):
+            return compat_shard_map(fn, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs)
+
+        self._stat = dict(axis=axis, width=self.shard_width)
+        self._gather = smap(self._gather, self._specs["gather"],
+                            (b2, b2, b2, P(dspec, None, None)))
+        self._stage2 = smap(
+            functools.partial(_sh_stage2, n_docs=self.n_docs,
+                              **self._stat),
+            self._specs["stage2"], P(dspec, axis))
+        self._rerank = smap(
+            functools.partial(_sh_rerank, depth=cfg.rerank_depth,
+                              **self._stat),
+            self._specs["rerank"], b2)
+        self._smap_s1 = lambda fn: smap(fn, self._specs["stage1"], b2)
+
+    def _stage1_for(self, pool_width: int):
+        if self.cfg.knob == "rho":
+            return ("stage1", self._smap_s1(functools.partial(
+                _sh_stage1_rho, depth=self.cfg.rerank_depth,
+                **self._stat)))
+        return (f"stage1:{pool_width}", self._smap_s1(functools.partial(
+            _sh_stage1_k, max_k=pool_width, **self._stat)))
+
+    def _place(self, name: str, j: int, x):
+        # commit each stage input to its mesh sharding before the AOT
+        # lookup, so lowering and every later call see identical layouts
+        # and the serving path never reshards
+        spec = self._specs[name.split(":")[0]][j]
+        return jax.device_put(x, NamedSharding(self.mesh, spec))

@@ -33,7 +33,7 @@ from repro.core import cascade as cascade_lib
 from repro.core import features as feat_lib
 from repro.retrieval import gold, jass
 from repro.serving import bucketing
-from repro.serving.engine import ServingEngine
+from repro.serving.engine import ServingEngine, ShardedServingEngine
 
 __all__ = ["ServingConfig", "RetrievalServer"]
 
@@ -54,6 +54,7 @@ class RetrievalServer:
 
     def __init__(self, index, casc: cascade_lib.Cascade,
                  cfg: ServingConfig, *,
+                 mesh=None, shard_axis: str = "model",
                  warmup_batch_sizes: tuple[int, ...] = (),
                  warmup_query_len: int = 0):
         self.index = index
@@ -64,8 +65,17 @@ class RetrievalServer:
         self.df = jnp.asarray(index.term_stats.df)
         self.n_docs = index.corpus.n_docs
         # the engine owns the device copies of the postings arrays; the
-        # reference path reads them from there (they dominate memory)
-        self.engine = ServingEngine(index, cfg, use_kernel=cfg.use_kernel)
+        # reference path reads them from there (they dominate memory).
+        # With a mesh, the candidate universe shards over `shard_axis`
+        # and request batches over the data axes — same serve() surface,
+        # bit-identical output.
+        if mesh is not None:
+            self.engine = ShardedServingEngine(
+                index, cfg, mesh, axis=shard_axis,
+                use_kernel=cfg.use_kernel)
+        else:
+            self.engine = ServingEngine(index, cfg,
+                                        use_kernel=cfg.use_kernel)
         # built eagerly (jax.jit is lazy until called) so concurrent
         # predict_classes callers — the service's admit + warmup threads —
         # never race a lazy init
@@ -91,12 +101,13 @@ class RetrievalServer:
 
         Run eagerly the cascade is hundreds of small forest ops and
         dominates batch latency; jitted it is the negligible overhead the
-        paper claims.  Queries are padded to the engine's batch grid so
-        the prediction executable count matches the engine's: one per
+        paper claims.  Queries are padded to the engine's batch grid
+        (which a mesh-sharded engine widens to divide over the data axes)
+        so the prediction executable count matches the engine's: one per
         padded shape."""
         n = query_terms.shape[0]
         qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
-                                self.cfg.pad_multiple, fill=-1)
+                                self.engine.batch_multiple, fill=-1)
         return np.asarray(self._predict_fn(jnp.asarray(qt)))[:n]
 
     def params_of(self, classes: np.ndarray) -> np.ndarray:

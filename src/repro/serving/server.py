@@ -1,32 +1,24 @@
-"""Deprecated synchronous front-end, now a shim over RetrievalService.
+"""Shared serving stats surface.
 
-``serve_loop`` predates the unified async API (serving/service.py); it is
-kept for one PR as a thin wrapper so existing callers keep working, and
-will be removed.  New code should construct the service directly:
+The synchronous ``serve_loop`` front-end that used to live here was
+deprecated in favor of the unified async API (serving/service.py) and has
+been removed.  Construct the service directly:
 
     from repro.serving.service import EngineBackend, RetrievalService
     service = RetrievalService(EngineBackend(server))
     results = service.serve_all(query_terms)
 
-``ServerStats`` remains the shared stats surface: the service's
-``stats()`` returns one, now with the queue-delay vs service-time
-breakdown the admission path exposes.
+``ServerStats`` remains: the service's ``stats()`` returns one, with the
+queue-delay vs service-time breakdown the admission path exposes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
 
 import numpy as np
 
-from repro.core import tradeoff
-from repro.serving import bucketing
-from repro.serving.admission import AdmissionConfig
-from repro.serving.pipeline import RetrievalServer
-from repro.serving.service import EngineBackend, RetrievalService
-
-__all__ = ["ServerStats", "serve_loop"]
+__all__ = ["ServerStats"]
 
 
 def _pct(xs, q: float) -> float:
@@ -78,36 +70,3 @@ class ServerStats:
         return (f"q={self.n_queries} p50={self.p50_ms:.1f}ms "
                 f"p99={self.p99_ms:.1f}ms mean_param={self.mean_param:.0f}"
                 + env + queue + stages + comp)
-
-
-def serve_loop(server: RetrievalServer, query_terms: np.ndarray,
-               batch: int = 128, med_table: np.ndarray | None = None,
-               tau: float = 0.05, warmup: int = 1) -> ServerStats:
-    """Deprecated: run the dynamic pipeline over a query stream.
-
-    Thin wrapper over ``RetrievalService`` now; the admission queue forms
-    the micro-batches (max_batch = ``batch``), and the trailing partial
-    batch is served padded instead of silently dropped, so ``n_queries``
-    counts every query in the stream.
-    """
-    warnings.warn(
-        "serve_loop is deprecated; use serving.service.RetrievalService "
-        "with an EngineBackend", DeprecationWarning, stacklevel=2)
-    n = query_terms.shape[0]
-    backend = EngineBackend(server, query_len=query_terms.shape[1])
-    service = RetrievalService(backend, AdmissionConfig(
-        max_batch=batch, pad_multiple=server.cfg.pad_multiple))
-    for _ in range(warmup):
-        server.serve_batch(query_terms[:min(batch, n)])
-    # submit the stream in arrival order; equal deadlines keep FIFO, so
-    # batches are exactly the contiguous micro-batches (plus the tail)
-    results = service.serve_all(list(query_terms))
-    classes = np.array([r["class"] for r in results])
-    stats = service.stats()
-    stats.pct_in_envelope = None
-    if med_table is not None:
-        compliant = [
-            tradeoff.pct_under_target(med_table[lo:hi], classes[lo:hi], tau)
-            for lo, hi in bucketing.batch_slices(n, batch)]
-        stats.pct_in_envelope = float(np.mean(compliant))
-    return stats

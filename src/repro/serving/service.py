@@ -15,9 +15,10 @@ request/response API:
   queue forms batches by deadline and max-batch-size over the engine's
   pad grid and returns per-request futures.
 * **Backends**: anything implementing the small ``Backend`` protocol —
-  ``EngineBackend`` (cascade + single-dispatch engine) and
-  ``FunnelBackend`` (two-tower + BST funnel) ship here; multi-host
-  sharded serving becomes a third backend later, with no service change.
+  ``EngineBackend`` (cascade + single-dispatch engine),
+  ``ShardedEngineBackend`` (the same pipeline over a device mesh: doc
+  dim sharded over 'model', request batches over ('pod','data')), and
+  ``FunnelBackend`` (two-tower + BST funnel).
 * **Overlap**: the backend splits into ``predict`` (the admission-side
   cascade) and ``execute`` (the staged engine dispatch); the service runs
   them on separate threads connected by a bounded handoff queue, so the
@@ -44,8 +45,8 @@ import numpy as np
 
 from repro.serving.admission import AdmissionConfig, AdmissionQueue, Batch
 
-__all__ = ["Backend", "EngineBackend", "FunnelBackend", "WarmupPolicy",
-           "RetrievalService"]
+__all__ = ["Backend", "EngineBackend", "ShardedEngineBackend",
+           "FunnelBackend", "WarmupPolicy", "RetrievalService"]
 
 
 # ------------------------------------------------------------- backends --
@@ -96,7 +97,9 @@ class EngineBackend:
 
     def __init__(self, server, query_len: int | None = None):
         self.server = server
-        self.pad_multiple = server.cfg.pad_multiple
+        # the engine's grid, not the config's: a mesh-sharded engine
+        # widens it so padded batches also divide over the data axes
+        self.pad_multiple = server.engine.batch_multiple
         self.n_classes = len(server.cfg.cutoffs) + 1
         self.query_len = query_len     # learned from the first batch
 
@@ -130,6 +133,34 @@ class EngineBackend:
     @property
     def n_compiles(self) -> int | None:
         return self.server.engine.n_compiles
+
+
+class ShardedEngineBackend(EngineBackend):
+    """EngineBackend over a mesh-sharded engine.
+
+    Identical protocol surface — admission, prediction/dispatch overlap,
+    learned warmup and per-stage timing all work unchanged — but the
+    engine shards the candidate dimension over the mesh's 'model' axis
+    and request batches over ('pod', 'data').  The admission
+    ``pad_multiple`` (inherited from ``engine.batch_multiple``) and
+    ``warmup_shape`` therefore account for the mesh: every padded batch
+    divides over the data axes, and warming a shape pre-compiles the
+    shard_map executables for it.
+
+    Build the server with a mesh::
+
+        server = RetrievalServer(index, casc, cfg, mesh=mesh)
+        service = RetrievalService(ShardedEngineBackend(server))
+    """
+
+    def __init__(self, server, query_len: int | None = None):
+        from repro.serving.engine import ShardedServingEngine
+        if not isinstance(server.engine, ShardedServingEngine):
+            raise TypeError(
+                "ShardedEngineBackend needs a RetrievalServer built with "
+                "a mesh (RetrievalServer(..., mesh=mesh)); got an "
+                "unsharded engine — use EngineBackend for that.")
+        super().__init__(server, query_len)
 
 
 class FunnelBackend:

@@ -43,9 +43,16 @@ _SCRIPT = textwrap.dedent("""
     # --- sharded_topk == lax.top_k over the sharded axis ---
     s = jnp.asarray(np.random.default_rng(1).normal(size=(3, 64))
                     .astype(np.float32))
-    v, i = jax.jit(lambda x: sharded_topk(mesh, x, 7))(s)
-    vr, ir = jax.lax.top_k(s, 7)
-    assert bool(jnp.all(v == vr)) and bool(jnp.all(i == ir)), "sharded topk"
+    for k in (7, 40, 64):   # 40 > 64//2 shard width; 64 == N
+        v, i = jax.jit(lambda x, k=k: sharded_topk(mesh, x, k))(s)
+        vr, ir = jax.lax.top_k(s, k)
+        assert bool(jnp.all(v == vr)) and bool(jnp.all(i == ir)), \\
+            f"sharded topk k={k}"
+    su = jnp.asarray(np.random.default_rng(3).normal(size=(3, 61))
+                     .astype(np.float32))        # 61 % 2 != 0: padded shard
+    v, i = jax.jit(lambda x: sharded_topk(mesh, x, 33))(su)
+    vr, ir = jax.lax.top_k(su, 33)
+    assert bool(jnp.all(v == vr)) and bool(jnp.all(i == ir)), "uneven N"
 
     # --- compressed all-reduce across real shards ---
     from repro.optim import compression

@@ -1,7 +1,7 @@
 """Unified async RetrievalService: deadline-driven admission, futures
 bit-identical to the synchronous serve_batch path, pad-grid round-trips,
 compile count O(1) under mixed batch sizes, the Funnel backend, and the
-ServerStats / serve_loop satellites."""
+ServerStats satellites."""
 
 import math
 
@@ -307,7 +307,7 @@ def test_funnel_backend_warmup_shape(tiny_funnel):
     assert backend.warmup_shape(8) == 0       # already warm
 
 
-# ----------------------------------------- ServerStats / serve_loop shim --
+# ------------------------------------------------------------ ServerStats --
 
 def test_server_stats_empty_percentiles_nan():
     stats = server_lib.ServerStats(
@@ -326,12 +326,24 @@ def test_server_stats_summary_queue_breakdown():
     assert "queue_p50=1.0ms" in s and "service_p50=2.0ms" in s
 
 
-def test_serve_loop_shim_serves_tail_and_warns(small_system):
+def test_serve_loop_shim_removed():
+    """The PR-2 deprecation shim is gone; ServerStats is what remains."""
+    assert not hasattr(server_lib, "serve_loop")
+    assert server_lib.__all__ == ["ServerStats"]
+
+
+def test_service_stream_serves_tail(small_system):
+    """The service (which replaced serve_loop) still serves the trailing
+    partial micro-batch padded to the grid instead of dropping it."""
     server = _server(small_system)
     qt = small_system.queries.terms[:20]      # 20 = 2*8 + tail of 4
-    with pytest.warns(DeprecationWarning, match="RetrievalService"):
-        stats = server_lib.serve_loop(server, qt, batch=8, warmup=0)
-    assert stats.n_queries == 20              # tail no longer dropped
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=8, pad_multiple=8))
+    results = service.serve_all(list(qt))
+    assert len(results) == 20
+    stats = service.stats()
+    assert stats.n_queries == 20              # tail not dropped
     assert stats.class_histogram.sum() == 20
     assert stats.p99_ms >= stats.p50_ms > 0
     assert stats.queue_ms is not None and len(stats.queue_ms) == 20

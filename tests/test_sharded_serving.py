@@ -1,0 +1,177 @@
+"""Mesh-sharded serving engine: bit-identity vs the single-host engine on
+1/2/4-way meshes, compile-count O(1) on the mesh, and the fixed
+``sharded_topk`` regressions (k > shard width, uneven N, k == N, ties).
+
+Multi-device cases run on a forced 8-device CPU mesh in a subprocess so
+the main session keeps 1 device (same idiom as test_distributed)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import experiment as E
+    from repro.distrib.collectives import sharded_topk
+    from repro.distrib.sharding import make_compat_mesh
+    from repro.serving import pipeline as sp
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import RetrievalService, ShardedEngineBackend
+
+    # --- sharded_topk == lax.top_k: k > shard width, uneven N, k == N ---
+    mesh4 = make_compat_mesh((1, 4), ("data", "model"))
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(size=(3, 37)).astype(np.float32))
+    for k in (5, 11, 37):          # 11 > 37//4, 37 == N (uneven shards)
+        v, i = jax.jit(lambda x, k=k: sharded_topk(mesh4, x, k))(s)
+        vr, ir = jax.lax.top_k(s, k)
+        assert bool(jnp.all(v == vr)) and bool(jnp.all(i == ir)), \\
+            f"sharded_topk k={k}"
+    # deterministic ties: integer-valued scores, lowest doc id must win
+    st = jnp.asarray(rng.integers(0, 3, (4, 24)).astype(np.float32))
+    v, i = jax.jit(lambda x: sharded_topk(mesh4, x, 10))(st)
+    vr, ir = jax.lax.top_k(st, 10)
+    assert bool(jnp.all(v == vr)) and bool(jnp.all(i == ir)), "topk ties"
+
+    # --- engine bit-identity: every rho/k bucket, 1/2/4-way meshes, ---
+    # --- uneven n_docs (301 % 4 != 0) and max_k (100) > shard width ---
+    sys_ = E.build_system(E.ExperimentConfig(
+        n_docs=301, vocab=900, n_queries=40, stream_cap=128,
+        pool_depth=100, gold_depth=50, query_batch=16, seed=5))
+
+    def make_server(mesh=None, knob="k"):
+        cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+        cfg = sp.ServingConfig(knob=knob, cutoffs=cuts, rerank_depth=30,
+                               stream_cap=sys_.cfg.stream_cap)
+        srv = sp.RetrievalServer(sys_.index, None, cfg, mesh=mesh)
+        # stub predictor: one query per class, deterministic across paths
+        srv.predict_classes = (
+            lambda qt: np.arange(qt.shape[0]) % (len(cuts) + 1))
+        return srv
+
+    refs = {knob: make_server(None, knob) for knob in ("k", "rho")}
+    for S in (1, 2, 4):
+        mesh = make_compat_mesh((1, S), ("data", "model"))
+        for knob in ("k", "rho"):
+            sh = make_server(mesh, knob)
+            for n in (16, 37):                 # full + tail batch shapes
+                qt = sys_.queries.terms[:n]
+                a = refs[knob].serve_batch(qt)
+                b = sh.serve_batch(qt)
+                assert np.array_equal(a["ranked"], b["ranked"]), \\
+                    f"S={S} knob={knob} n={n}"
+                assert np.array_equal(a["widths"], b["widths"])
+        # fixed param beyond the cutoff grid: k == n_docs (pool wider
+        # than every shard; dedicated executable path)
+        a = refs["k"].serve_fixed(qt, sys_.index.corpus.n_docs)
+        b = make_server(mesh, "k").serve_fixed(qt, sys_.index.corpus.n_docs)
+        assert np.array_equal(a["ranked"], b["ranked"]), f"S={S} k==N"
+
+    # --- request batches over ('pod','data') while docs shard over model
+    mesh = make_compat_mesh((2, 2, 2), ("pod", "data", "model"))
+    sh = make_server(mesh, "k")
+    qt = sys_.queries.terms[:37]
+    assert np.array_equal(refs["k"].serve_batch(qt)["ranked"],
+                          sh.serve_batch(qt)["ranked"]), "pod/data mesh"
+
+    # --- compile count O(1) under mixed batch sizes on the mesh ---
+    mesh = make_compat_mesh((2, 2), ("data", "model"))
+    srv = make_server(mesh, "k")
+    backend = ShardedEngineBackend(
+        srv, query_len=sys_.queries.terms.shape[1])
+    service = RetrievalService(backend, AdmissionConfig(
+        max_batch=16, pad_multiple=backend.pad_multiple))
+    service.warmup_now([8, 16])
+    base = srv.engine.n_compiles
+    assert base > 0
+    for n in (3, 5, 8, 11, 16, 13, 4):     # all snap to warmed {8, 16}
+        service.serve_all(list(sys_.queries.terms[:n]))
+    assert srv.engine.n_compiles == base, \\
+        (srv.engine.n_compiles, base)
+    assert set(service.queue.shape_counts) <= {8, 16}
+
+    print("ALL_OK")
+""")
+
+
+def test_sharded_serving_bit_identity_and_compile_count():
+    r = subprocess.run([sys.executable, "-c", _SCRIPT],
+                       capture_output=True, text=True, cwd="/root/repo",
+                       timeout=600)
+    assert "ALL_OK" in r.stdout, r.stdout + r.stderr
+
+
+# ------------------------------------------- single-device (in-process) --
+
+def test_sharded_topk_rejects_missing_axis():
+    """A mesh without the requested axis must raise the actionable
+    ValueError, not a KeyError from inside tracing (configs/mind.py
+    regression)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.distrib.collectives import sharded_topk
+    from repro.distrib.sharding import make_compat_mesh
+
+    mesh = make_compat_mesh((1,), ("data",))
+    s = jnp.asarray(np.zeros((2, 8), np.float32))
+    with pytest.raises(ValueError, match="axis 'model' is not an axis"):
+        sharded_topk(mesh, s, 3)
+
+
+def test_sharded_topk_rejects_bad_k():
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.distrib.collectives import sharded_topk
+    from repro.launch.mesh import make_smoke_mesh
+
+    s = jnp.asarray(np.zeros((2, 8), np.float32))
+    with pytest.raises(ValueError, match="outside"):
+        sharded_topk(make_smoke_mesh(), s, 9)
+
+
+def test_sharded_backend_requires_sharded_engine(tiny_system):
+    from repro.serving import pipeline as sp
+    from repro.serving.service import ShardedEngineBackend
+
+    cfg = sp.ServingConfig(knob="k", cutoffs=tiny_system.k_cutoffs,
+                           rerank_depth=30,
+                           stream_cap=tiny_system.cfg.stream_cap)
+    server = sp.RetrievalServer(tiny_system.index, None, cfg)
+    with pytest.raises(TypeError, match="mesh"):
+        ShardedEngineBackend(server)
+
+
+def test_sharded_engine_smoke_mesh_matches_unsharded(tiny_system):
+    """On the 1-device smoke mesh the sharded engine is a drop-in:
+    same rankings through the service front door, no subprocess needed."""
+    import numpy as np
+
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.serving import pipeline as sp
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import RetrievalService, ShardedEngineBackend
+
+    cuts = tiny_system.k_cutoffs
+    cfg = sp.ServingConfig(knob="k", cutoffs=cuts, rerank_depth=30,
+                           stream_cap=tiny_system.cfg.stream_cap)
+    ref = sp.RetrievalServer(tiny_system.index, None, cfg)
+    srv = sp.RetrievalServer(tiny_system.index, None, cfg,
+                             mesh=make_smoke_mesh())
+    for s in (ref, srv):
+        s.predict_classes = (
+            lambda qt: np.arange(qt.shape[0]) % (len(cuts) + 1))
+    service = RetrievalService(
+        ShardedEngineBackend(srv),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    qt = tiny_system.queries.terms[:16]
+    results = service.serve_all(list(qt))
+    direct = ref.serve_batch(qt)
+    np.testing.assert_array_equal(
+        np.stack([r["ranked"] for r in results]), direct["ranked"])

@@ -96,13 +96,16 @@ def test_rho_knob_generalizes(tiny_system):
     assert rows["cascade_t0.75"]["k_gain_pct"] > 0
 
 
-def test_server_loop_stats(tiny_system):
+def test_service_stream_stats(tiny_system):
+    """The service front door over a trained cascade: stream stats and
+    envelope compliance (what the removed serve_loop used to report)."""
     import numpy as np
     from repro.core import cascade as cascade_lib
     from repro.core import experiment as E
-    from repro.core import labeling
+    from repro.core import labeling, tradeoff
     from repro.serving import pipeline as serve_lib
-    from repro.serving import server as server_lib
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import EngineBackend, RetrievalService
 
     med = E.med_tables(tiny_system, "k", metrics=("rbp",))["rbp"]
     labels = np.asarray(labeling.envelope_labels(med, 0.05))
@@ -114,10 +117,16 @@ def test_server_loop_stats(tiny_system):
         serve_lib.ServingConfig(knob="k", cutoffs=tiny_system.k_cutoffs,
                                 threshold=0.75, rerank_depth=30,
                                 stream_cap=tiny_system.cfg.stream_cap))
-    stats = server_lib.serve_loop(srv, tiny_system.queries.terms[:64],
-                                  batch=32, med_table=med[:64], tau=0.05)
+    service = RetrievalService(
+        EngineBackend(srv),
+        AdmissionConfig(max_batch=32, pad_multiple=srv.cfg.pad_multiple))
+    results = service.serve_all(list(tiny_system.queries.terms[:64]))
+    stats = service.stats()
     assert stats.n_queries == 64
     assert stats.p99_ms >= stats.p50_ms > 0
     assert stats.class_histogram.sum() == 64
+    classes = np.array([r["class"] for r in results])
+    stats.pct_in_envelope = tradeoff.pct_under_target(
+        med[:64], classes, 0.05)
     assert stats.pct_in_envelope is not None
     print(stats.summary())
