@@ -22,6 +22,8 @@ def main() -> None:
         paper_tables.bench_variable_thresholds,
         paper_tables.bench_med_throughput,
         bench_kernels.bench_kernels,
+        bench_kernels.bench_impact_scan_sweep,
+        bench_kernels.bench_kernel_service_compiles,
         bench_kernels.bench_cascade_latency,
         bench_kernels.bench_serving,
         bench_serving.bench_dynamic_vs_fixed,
@@ -31,7 +33,7 @@ def main() -> None:
         roofline.bench_roofline,
     ]
     print("name,us_per_call,derived")
-    failures = 0
+    failed: list[str] = []
     serving_rows = []
     for b in benches:
         try:
@@ -41,12 +43,18 @@ def main() -> None:
                     serving_rows.append(row)
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception:
-            failures += 1
+            failed.append(b.__name__)
             print(f"{b.__name__},nan,ERROR", flush=True)
             traceback.print_exc(file=sys.stderr)
     if serving_rows:   # the cross-PR perf trajectory record
         path = bench_serving.write_bench_json(serving_rows)
         print(f"wrote {path}", file=sys.stderr)
+    if "bench_impact_scan_sweep" not in failed:
+        # only persist a complete sweep (a partial one would overwrite
+        # the committed summary with incomplete data at tiny scale)
+        path = bench_kernels.write_kernels_json()
+        print(f"wrote {path}", file=sys.stderr)
+    failures = len(failed)
     if failures:
         raise SystemExit(f"{failures} benchmark(s) failed")
 

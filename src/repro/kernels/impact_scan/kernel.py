@@ -1,24 +1,40 @@
 """Pallas TPU kernel: JASS score-at-a-time impact accumulation.
 
-The ρ knob's inner loop: add quantized impact contributions of the first ρ
-postings of a query's impact-ordered stream into a dense document
-accumulator.  On CPU JASS this is a scalar scatter loop; the TPU
+The ρ knob's inner loop: add quantized impact contributions of the first
+``rho[q]`` postings of a query's impact-ordered stream into a dense
+document accumulator.  On CPU JASS this is a scalar scatter loop; the TPU
 adaptation (DESIGN.md §3) reformulates the scatter as a *blocked one-hot
 matmul*, which the MXU executes densely:
 
     grid = (Q, n_doc_blocks, n_posting_blocks)
     acc[q, db] += impacts[q, pb] @ onehot(doc_ids[q, pb] == doc_range(db))
 
-ρ enters twice, preserving JASS's anytime semantics exactly:
-  * the posting-block grid axis is truncated to ceil(ρ / block_p) — early
-    termination as static grid truncation,
-  * a within-block mask kills the ragged tail beyond ρ.
+ρ is a **traced per-query scalar**, delivered to the kernel through
+scalar prefetch (SMEM), so one compiled executable serves every ρ bucket
+— the grid stays the full padded stream length and early termination
+happens per (query, posting-block) grid cell at run time:
+
+  * ``pl.when(pb * block_p < rho[q])`` skips posting blocks entirely
+    beyond the query's ρ — the anytime knob as a run-time grid skip,
+  * a within-block mask kills the ragged tail where ρ cuts mid-block.
+
+Segment metadata makes the dense grid sparse in the doc dimension too:
+``seg_lo``/``seg_hi`` carry each posting block's min/max doc id (computed
+where the stream is materialized — ``retrieval.index.block_doc_bounds``),
+and a (posting-block, doc-block) cell is skipped when the block's doc-id
+range does not intersect the doc tile.  Exhausted stream blocks carry the
+empty interval ``(n_docs, -1)`` and never execute.
+
+With a constant ρ vector the output is bit-identical to
+``impact_scan_ref`` for integer-valued impacts (the production streams
+are 8-bit quantized, so every partial sum is exact in f32; see
+tests/test_kernels.py).
 
 VMEM at defaults (block_p=512, block_d=2048): onehot tile 512*2048*4B =
-4 MiB + acc tile 8 KiB — double-bufferable in 16 MiB v5e VMEM.  Posting
-blocks whose doc ids fall entirely outside the doc tile still occupy grid
-slots; with segment metadata (per-block min/max doc id) they become
-``pl.when`` skips — the §Perf log measures that variant.
+4 MiB + acc tile 8 KiB — double-bufferable in 16 MiB v5e VMEM.  The
+scalar-prefetch operands (ρ and the segment bounds) are tiny int32 arrays
+resident in SMEM before the body runs, which is what lets the skip
+predicates gate the DMA-fed compute without touching VMEM.
 """
 
 from __future__ import annotations
@@ -28,66 +44,139 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["impact_scan"]
+__all__ = ["impact_scan", "live_cell_count", "posting_blocks"]
 
 
-def _impact_kernel(docs_ref, imps_ref, acc_ref, *, rho: int, block_p: int,
-                   block_d: int):
-    pb = pl.program_id(2)
+def posting_blocks(p: int, block_p: int) -> tuple[int, int]:
+    """(clamped block size, block count) for a stream of length ``p``.
+
+    Shared by the kernel and every producer of per-block segment metadata
+    so bounds arrays always agree with the kernel's grid.
+    """
+    bp = min(block_p, p)
+    return bp, -(-p // bp)
+
+
+def _impact_kernel(rho_ref, seg_lo_ref, seg_hi_ref, docs_ref, imps_ref,
+                   acc_ref, *stats_ref, block_p: int, block_d: int):
+    q = pl.program_id(0)
     db = pl.program_id(1)
+    pb = pl.program_id(2)
 
     @pl.when(pb == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if stats_ref:
+            stats_ref[0][...] = jnp.zeros_like(stats_ref[0])
 
-    docs = docs_ref[0]                               # (block_p,) int32
-    imps = imps_ref[0]                               # (block_p,) f32
-    # rho mask: global posting index < rho, and padding (-1 docs) dropped
-    pidx = pb * block_p + jax.lax.broadcasted_iota(
-        jnp.int32, (block_p,), 0)
-    live = (pidx < rho) & (docs >= 0)
-    w = jnp.where(live, imps, 0.0)
-    # one-hot over this doc tile: (block_p, block_d)
     base = db * block_d
-    onehot = (docs[:, None] - base
-              == jax.lax.broadcasted_iota(jnp.int32, (block_p, block_d), 1))
-    contrib = jax.lax.dot_general(
-        w[None, :], onehot.astype(jnp.float32),
-        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    acc_ref[0] += contrib[0]
+    # run-time grid sparsity: ρ early termination + segment intersection
+    live = ((pb * block_p < rho_ref[q])
+            & (seg_lo_ref[q, pb] < base + block_d)
+            & (seg_hi_ref[q, pb] >= base))
+
+    @pl.when(live)
+    def _body():
+        docs = docs_ref[0]                           # (block_p,) int32
+        imps = imps_ref[0]                           # (block_p,) f32
+        # rho mask: global posting index < rho[q]; padding (-1) dropped
+        pidx = pb * block_p + jax.lax.broadcasted_iota(
+            jnp.int32, (block_p,), 0)
+        keep = (pidx < rho_ref[q]) & (docs >= 0)
+        w = jnp.where(keep, imps, 0.0)
+        # one-hot over this doc tile: (block_p, block_d)
+        onehot = (docs[:, None] - base
+                  == jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_p, block_d), 1))
+        contrib = jax.lax.dot_general(
+            w[None, :], onehot.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        acc_ref[0] += contrib[0]
+        if stats_ref:
+            stats_ref[0][0, 0] += 1
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n_docs", "rho", "block_p", "block_d",
+    jax.jit, static_argnames=("n_docs", "block_p", "block_d", "with_stats",
                               "interpret"))
-def impact_scan(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
-                n_docs: int, rho: int, block_p: int = 512,
-                block_d: int = 2048, interpret: bool = True) -> jnp.ndarray:
-    """doc_stream: (Q, P) int32 (-1 padded), impact_stream: (Q, P) f32,
-    both impact-descending.  Returns (Q, n_docs) accumulators equal to
-    processing exactly the first ``rho`` postings."""
+def impact_scan(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray,
+                rho_vec: jnp.ndarray, seg_lo: jnp.ndarray,
+                seg_hi: jnp.ndarray, *, n_docs: int, block_p: int = 512,
+                block_d: int = 2048, with_stats: bool = False,
+                interpret: bool = True):
+    """Accumulate the first ``rho_vec[q]`` postings of each stream.
+
+    doc_stream: (Q, P) int32 (-1 padded), impact_stream: (Q, P) f32, both
+    impact-descending.  rho_vec: (Q,) int32 traced per-query ρ.
+    seg_lo/seg_hi: (Q, n_posting_blocks) int32 per-block min/max doc id
+    (empty blocks: the empty interval ``(n_docs, -1)``).
+
+    Returns (Q, n_docs) accumulators equal to processing exactly the
+    first ``rho_vec[q]`` postings of query ``q``; with ``with_stats``
+    also returns a (Q, n_doc_blocks) int32 count of grid-cell bodies
+    actually executed (the dense kernel would run
+    ``n_doc_blocks * n_posting_blocks`` per query).
+    """
     qn, p = doc_stream.shape
-    bp = min(block_p, p)
-    n_p_full = -(-p // bp)
-    # early termination: only schedule posting blocks below rho
-    n_p = min(n_p_full, -(-rho // bp)) if rho > 0 else 0
-    n_p = max(n_p, 1)
+    bp, n_p = posting_blocks(p, block_p)
+    if rho_vec.shape != (qn,):
+        raise ValueError(f"rho_vec must be shaped ({qn},), got "
+                         f"{rho_vec.shape}")
+    if seg_lo.shape != (qn, n_p) or seg_hi.shape != (qn, n_p):
+        raise ValueError(
+            f"segment bounds must be shaped ({qn}, {n_p}) for block_p="
+            f"{block_p} (got {seg_lo.shape} / {seg_hi.shape}); compute "
+            "them with retrieval.index.block_doc_bounds at the same "
+            "block size")
+    p_pad = n_p * bp
+    if p_pad != p:  # pad the ragged tail so the last block reads real data
+        doc_stream = jnp.pad(doc_stream, ((0, 0), (0, p_pad - p)),
+                             constant_values=-1)
+        impact_stream = jnp.pad(impact_stream, ((0, 0), (0, p_pad - p)),
+                                constant_values=0.0)
     bd = min(block_d, n_docs)
     n_d = -(-n_docs // bd)
     d_pad = n_d * bd
 
-    kernel = functools.partial(_impact_kernel, rho=rho, block_p=bp,
-                               block_d=bd)
-    out = pl.pallas_call(
-        kernel,
+    kernel = functools.partial(_impact_kernel, block_p=bp, block_d=bd)
+    out_specs = [pl.BlockSpec((1, bd), lambda q, d, s, *refs: (q, d))]
+    out_shape = [jax.ShapeDtypeStruct((qn, d_pad), jnp.float32)]
+    if with_stats:
+        out_specs.append(pl.BlockSpec((1, 1), lambda q, d, s, *refs: (q, d)))
+        out_shape.append(jax.ShapeDtypeStruct((qn, n_d), jnp.int32))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,           # rho_vec, seg_lo, seg_hi in SMEM
         grid=(qn, n_d, n_p),
         in_specs=[
-            pl.BlockSpec((1, bp), lambda q, d, s: (q, s)),
-            pl.BlockSpec((1, bp), lambda q, d, s: (q, s)),
+            pl.BlockSpec((1, bp), lambda q, d, s, *refs: (q, s)),
+            pl.BlockSpec((1, bp), lambda q, d, s, *refs: (q, s)),
         ],
-        out_specs=pl.BlockSpec((1, bd), lambda q, d, s: (q, d)),
-        out_shape=jax.ShapeDtypeStruct((qn, d_pad), jnp.float32),
+        out_specs=out_specs,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         interpret=interpret,
-    )(doc_stream, impact_stream)
-    return out[:, :n_docs]
+    )(rho_vec.astype(jnp.int32), seg_lo.astype(jnp.int32),
+      seg_hi.astype(jnp.int32), doc_stream, impact_stream)
+    acc = out[0][:, :n_docs]
+    return (acc, out[1]) if with_stats else acc
+
+
+def live_cell_count(rho_vec, seg_lo, seg_hi, *, p: int, n_docs: int,
+                    block_p: int = 512, block_d: int = 2048) -> jnp.ndarray:
+    """Grid-cell bodies the kernel will execute — the same predicate the
+    kernel evaluates, summed over the grid.  The dense kernel executes
+    ``Q * n_doc_blocks * n_posting_blocks``; benchmarks report both."""
+    bp, n_p = posting_blocks(p, block_p)
+    bd = min(block_d, n_docs)
+    n_d = -(-n_docs // bd)
+    pb = jnp.arange(n_p, dtype=jnp.int32)
+    base = jnp.arange(n_d, dtype=jnp.int32) * bd
+    live = ((pb[None, None, :] * bp < rho_vec[:, None, None])
+            & (seg_lo[:, None, :] < base[None, :, None] + bd)
+            & (seg_hi[:, None, :] >= base[None, :, None]))
+    return jnp.sum(live.astype(jnp.int32))

@@ -1,21 +1,81 @@
-"""jit'd wrapper for impact_scan with kernel/oracle dispatch."""
+"""Wrapper for impact_scan with kernel/oracle dispatch and validation.
+
+``rho`` may be a static Python int (the classic JASS call shape — rho==0
+short-circuits to zeros without a kernel launch) or a traced (Q,) integer
+vector (the serving engine's per-query predicted ρ — one executable
+serves every ρ bucket).  Segment bounds (per-posting-block min/max doc
+id, see ``retrieval.index.block_doc_bounds``) turn the kernel's dense
+(posting-block, doc-block) grid sparse; when absent, full-range bounds
+are synthesized and only the ρ skip applies.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.impact_scan.kernel import impact_scan as _kernel
-from repro.kernels.impact_scan.ref import impact_scan_ref
+from repro.kernels.impact_scan.kernel import posting_blocks
+from repro.kernels.impact_scan.ref import (impact_scan_masked_ref,
+                                           impact_scan_ref)
 
 __all__ = ["saat_accumulate"]
 
 
 def saat_accumulate(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
-                    n_docs: int, rho: int, use_kernel: bool = True,
+                    n_docs: int, rho, use_kernel: bool = True,
                     block_p: int = 512, block_d: int = 2048,
-                    interpret: bool = True) -> jnp.ndarray:
-    """Score-at-a-time accumulation of the first ``rho`` postings."""
-    if use_kernel:
-        return _kernel(doc_stream, impact_stream, n_docs=n_docs, rho=rho,
-                       block_p=block_p, block_d=block_d, interpret=interpret)
-    return impact_scan_ref(doc_stream, impact_stream, n_docs=n_docs, rho=rho)
+                    seg_bounds=None, with_stats: bool = False,
+                    interpret: bool = True):
+    """Score-at-a-time accumulation of the first ``rho`` postings.
+
+    rho: static int or traced (Q,) integer vector.
+    seg_bounds: optional (seg_lo, seg_hi) pair, each (Q, n_posting_blocks)
+    int32 at the same ``block_p`` (kernel path only).
+    with_stats: also return the kernel's executed-grid-cell counts
+    (kernel path only).
+    """
+    qn, p = doc_stream.shape
+    static_rho = None
+    if isinstance(rho, (int, np.integer)):
+        if rho < 0:
+            raise ValueError(f"rho must be >= 0, got {rho}")
+        static_rho = int(rho)
+        rho_vec = jnp.full((qn,), min(rho, p), jnp.int32)
+    else:
+        rho_vec = jnp.asarray(rho)
+        if not jnp.issubdtype(rho_vec.dtype, jnp.integer):
+            raise ValueError(
+                f"rho_vec must have an integer dtype, got {rho_vec.dtype} "
+                "(per-query ρ is a posting count, not a score)")
+        if rho_vec.shape != (qn,):
+            raise ValueError(f"rho_vec must be shaped ({qn},), got "
+                             f"{rho_vec.shape}")
+        rho_vec = rho_vec.astype(jnp.int32)
+
+    if not use_kernel:
+        if with_stats:
+            raise ValueError("with_stats requires use_kernel=True "
+                             "(the oracle runs no grid)")
+        if static_rho is not None:
+            return impact_scan_ref(doc_stream, impact_stream,
+                                   n_docs=n_docs, rho=static_rho)
+        return impact_scan_masked_ref(doc_stream, impact_stream, rho_vec,
+                                      n_docs=n_docs)
+
+    if static_rho == 0:           # nothing to score: no kernel launch
+        zeros = jnp.zeros((qn, n_docs), jnp.float32)
+        if with_stats:
+            bd = min(block_d, n_docs)
+            return zeros, jnp.zeros((qn, -(-n_docs // bd)), jnp.int32)
+        return zeros
+
+    if seg_bounds is None:        # full-range bounds: only the ρ skip fires
+        _, n_p = posting_blocks(p, block_p)
+        seg_lo = jnp.zeros((qn, n_p), jnp.int32)
+        seg_hi = jnp.full((qn, n_p), n_docs - 1, jnp.int32)
+    else:
+        seg_lo, seg_hi = seg_bounds
+    return _kernel(doc_stream, impact_stream, rho_vec, seg_lo, seg_hi,
+                   n_docs=n_docs, block_p=block_p, block_d=block_d,
+                   with_stats=with_stats, interpret=interpret)

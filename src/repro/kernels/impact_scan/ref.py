@@ -1,11 +1,13 @@
-"""Pure-jnp oracle for impact_scan — identical to retrieval.jass.saat_scores."""
+"""Pure-jnp oracles for impact_scan — identical to retrieval.jass's
+``saat_scores`` (static rho) and ``saat_scores_masked`` (traced per-query
+rho vector)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["impact_scan_ref"]
+__all__ = ["impact_scan_ref", "impact_scan_masked_ref"]
 
 
 def impact_scan_ref(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
@@ -16,3 +18,16 @@ def impact_scan_ref(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
         return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(contrib)
 
     return jax.vmap(one)(doc_stream, impact_stream)
+
+
+def impact_scan_masked_ref(doc_stream: jnp.ndarray,
+                           impact_stream: jnp.ndarray,
+                           rho_vec: jnp.ndarray, *,
+                           n_docs: int) -> jnp.ndarray:
+    """Per-query traced rho: accumulate the first ``rho_vec[q]`` postings."""
+    def one(docs, imps, rho):
+        mask = (jnp.arange(docs.shape[0]) < rho) & (docs >= 0)
+        contrib = jnp.where(mask, imps, 0.0)
+        return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(contrib)
+
+    return jax.vmap(one)(doc_stream, impact_stream, rho_vec)

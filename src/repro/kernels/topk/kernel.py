@@ -3,10 +3,15 @@
 Two-stage selection over dense stage-1 scores (DESIGN.md §3):
 
   stage 1 (this kernel): each (query, score-block) grid cell extracts its
-  local top-k' (k' = min(k, 128)) by iterative max-extraction — k' rounds
-  of vector max + masked knockout, entirely in VMEM/VPU registers.  The
-  global top-k is provably contained in the union of per-block top-k'
-  whenever k <= k' or k >= block size.
+  local top-k' by iterative max-extraction — k' rounds of vector max +
+  masked knockout, entirely in VMEM/VPU registers.  The global top-k is
+  provably contained in the union of per-block top-k' **iff k <= k'**
+  (one block may hold up to k of the global top-k; any weaker condition
+  — in particular "k >= block size" with k' < block size — silently
+  drops candidates).  The kernel supports k' <= KP_MAX = 128, so exact
+  selection wider than 128 must use the oracle path
+  (``ops.topk_select`` falls back automatically); ``block_topk`` itself
+  rejects an out-of-range k' rather than return a wrong pool.
 
   stage 2 (ops.py): a single jnp top_k over the (n_blocks * k') surviving
   candidates — tiny compared to the original score vector.
@@ -28,9 +33,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["block_topk"]
+__all__ = ["KP_MAX", "block_topk"]
 
 NEG_INF = -jnp.inf
+
+#: widest per-block selection the iterative-extraction kernel supports —
+#: beyond this the containment guarantee must come from the oracle path
+KP_MAX = 128
 
 
 def _topk_kernel(scores_ref, vals_ref, idxs_ref, *, kp: int, block_n: int):
@@ -60,8 +69,19 @@ def block_topk(scores: jnp.ndarray, *, kp: int, block_n: int = 4096,
                interpret: bool = True):
     """scores: (Q, N) -> (vals (Q, n_blocks*kp), idxs (Q, n_blocks*kp)).
 
-    Per-block top-kp candidates; the caller merges (ops.topk_select).
+    Per-block top-kp candidates; the caller merges (ops.topk_select) and
+    may only trust the merged global top-k for k <= kp.  kp outside
+    [1, KP_MAX] raises — a wider kp breaks the kernel's register-resident
+    extraction budget and callers who need k > KP_MAX must use the
+    oracle, never a silently-wrong block union.
     """
+    if not 1 <= kp <= KP_MAX:
+        raise ValueError(
+            f"block_topk kp must be in [1, {KP_MAX}], got {kp}; the "
+            "global top-k is only contained in the per-block unions for "
+            f"k <= kp, and kp > {KP_MAX} exceeds the kernel's iterative-"
+            "extraction budget — use ops.topk_select (oracle fallback) "
+            "for wider selections")
     qn, n = scores.shape
     bn = min(block_n, n)
     n_b = -(-n // bn)

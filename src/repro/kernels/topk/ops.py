@@ -7,12 +7,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.topk.kernel import block_topk
+from repro.kernels.topk.kernel import KP_MAX, block_topk
 from repro.kernels.topk.ref import topk_ref
 
 __all__ = ["topk_select"]
 
-_KP_MAX = 128
+_KP_MAX = KP_MAX
 
 
 @functools.partial(jax.jit,

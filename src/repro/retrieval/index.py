@@ -11,19 +11,26 @@ This is the indexer of the candidate-generation stage.  It produces:
     (the JASS impact-ordered layout used by score-at-a-time evaluation).
 
 The build is host-side numpy (this is the offline indexer); query-time
-consumers gather from the arrays with jnp.
+consumers gather from the arrays with jnp.  ``block_doc_bounds`` is the
+index's segment-metadata producer for the Pallas ``impact_scan`` kernel:
+per-posting-block min/max doc id, computed wherever an impact-ordered
+stream is materialized (the per-query streams are merges of the
+impact-ordered lists built here, so the metadata is defined on the
+merged stream, at the kernel's posting-block granularity).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.retrieval import scoring
 from repro.retrieval.corpus import Corpus
 
-__all__ = ["InvertedIndex", "TermStats", "build_index", "STAT_NAMES"]
+__all__ = ["InvertedIndex", "TermStats", "build_index", "block_doc_bounds",
+           "STAT_NAMES"]
 
 #: order of the 9 per-term score statistics (Table 1, items 3-11)
 STAT_NAMES = ("max", "q1", "q3", "min", "amean", "hmean", "median", "var", "iqr")
@@ -65,6 +72,32 @@ class InvertedIndex:
 
     def postings_of(self, term: int) -> slice:
         return slice(int(self.offsets[term]), int(self.offsets[term + 1]))
+
+
+def block_doc_bounds(doc_stream: jnp.ndarray, *, block_p: int,
+                     n_docs: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-posting-block min/max doc id — the impact_scan segment skips.
+
+    doc_stream: (Q, P) int32 impact-ordered doc ids, -1 padded.  Blocks
+    follow the kernel's grid exactly (``posting_blocks``: ``block_p``
+    clamped to the stream length), so the returned (Q, n_p) int32 arrays
+    feed ``saat_accumulate(seg_bounds=...)`` unchanged.  A (posting,
+    doc)-block grid cell runs only when [lo, hi] intersects the doc tile;
+    blocks that are pure padding (exhausted streams — every posting
+    beyond any useful ρ) carry the empty interval ``(n_docs, -1)`` and
+    are never executed.
+    """
+    from repro.kernels.impact_scan.kernel import posting_blocks
+
+    qn, p = doc_stream.shape
+    bp, n_p = posting_blocks(p, block_p)
+    d = doc_stream
+    if n_p * bp != p:
+        d = jnp.pad(d, ((0, 0), (0, n_p * bp - p)), constant_values=-1)
+    d = d.reshape(qn, n_p, bp)
+    lo = jnp.min(jnp.where(d >= 0, d, n_docs), axis=-1)
+    hi = jnp.max(d, axis=-1)            # padding is -1: empty block -> -1
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
 
 
 def _segment_quantiles(sorted_vals: np.ndarray, offsets: np.ndarray,

@@ -13,8 +13,11 @@ section 3): the impact-ordered traversal becomes
      production path; the jnp path here is its oracle and the CPU default),
   3. ``rank_from_scores`` — deterministic ranking (ties by doc id).
 
-Early termination becomes static truncation of the stream at rho, which
-preserves the paper's linear rho <-> work relationship exactly.
+Early termination is a mask on the jnp oracle paths and a *run-time grid
+skip* on the kernel path: ``saat_scores_masked`` hands the traced
+per-query rho vector to ``impact_scan`` (scalar prefetch), whose grid
+cells at and beyond rho never execute — preserving the paper's linear
+rho <-> work relationship per query inside one batched dispatch.
 """
 
 from __future__ import annotations
@@ -74,28 +77,36 @@ def saat_scores(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray,
 
 def saat_scores_masked(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray,
                        rho_vec: jnp.ndarray, n_docs: int, *,
-                       use_kernel: bool = False,
-                       interpret: bool = True) -> jnp.ndarray:
+                       use_kernel: bool = False, interpret: bool = True,
+                       seg_bounds=None, block_p: int = 512,
+                       block_d: int = 2048) -> jnp.ndarray:
     """Accumulate the first ``rho_vec[q]`` postings of each query's stream.
 
     The single-dispatch serving engine's form of ``saat_scores``: rho is a
     *traced* (Q,) vector, so one executable serves every rho bucket — the
-    per-query truncation becomes a contribution mask instead of a static
+    per-query truncation becomes run-time masking instead of a static
     stream length.  With a constant rho_vec this computes bit-identical
     accumulators to ``saat_scores`` (same mask, same scatter-add).
 
     ``use_kernel`` routes the accumulation through the Pallas
-    ``impact_scan`` kernel (the TPU path; rho enters pre-masked so the
-    kernel runs at full stream length with zeroed tails).
+    ``impact_scan`` kernel with ρ as a *traced scalar-prefetch operand*:
+    the kernel skips posting blocks at and beyond each query's ρ at run
+    time (plus, with ``seg_bounds`` — per-posting-block min/max doc id
+    from ``index.block_doc_bounds`` at the same ``block_p`` — every
+    (posting, doc)-block cell whose id range misses the doc tile), so
+    cheap queries actually stop early instead of paying a pre-masked
+    full-stream scan.
     """
+    if use_kernel:
+        from repro.kernels.impact_scan import ops as is_ops
+        return is_ops.saat_accumulate(
+            doc_stream, impact_stream, n_docs=n_docs,
+            rho=jnp.asarray(rho_vec), seg_bounds=seg_bounds,
+            block_p=block_p, block_d=block_d, interpret=interpret)
     p = doc_stream.shape[-1]
     mask = ((jnp.arange(p)[None, :] < rho_vec[:, None])
             & (doc_stream >= 0))
     contrib = jnp.where(mask, impact_stream, 0.0)
-    if use_kernel:
-        from repro.kernels.impact_scan import ops as is_ops
-        return is_ops.saat_accumulate(doc_stream, contrib, n_docs=n_docs,
-                                      rho=p, interpret=interpret)
 
     def one(docs, c):
         return jnp.zeros(n_docs, jnp.float32).at[jnp.clip(docs, 0)].add(c)

@@ -26,8 +26,13 @@ the configured pad-multiple grid at server init.  ``n_compiles`` is the
 jit-cache probe the compile-count regression test reads.
 
 Kernel routing: on TPU, accumulation goes through the Pallas
-``impact_scan`` kernel and pool selection through ``kernels/topk``
-(``use_kernel=None`` auto-detects); elsewhere the jnp oracles run, which
+``impact_scan`` kernel — with the predicted ρ as a *traced scalar-
+prefetch operand*, so the kernel itself stops early per (query,
+posting-block) grid cell, and with the gather stage's per-block doc-id
+bounds gating the (posting, doc)-block grid — and pool selection through
+``kernels/topk`` (``use_kernel=None`` auto-detects TPU;
+``REPRO_FORCE_KERNEL=1`` forces the kernel path in interpret mode so CI
+executes the Pallas bodies).  Elsewhere the jnp oracles run; both paths
 are bit-identical to the per-bucket reference path
 (``pipeline.serve_batch_reference``).
 
@@ -43,6 +48,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 import threading
 import time
 
@@ -54,6 +60,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.retrieval import gold, jass
 from repro.retrieval import topk as topk_lib
+from repro.retrieval.index import block_doc_bounds
 from repro.serving import bucketing
 
 __all__ = ["ServingEngine", "ShardedServingEngine"]
@@ -72,30 +79,48 @@ class _PendingCompile:
 # Module-level so the engine's AOT cache keys stay stable; static config
 # enters via functools.partial, per-query parameters stay traced.
 
-def _stage_gather(offsets, pdoc, pimp, pscore, qt, *, cap: int):
+def _stage_gather(offsets, pdoc, pimp, pscore, qt, *, cap: int,
+                  block_p: int, n_docs: int, with_bounds: bool):
     ds, im = jass.gather_streams(offsets, pdoc, pimp, qt, cap=cap)
+    if with_bounds:
+        # segment metadata for the impact_scan skips: per-posting-block
+        # min/max doc id of the just-materialized streams (exhausted
+        # blocks carry the empty interval and are never executed by the
+        # kernel)
+        seg_lo, seg_hi = block_doc_bounds(ds, block_p=block_p,
+                                          n_docs=n_docs)
+    else:
+        # oracle path ignores the bounds; ship inert (Q, 1) placeholders
+        # instead of paying the per-batch reduction for nothing
+        seg_lo = seg_hi = jnp.zeros((qt.shape[0], 1), jnp.int32)
     sdocs, s3 = jass.gather_score_streams(offsets, pdoc, pscore, qt,
                                           cap=cap)
-    return ds, im, sdocs, s3
+    return ds, im, seg_lo, seg_hi, sdocs, s3
 
 
-def _stage1_rho(ds, im, rho_vec, *, n_docs: int, depth: int,
-                use_kernel: bool, interpret: bool):
+def _stage1_rho(ds, im, seg_lo, seg_hi, rho_vec, *, n_docs: int,
+                depth: int, use_kernel: bool, interpret: bool,
+                block_p: int, block_d: int):
     acc = jass.saat_scores_masked(ds, im, rho_vec, n_docs,
                                   use_kernel=use_kernel,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  seg_bounds=(seg_lo, seg_hi),
+                                  block_p=block_p, block_d=block_d)
     return topk_lib.select_pool(acc, depth, use_kernel=use_kernel,
                                 interpret=interpret)
 
 
-def _stage1_k(ds, im, k_vec, *, n_docs: int, max_k: int,
-              use_kernel: bool, interpret: bool):
+def _stage1_k(ds, im, seg_lo, seg_hi, k_vec, *, n_docs: int, max_k: int,
+              use_kernel: bool, interpret: bool, block_p: int,
+              block_d: int):
     # exhaustive stage-1 scores (rho = P), one shared max-k selection;
     # the per-query pool width is a traced mask over the shared pool
     full = jnp.full(ds.shape[:1], ds.shape[-1], jnp.int32)
     acc = jass.saat_scores_masked(ds, im, full, n_docs,
                                   use_kernel=use_kernel,
-                                  interpret=interpret)
+                                  interpret=interpret,
+                                  seg_bounds=(seg_lo, seg_hi),
+                                  block_p=block_p, block_d=block_d)
     pool = topk_lib.select_pool(acc, max_k, use_kernel=use_kernel,
                                 interpret=interpret)
     keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
@@ -121,8 +146,14 @@ class ServingEngine:
     def __init__(self, index, cfg, *, use_kernel: bool | None = None):
         self.cfg = cfg
         on_tpu = jax.default_backend() == "tpu"
-        self.use_kernel = on_tpu if use_kernel is None else use_kernel
+        # REPRO_FORCE_KERNEL=1 forces the Pallas path off-TPU (interpret
+        # mode) so CI executes the kernel bodies on every PR
+        forced = os.environ.get("REPRO_FORCE_KERNEL") == "1"
+        self.use_kernel = ((on_tpu or forced) if use_kernel is None
+                           else use_kernel)
         self.interpret = not on_tpu
+        self.block_p = cfg.kernel_block_p
+        self.block_d = cfg.kernel_block_d
         self.offsets = jnp.asarray(index.offsets)
         self.pdoc = jnp.asarray(index.postings_doc)
         self.pimp = jnp.asarray(index.postings_impact.astype(np.float32))
@@ -138,9 +169,13 @@ class ServingEngine:
         self.n_compiles = 0
 
         self._kern = dict(use_kernel=self.use_kernel,
-                          interpret=self.interpret)
+                          interpret=self.interpret,
+                          block_p=self.block_p, block_d=self.block_d)
         self._gather = functools.partial(_stage_gather,
-                                         cap=cfg.stream_cap)
+                                         cap=cfg.stream_cap,
+                                         block_p=self.block_p,
+                                         n_docs=self.n_docs,
+                                         with_bounds=self.use_kernel)
         self._stage2 = functools.partial(_stage2, n_docs=self.n_docs)
         self._rerank = functools.partial(_stage_rerank,
                                          depth=cfg.rerank_depth)
@@ -237,10 +272,11 @@ class ServingEngine:
             return out
 
         s1_name, s1_fn = self._stage1_for(int(pool_width or self.max_k))
-        ds, im, sdocs, s3 = timed(
+        ds, im, seg_lo, seg_hi, sdocs, s3 = timed(
             "gather_ms", "gather", self._gather,
             self.offsets, self.pdoc, self.pimp, self.pscore, qt)
-        pool = timed("stage1_ms", s1_name, s1_fn, ds, im, pv)
+        pool = timed("stage1_ms", s1_name, s1_fn, ds, im, seg_lo, seg_hi,
+                     pv)
         stage2 = timed("stage2_ms", "stage2", self._stage2,
                        sdocs, s3, self.doc_len, qids)
         ranked = timed("rerank_ms", "rerank", self._rerank, stage2, pool)
@@ -301,35 +337,85 @@ def _local_accumulate(ds, contrib, *, axis: str, width: int):
     return jax.vmap(one)(idx, c)
 
 
-def _pool_from_local(acc, depth: int, *, axis: str, width: int):
+def _local_scores(ds, im, seg_lo, seg_hi, rho_vec, *, axis: str,
+                  width: int, use_kernel: bool, interpret: bool,
+                  block_p: int, block_d: int):
+    """This shard's (Q, width) slice of the ρ-masked accumulators.
+
+    Kernel path: docs outside [lo, lo + width) are relabeled to the
+    stream-padding sentinel -1 and the Pallas ``impact_scan`` runs on
+    local doc ids with the traced ρ vector; the segment bounds shift to
+    shard-local coordinates, so posting blocks whose doc range misses
+    this shard entirely are skipped at the grid level (a conservative
+    intersection: blocks straddling the shard boundary still run).
+    Dropping a non-owned doc and adding its +0.0 to column 0 (the oracle
+    path below) are the same arithmetic — accumulators only ever sum
+    non-negative terms — so both paths stay bit-identical slices of the
+    unsharded accumulator for the quantized (integer-valued) impacts the
+    index produces."""
+    lo = jax.lax.axis_index(axis) * width
+    if use_kernel:
+        own = (ds >= lo) & (ds < lo + width)
+        ds_loc = jnp.where(own, ds - lo, -1).astype(jnp.int32)
+        return jass.saat_scores_masked(
+            ds_loc, im, rho_vec, width, use_kernel=True,
+            interpret=interpret, seg_bounds=(seg_lo - lo, seg_hi - lo),
+            block_p=block_p, block_d=block_d)
+    p = ds.shape[-1]
+    mask = (jnp.arange(p)[None, :] < rho_vec[:, None]) & (ds >= 0)
+    return _local_accumulate(ds, jnp.where(mask, im, 0.0),
+                             axis=axis, width=width)
+
+
+def _pool_from_local(acc, depth: int, *, axis: str, width: int,
+                     use_kernel: bool = False, interpret: bool = True):
     """select_pool over doc-sharded accumulators: local top-k clamped to
     the shard width, global ids from the true shard offset, merged with
     lowest-doc-id tie-breaking (bit-identical to rank_from_scores'
     lexsort; padded doc columns score 0.0, sit at the highest global ids,
-    and are masked to -1 by the same >0 rule as real zero-score docs)."""
+    and are masked to -1 by the same >0 rule as real zero-score docs).
+
+    The per-shard local scores are exactly the blocked-top-k stage-1
+    shape ``kernels/topk`` was designed for, so the kernel path runs
+    ``topk_select`` (Pallas block extraction + merge; identical values
+    and lowest-index ties, falling back to the oracle beyond KP_MAX)
+    where the oracle path runs ``lax.top_k``."""
     from repro.distrib import collectives
     kl = min(depth, width)
-    v, i = jax.lax.top_k(acc, kl)
+    if use_kernel:
+        from repro.kernels.topk import ops as tk_ops
+        v, i = tk_ops.topk_select(acc, kl, interpret=interpret)
+    else:
+        v, i = jax.lax.top_k(acc, kl)
     lo = jax.lax.axis_index(axis) * width
     gi = (i + lo).astype(jnp.int32)
     mv, mg = collectives.merge_local_topk(v, gi, depth, axis)
     return jnp.where(mv > 0, mg, -1)
 
 
-def _sh_stage1_rho(ds, im, rho_vec, *, axis: str, width: int, depth: int):
-    p = ds.shape[-1]
-    mask = (jnp.arange(p)[None, :] < rho_vec[:, None]) & (ds >= 0)
-    acc = _local_accumulate(ds, jnp.where(mask, im, 0.0),
-                            axis=axis, width=width)
-    return _pool_from_local(acc, depth, axis=axis, width=width)
+def _sh_stage1_rho(ds, im, seg_lo, seg_hi, rho_vec, *, axis: str,
+                   width: int, depth: int, use_kernel: bool,
+                   interpret: bool, block_p: int, block_d: int):
+    acc = _local_scores(ds, im, seg_lo, seg_hi, rho_vec, axis=axis,
+                        width=width, use_kernel=use_kernel,
+                        interpret=interpret, block_p=block_p,
+                        block_d=block_d)
+    return _pool_from_local(acc, depth, axis=axis, width=width,
+                            use_kernel=use_kernel, interpret=interpret)
 
 
-def _sh_stage1_k(ds, im, k_vec, *, axis: str, width: int, max_k: int):
+def _sh_stage1_k(ds, im, seg_lo, seg_hi, k_vec, *, axis: str, width: int,
+                 max_k: int, use_kernel: bool, interpret: bool,
+                 block_p: int, block_d: int):
     # exhaustive stage-1 scores (rho = P) like _stage1_k, pool width as a
     # traced mask over the shared max-k pool
-    acc = _local_accumulate(ds, jnp.where(ds >= 0, im, 0.0),
-                            axis=axis, width=width)
-    pool = _pool_from_local(acc, max_k, axis=axis, width=width)
+    full = jnp.full(ds.shape[:1], ds.shape[-1], jnp.int32)
+    acc = _local_scores(ds, im, seg_lo, seg_hi, full, axis=axis,
+                        width=width, use_kernel=use_kernel,
+                        interpret=interpret, block_p=block_p,
+                        block_d=block_d)
+    pool = _pool_from_local(acc, max_k, axis=axis, width=width,
+                            use_kernel=use_kernel, interpret=interpret)
     keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
     return jnp.where(keep, pool, -1)
 
@@ -404,10 +490,19 @@ class ShardedServingEngine(ServingEngine):
     widens the pad grid to also divide over the data axes, which
     ``ShardedEngineBackend`` reports as its admission ``pad_multiple``.
 
-    Kernel routing note: the per-shard bodies run the jnp oracles (the
-    Pallas impact_scan/topk kernels are not yet plumbed through
-    shard_map); on TPU this engine still shards memory and collectives
-    correctly, it just scores with XLA ops.
+    Kernel routing: the Pallas kernels run *inside* the shard_map stage
+    bodies on the kernel path (TPU, or ``REPRO_FORCE_KERNEL=1`` in
+    interpret mode).  Each shard hands ``impact_scan`` its local doc
+    slice — stream doc ids relabeled to shard-local coordinates, the
+    traced per-query ρ vector unchanged (the ρ mask is defined on the
+    *global* impact-ordered stream, which stays replicated), and the
+    gather stage's segment bounds shifted by the shard offset so posting
+    blocks whose doc range misses the shard are grid-skipped — and the
+    per-shard local scores feed the blocked top-k kernel
+    (``topk_select``), whose survivors ``merge_local_topk`` combines
+    exactly as on the oracle path.  Output stays bit-identical to the
+    unsharded engine (and to ``pipeline.serve_batch_reference``) on both
+    paths; see ``_local_scores``/``_pool_from_local`` for the argument.
     """
 
     def __init__(self, index, cfg, mesh, *, axis: str = "model",
@@ -432,7 +527,7 @@ class ShardedServingEngine(ServingEngine):
         #: per-stage input PartitionSpecs (arg order = serve()'s)
         self._specs = {
             "gather": (P(None), P(None), P(None), P(None, None), b2),
-            "stage1": (b2, b2, b1),
+            "stage1": (b2, b2, b2, b2, b1),
             "stage2": (b2, P(dspec, None, None), P(axis), b1),
             "rerank": (P(dspec, axis), b2),
         }
@@ -456,8 +551,9 @@ class ShardedServingEngine(ServingEngine):
                                     out_specs=out_specs)
 
         self._stat = dict(axis=axis, width=self.shard_width)
+        self._s1_stat = dict(**self._stat, **self._kern)
         self._gather = smap(self._gather, self._specs["gather"],
-                            (b2, b2, b2, P(dspec, None, None)))
+                            (b2, b2, b2, b2, b2, P(dspec, None, None)))
         self._stage2 = smap(
             functools.partial(_sh_stage2, n_docs=self.n_docs,
                               **self._stat),
@@ -472,9 +568,9 @@ class ShardedServingEngine(ServingEngine):
         if self.cfg.knob == "rho":
             return ("stage1", self._smap_s1(functools.partial(
                 _sh_stage1_rho, depth=self.cfg.rerank_depth,
-                **self._stat)))
+                **self._s1_stat)))
         return (f"stage1:{pool_width}", self._smap_s1(functools.partial(
-            _sh_stage1_k, max_k=pool_width, **self._stat)))
+            _sh_stage1_k, max_k=pool_width, **self._s1_stat)))
 
     def _place(self, name: str, j: int, x):
         # commit each stage input to its mesh sharding before the AOT

@@ -46,7 +46,10 @@ class ServingConfig:
     rerank_depth: int = 100        # final list depth
     stream_cap: int = 4096         # postings stream length P
     pad_multiple: int = 8
-    use_kernel: bool | None = None  # None: Pallas on TPU, jnp oracle else
+    use_kernel: bool | None = None  # None: Pallas on TPU (or
+    #                               REPRO_FORCE_KERNEL=1), jnp oracle else
+    kernel_block_p: int = 512       # impact_scan posting-block size
+    kernel_block_d: int = 2048      # impact_scan doc-tile size
 
 
 class RetrievalServer:

@@ -77,6 +77,134 @@ def test_impact_scan_rho_semantics():
     assert list(a[0]) == [10.0, 20.0, 0.0, 0.0]
 
 
+def _int_streams(q, p, nd, seed=7):
+    """Quantized-impact streams (integer-valued f32, like the index
+    produces) — partial sums are exact, so kernel vs oracle comparisons
+    can demand bit-identity, not allclose."""
+    r = np.random.default_rng(seed)
+    docs = jnp.asarray(r.integers(-1, nd, (q, p)).astype(np.int32))
+    imps = jnp.asarray(r.integers(0, 256, (q, p)).astype(np.float32))
+    return docs, imps
+
+
+@pytest.mark.parametrize("q,p,nd,bp,bd", [
+    (4, 300, 500, 64, 128),
+    (3, 128, 77, 32, 32),
+    (2, 65, 40, 32, 16),          # ragged stream tail (65 % 32 != 0)
+])
+def test_impact_scan_traced_rho_mixed(q, p, nd, bp, bd):
+    """Per-query traced rho, including rho=0 and rho>P, is bit-identical
+    to the masked oracle — one executable, every rho bucket."""
+    docs, imps = _int_streams(q, p, nd)
+    rho = jnp.asarray(
+        np.array([0, 1, p // 2, p + 50][:q], np.int32))
+    a = is_ops.saat_accumulate(docs, imps, n_docs=nd, rho=rho,
+                               block_p=bp, block_d=bd)
+    b = is_ops.saat_accumulate(docs, imps, n_docs=nd, rho=rho,
+                               use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("rho", [0, 1, 33, 100, 1000])
+def test_impact_scan_constant_rho_bit_identical_to_ref(rho):
+    """Acceptance: a constant rho vector reproduces the static-rho
+    oracle bit for bit."""
+    from repro.kernels.impact_scan.ref import impact_scan_ref
+
+    docs, imps = _int_streams(3, 100, 200)
+    rho_vec = jnp.full((3,), rho, jnp.int32)
+    a = is_ops.saat_accumulate(docs, imps, n_docs=200, rho=rho_vec,
+                               block_p=32, block_d=64)
+    ref = impact_scan_ref(docs, imps, n_docs=200, rho=rho)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ref))
+
+
+def test_impact_scan_segment_skips_fewer_cells():
+    """Segment metadata turns the dense grid sparse: doc-clustered
+    posting blocks execute only intersecting doc tiles, the executed-cell
+    counter matches the analytic predicate, and the output is unchanged."""
+    from repro.kernels.impact_scan.kernel import live_cell_count
+    from repro.retrieval.index import block_doc_bounds
+
+    q, p, nd, bp, bd = 3, 128, 512, 32, 64
+    r = np.random.default_rng(3)
+    # each posting block's docs cluster into one doc tile
+    blocks = []
+    for pb in range(p // bp):
+        base = (pb * 131) % (nd - bd)
+        blocks.append(r.integers(base, base + bd, (q, bp)))
+    docs = jnp.asarray(np.concatenate(blocks, axis=1).astype(np.int32))
+    imps = jnp.asarray(r.integers(0, 256, (q, p)).astype(np.float32))
+    rho = jnp.asarray([0, 50, 128], jnp.int32)
+    seg = block_doc_bounds(docs, block_p=bp, n_docs=nd)
+
+    dense, cnt_dense = is_ops.saat_accumulate(
+        docs, imps, n_docs=nd, rho=rho, block_p=bp, block_d=bd,
+        with_stats=True)
+    skip, cnt_skip = is_ops.saat_accumulate(
+        docs, imps, n_docs=nd, rho=rho, block_p=bp, block_d=bd,
+        seg_bounds=seg, with_stats=True)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(skip))
+    analytic = int(live_cell_count(rho, *seg, p=p, n_docs=nd,
+                                   block_p=bp, block_d=bd))
+    assert int(np.asarray(cnt_skip).sum()) == analytic
+    assert analytic < int(np.asarray(cnt_dense).sum())
+    # rho=0 query executes nothing at all
+    assert int(np.asarray(cnt_skip)[0].sum()) == 0
+
+
+def test_impact_scan_exhausted_stream_blocks_skipped():
+    """Blocks that are pure padding carry the empty interval and never
+    execute — rho beyond the live stream costs nothing extra."""
+    from repro.retrieval.index import block_doc_bounds
+
+    docs = jnp.asarray(
+        np.concatenate([np.array([[3, 1, 2, 0]], np.int32),
+                        np.full((1, 12), -1, np.int32)], axis=1))
+    imps = jnp.asarray(np.full((1, 16), 5.0, np.float32))
+    seg = block_doc_bounds(docs, block_p=4, n_docs=8)
+    rho = jnp.asarray([16], jnp.int32)
+    acc, cnt = is_ops.saat_accumulate(docs, imps, n_docs=8, rho=rho,
+                                      block_p=4, block_d=8,
+                                      seg_bounds=seg, with_stats=True)
+    assert int(np.asarray(cnt).sum()) == 1      # only the live block ran
+    assert list(np.asarray(acc)[0, :4]) == [5.0, 5.0, 5.0, 5.0]
+
+
+def test_impact_scan_rho_zero_skips_kernel_launch(monkeypatch):
+    """Static rho=0 returns zeros without touching pallas_call."""
+    def boom(*a, **k):
+        raise AssertionError("kernel launched for rho=0")
+
+    monkeypatch.setattr("repro.kernels.impact_scan.ops._kernel", boom)
+    docs, imps = _int_streams(2, 32, 40)
+    out = is_ops.saat_accumulate(docs, imps, n_docs=40, rho=0)
+    assert np.asarray(out).shape == (2, 40) and not np.asarray(out).any()
+    out, cnt = is_ops.saat_accumulate(docs, imps, n_docs=40, rho=0,
+                                      with_stats=True)
+    assert not np.asarray(out).any() and not np.asarray(cnt).any()
+
+
+def test_impact_scan_validation_errors():
+    docs, imps = _int_streams(2, 32, 40)
+    with pytest.raises(ValueError, match="rho must be >= 0"):
+        is_ops.saat_accumulate(docs, imps, n_docs=40, rho=-1)
+    with pytest.raises(ValueError, match="integer dtype"):
+        is_ops.saat_accumulate(docs, imps, n_docs=40,
+                               rho=jnp.asarray([1.0, 2.0]))
+    with pytest.raises(ValueError, match="shaped"):
+        is_ops.saat_accumulate(docs, imps, n_docs=40,
+                               rho=jnp.asarray([1, 2, 3], jnp.int32))
+    with pytest.raises(ValueError, match="segment bounds"):
+        bad = jnp.zeros((2, 7), jnp.int32)
+        is_ops.saat_accumulate(docs, imps, n_docs=40,
+                               rho=jnp.asarray([1, 2], jnp.int32),
+                               block_p=8, seg_bounds=(bad, bad))
+    with pytest.raises(ValueError, match="use_kernel"):
+        is_ops.saat_accumulate(docs, imps, n_docs=40, rho=4,
+                               use_kernel=False, with_stats=True)
+
+
 # ------------------------------------------------------------------ topk --
 
 @pytest.mark.parametrize("q,n,k,bn", [
@@ -89,6 +217,23 @@ def test_topk_sweep(q, n, k, bn):
     v2, i2 = tk_ops.topk_select(s, k, use_kernel=False)
     np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
     np.testing.assert_allclose(np.asarray(v1), np.asarray(v2))
+
+
+def test_block_topk_rejects_invalid_kp():
+    """kp outside [1, 128] must raise, never return a silently-wrong
+    union (per-block top-kp only contains the global top-k for k <= kp)."""
+    from repro.kernels.topk.kernel import KP_MAX, block_topk
+
+    s = jnp.asarray(R.normal(size=(2, 512)).astype(np.float32))
+    for kp in (0, -3, KP_MAX + 1, 500):
+        with pytest.raises(ValueError, match=r"kp must be in \[1, 128\]"):
+            block_topk(s, kp=kp, block_n=256)
+    # the oracle fallback in topk_select still serves k > KP_MAX exactly
+    # (checked against lax.top_k, not against its own code path)
+    v1, i1 = tk_ops.topk_select(s, KP_MAX + 50)
+    vr, ir = jax.lax.top_k(s, KP_MAX + 50)
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(vr))
 
 
 def test_topk_ties_prefer_low_index():

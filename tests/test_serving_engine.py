@@ -119,6 +119,92 @@ def test_pad_rows_grid_and_inertness():
     assert bucketing.pad_length(9, 8) == 16
 
 
+# ------------------------------------------------------ kernel path (d) --
+# use_kernel=True + interpret=True executes the Pallas bodies on CPU —
+# the same routing REPRO_FORCE_KERNEL=1 turns on in CI.
+
+def _kernel_server(sys_, knob, cutoffs):
+    cfg = serve_lib.ServingConfig(
+        knob=knob, cutoffs=cutoffs, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap, use_kernel=True,
+        kernel_block_p=32, kernel_block_d=64)  # real grids at test scale
+    return serve_lib.RetrievalServer(sys_.index, None, cfg)
+
+
+@pytest.mark.parametrize("knob", ["k", "rho"])
+def test_kernel_path_bit_identical_to_oracle(small_system, knob):
+    """Traced-rho impact_scan + blocked top-k through ServingEngine.serve
+    match the jnp oracle engine for every bucket mix — including the
+    per-bucket reference path."""
+    sys_ = small_system
+    cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+    oracle = _server(sys_, knob, cuts)
+    kern = _kernel_server(sys_, knob, cuts)
+    n = 20
+    classes = np.arange(n) % (len(cuts) + 1)   # every bucket live
+    for server in (oracle, kern):
+        _stub_classes(server, classes)
+    qt = sys_.queries.terms[:n]
+    a = oracle.serve_batch(qt)
+    b = kern.serve_batch(qt)
+    np.testing.assert_array_equal(a["ranked"], b["ranked"])
+    np.testing.assert_array_equal(a["widths"], b["widths"])
+    ref = kern.serve_batch_reference(qt)
+    np.testing.assert_array_equal(b["ranked"], ref["ranked"])
+
+
+@pytest.mark.parametrize("param", ["zero", "max"])
+def test_kernel_path_rho_extremes(small_system, param):
+    """rho=0 (nothing scored -> empty lists) and rho=P (everything
+    scored) agree between kernel and oracle engines."""
+    sys_ = small_system
+    oracle = _server(sys_, "rho", sys_.rho_cutoffs)
+    kern = _kernel_server(sys_, "rho", sys_.rho_cutoffs)
+    qt = sys_.queries.terms[:16]
+    rho = 0 if param == "zero" else sys_.cfg.stream_cap
+    a = oracle.serve_fixed(qt, rho)
+    b = kern.serve_fixed(qt, rho)
+    np.testing.assert_array_equal(a["ranked"], b["ranked"])
+    if param == "zero":
+        assert (a["ranked"] == -1).all()
+
+
+def test_kernel_path_compile_count_constant(small_system):
+    """Acceptance: n_compiles stays O(1) under mixed per-query rho on the
+    kernel path — the traced-rho kernel serves every bucket from one
+    executable."""
+    sys_ = small_system
+    cuts = sys_.rho_cutoffs
+    server = _kernel_server(sys_, "rho", cuts)
+    qt = sys_.queries.terms[:24]
+    _stub_classes(server, np.zeros(24, np.int64))
+    server.serve_batch(qt)
+    base = server.engine.n_compiles
+    assert base > 0
+    for n_distinct in (2, 4, len(cuts) + 1):
+        _stub_classes(server, np.arange(24) % n_distinct)
+        out = server.serve_batch(qt)
+        assert out["n_compiles"] == base, (
+            f"kernel path recompiled at {n_distinct} distinct rho classes")
+
+
+def test_force_kernel_env(small_system, monkeypatch):
+    """REPRO_FORCE_KERNEL=1 flips the auto-detect default (the CI leg
+    that executes Pallas bodies on every PR); explicit use_kernel wins."""
+    from repro.serving.engine import ServingEngine
+
+    cfg = serve_lib.ServingConfig(
+        knob="rho", cutoffs=small_system.rho_cutoffs, rerank_depth=30,
+        stream_cap=small_system.cfg.stream_cap)
+    monkeypatch.delenv("REPRO_FORCE_KERNEL", raising=False)
+    assert ServingEngine(small_system.index, cfg).use_kernel is False
+    monkeypatch.setenv("REPRO_FORCE_KERNEL", "1")
+    eng = ServingEngine(small_system.index, cfg)
+    assert eng.use_kernel is True and eng.interpret is True
+    assert ServingEngine(small_system.index, cfg,
+                         use_kernel=False).use_kernel is False
+
+
 # --------------------------------------------------------------- timings --
 
 def test_serve_batch_reports_stage_timings(small_system):
