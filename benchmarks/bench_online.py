@@ -1,0 +1,330 @@
+"""Online-adaptation benchmark: replay a query-distribution shift and
+measure how much of the stale-vs-oracle MED gap the closed loop recovers.
+
+The experiment the ISSUE's acceptance criterion names:
+
+  1. Train a *boot* cascade on the base query distribution using the
+     judgment-free serving label path (``online.shadow.serving_med_table``
+     — MED of each cutoff's run against the system's own full-fidelity
+     reference; no relevance judgments anywhere).
+  2. Serve a **shifted** stream three ways.  The shift is the
+     "sessions lengthen" drift (``online.replay.shifted_queries`` with
+     band="long"): the boot era is short 1-2-term queries, the shifted
+     era verbose 3+-term queries over the *same* term band — aggregate
+     term statistics stay in-distribution while query length and total
+     score mass leave it, which defeats the forest's extrapolation
+     (frequency-band shifts merely exercise it; the cascade handles
+     those without retraining).  Three arms:
+       * ``stale``   — the frozen boot cascade (production today),
+       * ``oracle``  — a cascade retrained offline on the full shifted
+         label table (the ceiling),
+       * ``online``  — the live loop: telemetry -> shadow labels ->
+         sliding-window retrains -> hot-swaps, adapting *during* the
+         replay.
+  3. Score all three on a held-out shifted evaluation set:
+     ``gap_recovered = (stale - online) / (stale - oracle)`` must be
+     >= 0.5, with **zero** extra engine compiles during adaptation
+     (hot-swaps reuse the params-as-operands predict executable; shadow
+     re-runs reuse the serving executables at warmed shapes) and serving
+     p99 within 10% of a telemetry-off baseline.
+
+Machine-readable output: ``artifacts/BENCH_online.json`` is the small
+*committed* summary (deterministic counts/booleans only, written at the
+CI smoke scale and diff-checked by the bench-smoke job);
+``artifacts/BENCH_online_full.json`` carries the per-machine timings and
+MED floats and stays gitignored.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+ONLINE_JSON = os.path.join(ART, "BENCH_online.json")
+ONLINE_FULL_JSON = os.path.join(ART, "BENCH_online_full.json")
+
+#: replay scales (self-contained: the shift needs its own query streams)
+_SCALES = {
+    "tiny": dict(n_docs=2_000, vocab=5_000, n_queries=512, stream_cap=512,
+                 pool_depth=800, gold_depth=150, chunk=64,
+                 n_base=192, n_shift=320, n_eval=128),
+    "default": dict(n_docs=8_000, vocab=16_000, n_queries=1024,
+                    stream_cap=1024, pool_depth=2000, gold_depth=200,
+                    chunk=128, n_base=384, n_shift=768, n_eval=256),
+}
+
+TAU = 0.05
+SHIFT_BAND = "long"
+BOOT_MAX_LEN = 2                   # the boot era: short queries only
+FOREST_KW = dict(n_trees=8, max_depth=6)
+
+
+def _scale_name() -> str:
+    s = os.environ.get("REPRO_BENCH_SCALE", "default")
+    return s if s in _SCALES else "default"
+
+
+def _build(scale: dict):
+    from repro.core import experiment as E
+    return E.build_system(E.ExperimentConfig(
+        n_docs=scale["n_docs"], vocab=scale["vocab"],
+        n_queries=scale["n_queries"], stream_cap=scale["stream_cap"],
+        pool_depth=scale["pool_depth"], gold_depth=scale["gold_depth"],
+        query_batch=scale["chunk"], seed=7))
+
+
+def _features(server, qt):
+    import jax.numpy as jnp
+
+    from repro.core import features as feat_lib
+    return np.asarray(feat_lib.query_features(
+        jnp.asarray(np.asarray(qt, np.int32)), server.stats, server.ctf,
+        server.df))
+
+
+def bench_online_adaptation() -> list[tuple]:
+    from repro.core import cascade as cl
+    from repro.core import labeling, tradeoff
+    from repro.online import (OnlineConfig, OnlineController,
+                              TelemetryBuffer, TrainerConfig, replay,
+                              serving_med_table, shifted_queries)
+    from repro.serving import pipeline as sp
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import EngineBackend, RetrievalService
+
+    scale = _SCALES[_scale_name()]
+    chunk = scale["chunk"]
+    sys_ = _build(scale)
+    cuts = sys_.k_cutoffs
+    cfg = sp.ServingConfig(knob="k", cutoffs=cuts, threshold=0.75,
+                           rerank_depth=100,
+                           stream_cap=sys_.cfg.stream_cap)
+
+    # ---- boot: judgment-free labels from the base distribution --------
+    # (the short-query era; the shift lengthens them)
+    base_qt = sys_.queries.terms[
+        sys_.queries.lengths <= BOOT_MAX_LEN][:scale["n_base"]]
+    labeler = sp.RetrievalServer(sys_.index, None, cfg)
+    med_base = serving_med_table(labeler, base_qt, batch=chunk)
+    x_base = _features(labeler, base_qt)
+    boot = cl.train_cascade(
+        x_base, np.asarray(labeling.envelope_labels(med_base, TAU)),
+        n_cutoffs=len(cuts), forest_kwargs=FOREST_KW)
+    del labeler
+
+    server = sp.RetrievalServer(sys_.index, boot, cfg)
+    telemetry = TelemetryBuffer(capacity=4 * scale["n_shift"])
+    backend = EngineBackend(server, query_len=base_qt.shape[1])
+    service = RetrievalService(
+        backend, AdmissionConfig(max_batch=chunk,
+                                 pad_multiple=backend.pad_multiple),
+        telemetry=telemetry)
+    service.warmup_now([chunk])
+
+    # ---- the shift ----------------------------------------------------
+    shifted = shifted_queries(sys_.index.corpus,
+                              scale["n_shift"] + scale["n_eval"],
+                              band=SHIFT_BAND,
+                              max_len=base_qt.shape[1])
+    shift_qt = shifted.terms[:scale["n_shift"]]
+    eval_qt = shifted.terms[scale["n_shift"]:]
+    med_eval = serving_med_table(server, eval_qt, batch=chunk)
+    x_eval = _features(server, eval_qt)
+
+    # ---- stale + oracle arms ------------------------------------------
+    import jax.numpy as jnp
+    stale_cls = np.asarray(cl.predict_batched(
+        boot, jnp.asarray(x_eval), cfg.threshold))
+    med_shift_train = serving_med_table(server, shift_qt, batch=chunk)
+    x_shift = _features(server, shift_qt)
+    oracle = cl.train_cascade(
+        x_shift, np.asarray(labeling.envelope_labels(med_shift_train, TAU)),
+        n_cutoffs=len(cuts), forest_kwargs=FOREST_KW, seed=11)
+    oracle_cls = np.asarray(cl.predict_batched(
+        oracle, jnp.asarray(x_eval), cfg.threshold))
+
+    # ---- online arm: adapt while replaying the shifted stream ---------
+    controller = OnlineController(service, server, OnlineConfig(
+        tau=TAU, shadow_sample=chunk,
+        trainer=TrainerConfig(window=scale["n_shift"],
+                              min_labels=chunk, retrain_every=chunk,
+                              forest_kwargs=FOREST_KW)))
+    # a couple of base-traffic cycles first, as production would see
+    replay(service, base_qt[:2 * chunk], chunk=chunk,
+           controller=controller)
+    compiles_before = server.engine.n_compiles
+    swaps_before = controller.n_swaps
+    curve = []                         # the MED-vs-time adaptation curve
+    t0 = time.perf_counter()
+    qt = np.asarray(shift_qt, np.int32)
+    for lo in range(0, qt.shape[0], chunk):
+        service.serve_all(list(qt[lo:lo + chunk]))
+        st = controller.step()
+        curve.append({
+            "t_s": time.perf_counter() - t0,
+            "served": lo + min(chunk, qt.shape[0] - lo),
+            "med_ema": st["med_ema"],
+            "tau_effective": st["tau_effective"],
+            "version": st["predictor_version"],
+            "fallback": st["fallback"],
+        })
+    extra_compiles = server.engine.n_compiles - compiles_before
+    n_swaps = controller.n_swaps - swaps_before
+    online_cls = server.predict_classes(eval_qt)
+
+    # ---- score the three arms on the held-out shifted set -------------
+    def arm(cls_):
+        return (float(tradeoff.realized_med(med_eval, cls_).mean()),
+                tradeoff.mean_cutoff_value(cls_, np.asarray(cuts)))
+
+    stale_med, stale_k = arm(stale_cls)
+    oracle_med, oracle_k = arm(oracle_cls)
+    online_med, online_k = arm(online_cls)
+    gap = stale_med - oracle_med
+    recovered = (stale_med - online_med) / gap if gap > 1e-9 else 1.0
+    st = controller.stats()
+
+    # ---- telemetry-tap p99 overhead -----------------------------------
+    def p99_of(svc, trials=3):
+        """Best-of-``trials`` p99: one GC pause or scheduler stall on a
+        shared CI runner lands squarely in a single replay's p99, so the
+        min over repeats measures the tap, not the neighborhood."""
+        svc.warmup_now([chunk])
+        p99s = []
+        with svc:
+            svc.serve_all(list(base_qt[:chunk]))   # steady state
+            for _ in range(trials):
+                svc.reset_stats()
+                res = replay(svc, base_qt, chunk=chunk)
+                p99s.append(float(np.percentile(
+                    [r["total_ms"] for r in res], 99)))
+        return min(p99s)
+
+    bare = RetrievalService(
+        EngineBackend(server, query_len=base_qt.shape[1]),
+        AdmissionConfig(max_batch=chunk,
+                        pad_multiple=backend.pad_multiple))
+    p99_off = p99_of(bare)
+    tapped = RetrievalService(
+        EngineBackend(server, query_len=base_qt.shape[1]),
+        AdmissionConfig(max_batch=chunk,
+                        pad_multiple=backend.pad_multiple),
+        telemetry=TelemetryBuffer(capacity=4 * scale["n_shift"]))
+    p99_on = p99_of(tapped)
+    p99_ratio = p99_on / max(p99_off, 1e-9)
+
+    rows = [
+        ("online/stale_med_on_shift", stale_med,
+         f"mean_k={stale_k:.0f}"),
+        ("online/oracle_med_on_shift", oracle_med,
+         f"mean_k={oracle_k:.0f}"),
+        ("online/adapted_med_on_shift", online_med,
+         f"mean_k={online_k:.0f}"),
+        ("online/gap_recovered_pct", 100.0 * recovered,
+         "PASS" if recovered >= 0.5 else "FAIL"),
+        ("online/extra_engine_compiles", float(extra_compiles),
+         "PASS" if extra_compiles == 0 else "FAIL"),
+        ("online/swap_count", float(n_swaps),
+         f"versions={st['predictor_version'] + 1}"),
+        ("online/shadow_labels", float(st["n_labels"]),
+         "judgment_free=True"),
+        ("online/retrains", float(st["n_retrains"]),
+         f"tau_eff={st['tau_effective']:.3f}"),
+        ("online/telemetry_p99_ratio", p99_ratio,
+         "PASS" if p99_ratio <= 1.10 else "FAIL"),
+    ]
+    _RECORDS["adaptation"] = {
+        "scale": _scale_name(), "knob": cfg.knob,
+        "shift_band": SHIFT_BAND, "tau": TAU,
+        "n_shadow_labels": int(st["n_labels"]),
+        "n_retrains": int(st["n_retrains"]),
+        "n_swaps": int(n_swaps),
+        "extra_engine_compiles": int(extra_compiles),
+        "gap_recovered_ge_half": bool(recovered >= 0.5),
+        "shift_opened_gap": bool(gap > 1e-9),
+        "fallback_tripped": int(st["n_fallbacks"]),
+        "judgment_free": True,
+    }
+    _RECORDS["floats"] = {
+        "stale_med": stale_med, "oracle_med": oracle_med,
+        "online_med": online_med, "gap_recovered": recovered,
+        "stale_mean_k": stale_k, "oracle_mean_k": oracle_k,
+        "online_mean_k": online_k,
+        "p99_off_ms": p99_off, "p99_on_ms": p99_on,
+        "p99_ratio": p99_ratio,
+        "med_ema_final": st["med_ema"],
+        "tau_effective": st["tau_effective"],
+    }
+    _RECORDS["curve"] = curve
+    return rows
+
+
+_RECORDS: dict = {"adaptation": None, "floats": None, "curve": None}
+
+
+# ----------------------------------------------------------- JSON output --
+
+def write_online_json(path: str | None = None,
+                      full_path: str | None = None,
+                      rows: list[tuple] | None = None) -> str:
+    """Committed summary (deterministic counts/booleans only) + gitignored
+    full record (MED floats, timings, the adaptation curve).
+
+    As with BENCH_kernels.json, the committed summary is defined at the
+    CI smoke scale; at any other scale the default path writes only the
+    full record, so a default-scale ``run.py`` never dirties the tracked
+    file the bench-smoke job diff-checks."""
+    explicit = path is not None
+    path = path or ONLINE_JSON
+    full_path = full_path or ONLINE_FULL_JSON
+    summary = _RECORDS["adaptation"]
+    if summary is None:
+        raise RuntimeError("run bench_online_adaptation() first")
+    os.makedirs(ART, exist_ok=True)
+    wrote = None
+    if explicit or _scale_name() == "tiny":
+        with open(path, "w") as f:
+            json.dump(summary, f, indent=2, sort_keys=True)
+            f.write("\n")
+        wrote = path
+    full = dict(summary, unix_time=time.time(),
+                floats=_RECORDS["floats"], curve=_RECORDS["curve"],
+                rows=[[n, float(v), str(d)] for n, v, d in (rows or [])])
+    with open(full_path, "w") as f:
+        json.dump(full, f, indent=2, sort_keys=True)
+    return os.path.abspath(wrote or full_path)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny scale (CI; writes the committed summary)")
+    ap.add_argument("--out", default=None,
+                    help=f"summary JSON path (default {ONLINE_JSON})")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SCALE"] = "tiny"
+
+    print("name,value,derived")
+    rows = []
+    for row in bench_online_adaptation():
+        rows.append(row)
+        name, v, derived = row
+        print(f"{name},{v:.3f},{derived}", flush=True)
+    path = write_online_json(args.out, rows=rows)
+    print(f"wrote {path}", file=sys.stderr)
+    bad = [n for n, _, d in rows if d == "FAIL"]
+    if bad:
+        raise SystemExit(f"online acceptance failed: {bad}")
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    main()

@@ -8,8 +8,8 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import bench_kernels, bench_serving, paper_tables, \
-        roofline
+    from benchmarks import bench_kernels, bench_online, bench_serving, \
+        paper_tables, roofline
 
     benches = [
         paper_tables.bench_table3,
@@ -30,17 +30,21 @@ def main() -> None:
         bench_serving.bench_compile_amortization,
         bench_serving.bench_admission_service,
         bench_serving.bench_sharded_vs_single,
+        bench_online.bench_online_adaptation,
         roofline.bench_roofline,
     ]
     print("name,us_per_call,derived")
     failed: list[str] = []
     serving_rows = []
+    online_rows = []
     for b in benches:
         try:
             for row in b():
                 name, us, derived = row
                 if name.startswith("serving/"):
                     serving_rows.append(row)
+                if name.startswith("online/"):
+                    online_rows.append(row)
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception:
             failed.append(b.__name__)
@@ -48,6 +52,9 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
     if serving_rows:   # the cross-PR perf trajectory record
         path = bench_serving.write_bench_json(serving_rows)
+        print(f"wrote {path}", file=sys.stderr)
+    if online_rows:    # committed summary only at tiny scale (see
+        path = bench_online.write_online_json(rows=online_rows)  # writer)
         print(f"wrote {path}", file=sys.stderr)
     if "bench_impact_scan_sweep" not in failed:
         # only persist a complete sweep (a partial one would overwrite

@@ -31,7 +31,59 @@ from repro.core import labeling
 from repro.core import mlp as mlp_lib
 
 __all__ = ["Cascade", "train_cascade", "predict_batched",
-           "predict_sequential", "tune_thresholds"]
+           "predict_sequential", "tune_thresholds",
+           "proba0_from_params", "classes_from_proba"]
+
+
+def _check_features(x) -> None:
+    """Reject empty or NaN feature batches with an actionable error.
+
+    Garbage features would otherwise flow silently through the forests
+    (every comparison with NaN is False -> every node routes left ->
+    confident nonsense classes into the engine).  Shape checks work even
+    under tracing (shapes are static); the NaN scan runs only on concrete
+    arrays — the host-side callers (training, threshold tuning, telemetry
+    replay) are exactly where corrupt batches appear."""
+    if x.ndim != 2 or 0 in x.shape:
+        raise ValueError(
+            "feature batch must be a non-empty (B, F) matrix, got shape "
+            f"{tuple(x.shape)}")
+    if not isinstance(x, jax.core.Tracer):
+        if np.isnan(np.asarray(x)).any():
+            raise ValueError(
+                "feature batch contains NaN — refusing to predict from "
+                "corrupt features (check the telemetry/replay source)")
+
+
+def proba0_from_params(kind: str, node_params, x: jnp.ndarray,
+                       max_depth: int) -> jnp.ndarray:
+    """Pure-functional ``Cascade.proba0``: (B, c) class-0 probabilities
+    from an explicit per-node parameter list.
+
+    This is the form the serving path jits with the parameters as
+    *runtime operands* (a pytree argument), so hot-swapping retrained
+    weights of identical shapes reuses the compiled executable."""
+    cols = []
+    for p in node_params:
+        if kind == "forest":
+            pr = forest_lib.forest_predict_proba(p, x, max_depth)
+        else:
+            pr = mlp_lib.mlp_predict_proba(p, x)
+        cols.append(pr[:, 0])
+    return jnp.stack(cols, axis=1)
+
+
+def classes_from_proba(p0: jnp.ndarray, t) -> jnp.ndarray:
+    """First node whose class-0 probability clears its threshold.
+
+    ``t`` is a scalar or a per-node vector of c thresholds; queries where
+    no node fires get the maximal class c."""
+    c = p0.shape[1]
+    tv = jnp.broadcast_to(jnp.asarray(t, jnp.float32), (c,))
+    fire = p0 > tv[None, :]
+    first = jnp.argmax(fire, axis=1)
+    none = ~jnp.any(fire, axis=1)
+    return jnp.where(none, c, first).astype(jnp.int32)
 
 
 @dataclass
@@ -46,14 +98,9 @@ class Cascade:
 
     def proba0(self, x: jnp.ndarray) -> jnp.ndarray:
         """(B, c) probability that cutoff i suffices, for all nodes."""
-        cols = []
-        for p in self.node_params:
-            if self.kind == "forest":
-                pr = forest_lib.forest_predict_proba(p, x, self.max_depth)
-            else:
-                pr = mlp_lib.mlp_predict_proba(p, x)
-            cols.append(pr[:, 0])
-        return jnp.stack(cols, axis=1)
+        _check_features(x)
+        return proba0_from_params(self.kind, self.node_params, x,
+                                  self.max_depth)
 
 
 def train_cascade(x: np.ndarray, labels: np.ndarray, *, n_cutoffs: int,
@@ -92,12 +139,7 @@ def predict_batched(cascade: Cascade, x: jnp.ndarray,
     ``t`` is a scalar confidence threshold or a per-node vector of c
     thresholds (the paper's "variable cutoff thresholds" extension)."""
     p0 = cascade.proba0(x)                       # (B, c)
-    tv = jnp.broadcast_to(jnp.asarray(t, jnp.float32),
-                          (cascade.n_cutoffs,))
-    fire = p0 > tv[None, :]
-    first = jnp.argmax(fire, axis=1)
-    none = ~jnp.any(fire, axis=1)
-    return jnp.where(none, cascade.n_cutoffs, first).astype(jnp.int32)
+    return classes_from_proba(p0, t)
 
 
 def tune_thresholds(cascade: Cascade, x: np.ndarray, med_table: np.ndarray,

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Forest", "train_forest", "forest_predict_proba"]
+__all__ = ["Forest", "train_forest", "forest_predict_proba",
+           "node_capacity", "pad_forest_params"]
 
 
 @dataclass
@@ -158,6 +159,52 @@ def train_forest(x: np.ndarray, y: np.ndarray, *, n_classes: int,
     pad = feature == -2
     del pad
     return Forest(feature, thresh, left, right, leaf, max_depth, n_classes)
+
+
+def node_capacity(max_depth: int) -> int:
+    """Fixed node-table capacity for hot-swappable forests.
+
+    A binary tree grown to ``max_depth`` has at most 2^(d+1) - 1 nodes, so
+    padding every tree table to 2^(d+1) columns guarantees that *any*
+    retrain with the same depth produces identically-shaped parameters —
+    the property the online hot-swap path needs to replace weights in a
+    jitted predict executable without triggering a recompile."""
+    return 2 ** (max_depth + 1)
+
+
+def pad_forest_params(params: dict, n_nodes: int) -> dict:
+    """Pad flattened tree tables to a fixed node capacity.
+
+    Padded nodes are unreachable (traversal starts at node 0 and real
+    left/right pointers only reference real nodes), but they are still
+    made inert — self-looping leaves predicting class 0 — so inference is
+    bit-identical to the unpadded tables.  Raises when the tables already
+    exceed the capacity (a retrain that outgrew the swap template)."""
+    feature = jnp.asarray(params["feature"])
+    t, cur = feature.shape
+    if cur > n_nodes:
+        raise ValueError(
+            f"forest has {cur} nodes per tree, more than the swap "
+            f"capacity {n_nodes}; retrain with the template's max_depth")
+    if cur == n_nodes:
+        return {k: jnp.asarray(v) for k, v in params.items()}
+    pad = n_nodes - cur
+    self_loop = jnp.broadcast_to(
+        jnp.arange(cur, n_nodes, dtype=jnp.int32), (t, pad))
+    leaf = jnp.asarray(params["leaf"])
+    leaf_pad = jnp.zeros((t, pad, leaf.shape[-1]), leaf.dtype)
+    leaf_pad = leaf_pad.at[..., 0].set(1.0)
+    return {
+        "feature": jnp.pad(feature, ((0, 0), (0, pad)),
+                           constant_values=-1),
+        "thresh": jnp.pad(jnp.asarray(params["thresh"]),
+                          ((0, 0), (0, pad))),
+        "left": jnp.concatenate(
+            [jnp.asarray(params["left"]), self_loop], axis=1),
+        "right": jnp.concatenate(
+            [jnp.asarray(params["right"]), self_loop], axis=1),
+        "leaf": jnp.concatenate([leaf, leaf_pad], axis=1),
+    }
 
 
 def forest_predict_proba(params: dict[str, jnp.ndarray], x: jnp.ndarray,

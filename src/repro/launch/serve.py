@@ -13,6 +13,18 @@ via ``ShardedEngineBackend`` — on CPU pair it with
 ``--force-host-devices`` to emulate the pod.  Reports latency percentiles
 with the queue-delay vs service-time breakdown, mean parameter, and
 envelope compliance.
+
+The warmup policy persists its padded-shape census to ``--census`` on
+``stop()`` and reloads it at construction, so a redeploy pre-compiles
+the previous run's shape distribution in the background with no explicit
+batch-size list.
+
+``--online`` closes the adaptation loop (src/repro/online): the service
+taps per-request telemetry into a ring buffer, a background shadow
+thread re-runs sampled queries at full fidelity on idle capacity and
+labels them judgment-free (MED vs the system's own reference run), a
+trainer refits the cascade on sliding label windows, and retrained
+weights hot-swap into the jitted predict path with zero recompiles.
 """
 
 from __future__ import annotations
@@ -38,6 +50,19 @@ def main() -> None:
                     help="data-axis shards for request batches")
     ap.add_argument("--force-host-devices", type=int, default=0,
                     help="emulate N CPU devices (set before first JAX use)")
+    ap.add_argument("--census", default="artifacts/warmup_census.json",
+                    help="padded-shape census path ('' disables "
+                         "persistence)")
+    ap.add_argument("--online", action="store_true",
+                    help="run the shadow-label/retrain/hot-swap loop on "
+                         "idle capacity")
+    ap.add_argument("--shadow-sample", type=int, default=None,
+                    help="logged queries labeled per shadow cycle "
+                         "(default: --batch, so the shadow re-runs pad "
+                         "to the already-warmed shape and compile "
+                         "nothing)")
+    ap.add_argument("--retrain-every", type=int, default=64,
+                    help="new shadow labels between cascade refits")
     args = ap.parse_args()
 
     from repro.launch import mesh as mesh_lib
@@ -49,10 +74,12 @@ def main() -> None:
     from repro.core import cascade as cascade_lib
     from repro.core import experiment as E
     from repro.core import labeling, tradeoff
+    from repro.online import (OnlineConfig, OnlineController,
+                              TelemetryBuffer, TrainerConfig)
     from repro.serving import pipeline as sp
     from repro.serving.admission import AdmissionConfig
     from repro.serving.service import (EngineBackend, RetrievalService,
-                                       ShardedEngineBackend)
+                                       ShardedEngineBackend, WarmupPolicy)
 
     mesh = None
     if args.shards > 1 or args.data_shards > 1:
@@ -80,11 +107,29 @@ def main() -> None:
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} — candidates over 'model', "
               f"batches over data axes (pad grid {backend.pad_multiple})")
-    service = RetrievalService(backend, AdmissionConfig(
-        max_batch=args.batch, pad_multiple=backend.pad_multiple,
-        default_deadline_ms=args.deadline_ms))
+    service = RetrievalService(
+        backend,
+        AdmissionConfig(max_batch=args.batch,
+                        pad_multiple=backend.pad_multiple,
+                        default_deadline_ms=args.deadline_ms),
+        # the census reloads the previous run's padded-shape
+        # distribution, so the background thread pre-compiles it at
+        # deploy time; warmup_now covers the first-boot case
+        warmup=WarmupPolicy(census_path=args.census or None),
+        telemetry=TelemetryBuffer() if args.online else None)
     service.warmup_now([args.batch])       # deploy-time shape; the
     # warmup policy keeps compiling whatever shapes admission produces
+
+    controller = None
+    if args.online:
+        controller = OnlineController(service, server, OnlineConfig(
+            tau=args.tau,
+            shadow_sample=args.shadow_sample or args.batch,
+            trainer=TrainerConfig(
+                retrain_every=args.retrain_every,
+                min_labels=args.retrain_every,
+                forest_kwargs=dict(n_trees=10, max_depth=6))))
+        controller.start()
 
     qn = sys_.queries.n_queries
     with service:
@@ -107,9 +152,31 @@ def main() -> None:
                   f"{np.mean([r['width'] for r in results]):>10.0f}"
                   f"{pct:>11.1%}"
                   f"{np.percentile([r['queue_ms'] for r in results], 50):>10.1f}")
+        if controller is not None:
+            # stop the adaptation thread while the service (and its
+            # engine) is still up — a daemon abandoned mid-dispatch
+            # aborts interpreter teardown — then drain the telemetry
+            # ring inline: under saturation the idle-gated background
+            # loop may never have found a window
+            controller.stop()
+            for _ in range(8):
+                before = controller.trainer.n_labels
+                controller.step()
+                if controller.trainer.n_labels == before:
+                    break
+    if controller is not None:
+        st = controller.stats()
+        print(f"online: labels={st['n_labels']} "
+              f"retrains={st['n_retrains']} swaps={st['n_swaps']} "
+              f"version={st['predictor_version']} "
+              f"tau_eff={st['tau_effective']:.3f} "
+              f"med_ema={st['med_ema']:.4f} fallback={st['fallback']}"
+              + (f" last_error={st['last_error']}"
+                 if st["last_error"] else ""))
     print(service.stats().summary())
     print("warmed shapes:", sorted(service.warmup.compiled),
-          "| shape census:", dict(service.queue.shape_counts))
+          "| shape census:", dict(service.queue.shape_counts),
+          "| census file:", args.census or "(disabled)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,25 @@
+"""Online adaptation: judgment-free shadow labeling, continuous cascade
+retraining, and hot-swap predictors in the serving path.
+
+See README.md in this directory for the loop diagram and the hot-swap
+atomicity argument."""
+
+from repro.online.controller import OnlineConfig, OnlineController
+from repro.online.drift import DriftConfig, DriftDecision, EnvelopeMonitor
+from repro.online.replay import replay, shifted_queries
+from repro.online.shadow import (ShadowBatch, ShadowExecutor,
+                                 reference_param, serving_med_table)
+from repro.online.store import PredictorStore, PredictorVersion
+from repro.online.telemetry import TelemetryBuffer, TelemetryRecord
+from repro.online.trainer import CascadeTrainer, TrainerConfig
+
+__all__ = [
+    "OnlineConfig", "OnlineController",
+    "DriftConfig", "DriftDecision", "EnvelopeMonitor",
+    "replay", "shifted_queries",
+    "ShadowBatch", "ShadowExecutor", "reference_param",
+    "serving_med_table",
+    "PredictorStore", "PredictorVersion",
+    "TelemetryBuffer", "TelemetryRecord",
+    "CascadeTrainer", "TrainerConfig",
+]

@@ -1,0 +1,155 @@
+"""The online adaptation loop: predict -> serve -> label -> retrain ->
+hot-swap, closed.
+
+``OnlineController`` wires the subsystem together around a live
+``RetrievalService`` + ``RetrievalServer``:
+
+    serving path      telemetry ring        idle capacity
+    ────────────      ──────────────        ─────────────
+    service ──tap──►  TelemetryBuffer ──►  ShadowExecutor (full-fidelity
+       ▲                                    re-runs + MED labels)
+       │                                        │
+       │   PredictorStore.install (atomic      ├──► EnvelopeMonitor
+       └── hot-swap, zero recompiles)          │    (tau / fallback)
+                 ▲                             ▼
+                 └── publish ──── CascadeTrainer (sliding-window refits)
+
+``step()`` runs one full cycle inline (deterministic — tests, benchmarks
+and the example drive it directly).  ``start()`` runs the same cycle on
+a background daemon thread gated on service idleness
+(``service.outstanding == 0``), so shadow re-execution and retraining
+consume idle capacity rather than competing with live traffic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+from repro.online.drift import DriftConfig, EnvelopeMonitor
+from repro.online.shadow import ShadowExecutor
+from repro.online.store import PredictorStore
+from repro.online.telemetry import TelemetryBuffer
+from repro.online.trainer import CascadeTrainer, TrainerConfig
+
+__all__ = ["OnlineConfig", "OnlineController"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineConfig:
+    tau: float = 0.05              # envelope target (drift monitor owns
+    #                                the labeling tau it hands retrains)
+    shadow_sample: int = 64        # logged queries labeled per cycle
+    shadow_period_s: float = 0.02  # background pacing between cycles
+    idle_only: bool = True         # gate background cycles on idleness
+    trainer: TrainerConfig = dataclasses.field(
+        default_factory=TrainerConfig)
+    drift: DriftConfig | None = None   # default: DriftConfig(target=tau)
+    metric: str = "rbp"
+    rbp_p: float = 0.95
+    seed: int = 0
+
+
+class OnlineController:
+    """Owns the shadow/train/swap cycle for one service."""
+
+    def __init__(self, service, server, cfg: OnlineConfig | None = None):
+        self.cfg = cfg or OnlineConfig()
+        self.service = service
+        self.server = server
+        if service.telemetry is None:
+            service.telemetry = TelemetryBuffer()
+        self.telemetry = service.telemetry
+        self.shadow = ShadowExecutor(
+            server, self.telemetry, sample=self.cfg.shadow_sample,
+            metric=self.cfg.metric, rbp_p=self.cfg.rbp_p,
+            seed=self.cfg.seed)
+        self.trainer = CascadeTrainer(self.cfg.trainer, server.cfg.cutoffs)
+        if server.cascade is None:
+            raise ValueError(
+                "OnlineController needs a server built with a trained "
+                "cascade (the boot predictor is the swap template)")
+        boot_thr = [server.cfg.threshold] * server.cascade.n_cutoffs
+        self.store = PredictorStore(server.cascade, boot_thr)
+        # serve the padded boot version from the start so every later
+        # swap is shape-identical to what the executable was traced with
+        self.store.install(server)
+        self.monitor = EnvelopeMonitor(
+            self.cfg.drift or DriftConfig(target=self.cfg.tau))
+        self.n_swaps = 0
+        self.n_steps = 0
+        self.last_error: BaseException | None = None
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -------------------------------------------------------- one cycle --
+    def step(self) -> dict:
+        """One inline shadow -> label -> (retrain -> swap) cycle."""
+        self.n_steps += 1
+        batch = self.shadow.run_once()
+        if batch is None:
+            return self.stats()
+        decision = self.monitor.observe(batch.observed_med)
+        self.server.fallback = decision.fallback
+        self.trainer.add(batch)
+        if self.trainer.should_retrain():
+            casc, thresholds = self.trainer.retrain(decision.tau)
+            self.store.publish(casc, thresholds,
+                               trained_on=self.trainer.window_size)
+            self.store.install(self.server)
+            self.n_swaps += 1
+        return self.stats()
+
+    # -------------------------------------------------- background loop --
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            if not self.cfg.idle_only or self.service.outstanding == 0:
+                try:
+                    self.step()
+                except Exception as e:  # noqa: BLE001 — adaptation must
+                    self.last_error = e  # never take the serving path
+                    #                      down; stats() surfaces it
+            self._stop.wait(self.cfg.shadow_period_s)
+
+    def start(self) -> "OnlineController":
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._loop, name="online-adapt", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 60.0) -> None:
+        """Stop the background loop.  The join timeout is generous: a
+        cycle mid-shadow holds real engine dispatches, and abandoning a
+        daemon thread inside an XLA call aborts interpreter teardown."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+
+    def __enter__(self) -> "OnlineController":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------- stats --
+    def stats(self) -> dict:
+        return {
+            "n_steps": self.n_steps,
+            "n_labels": self.trainer.n_labels,
+            "n_retrains": self.trainer.n_retrains,
+            "n_swaps": self.n_swaps,
+            "predictor_version": self.server.predictor_version,
+            "tau_effective": self.monitor.tau,
+            "med_ema": self.monitor.med_ema,
+            "fallback": self.monitor.fallback,
+            "n_fallbacks": self.monitor.n_fallbacks,
+            "telemetry_seen": self.telemetry.n_seen,
+            "telemetry_dropped": self.telemetry.n_dropped,
+            "last_error": (repr(self.last_error)
+                           if self.last_error is not None else None),
+            "t_wall": time.perf_counter(),
+        }

@@ -1,0 +1,138 @@
+"""Versioned predictor store: the hot-swap boundary between training and
+serving.
+
+``PredictorStore`` is constructed from the boot cascade (the *template*)
+and accepts retrained cascades from ``online.trainer``.  ``publish``:
+
+  1. validates that the retrain is swap-compatible with the template
+     (same node kind, cutoff count, tree count, max depth — anything
+     else would change executable shapes and force a recompile);
+  2. pads every forest node table to the shared depth-derived capacity
+     (``core.forest.node_capacity``), so *all* versions have bit-for-bit
+     identical parameter shapes regardless of how many nodes each
+     retrain actually grew (padding is inert: unreachable self-looping
+     leaves — inference is bit-identical to the unpadded tables);
+  3. moves the padded pytree to device off the serving path
+     (``jax.device_put``), stamps a monotone version, and atomically
+     installs it as ``current``.
+
+The serving side (``pipeline.RetrievalServer.swap_predictor``) then
+swaps the version in with one reference assignment; because shapes and
+pytree structure are invariant across versions, the jitted predict
+executable — which takes the parameters as runtime operands — is reused
+and ``engine.n_compiles`` does not move.  Old versions' buffers are
+released by reference count, never deleted eagerly, because concurrent
+predict threads may still be executing on them (this is also why the
+params are operands rather than jit-donated arguments — donating a
+buffer shared by in-flight calls would invalidate it under them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import forest as forest_lib
+
+__all__ = ["PredictorVersion", "PredictorStore"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictorVersion:
+    version: int
+    node_params: list              # padded, on device
+    thresholds: jnp.ndarray        # (c,) per-node confidence thresholds
+    trained_on: int                # labels in the training window
+    t_publish: float
+
+
+class PredictorStore:
+    """Monotone versions of swap-compatible cascade parameters."""
+
+    def __init__(self, cascade, thresholds, *, keep: int = 4):
+        self.kind = cascade.kind
+        self.n_cutoffs = cascade.n_cutoffs
+        self.max_depth = cascade.max_depth
+        if self.kind == "forest":
+            self.capacity = forest_lib.node_capacity(self.max_depth)
+            self.n_trees = int(cascade.node_params[0]["feature"].shape[0])
+        else:
+            self.capacity = None
+            self.n_trees = None
+        self.keep = keep
+        self._lock = threading.Lock()
+        self._versions: list[PredictorVersion] = []
+        self._current: PredictorVersion | None = None
+        self._next_version = 0
+        self.publish(cascade, thresholds, trained_on=0)
+
+    # -------------------------------------------------------- validation --
+    def _check_compatible(self, cascade) -> None:
+        if cascade.kind != self.kind:
+            raise ValueError(
+                f"retrained cascade kind {cascade.kind!r} != template "
+                f"{self.kind!r}")
+        if cascade.n_cutoffs != self.n_cutoffs:
+            raise ValueError(
+                f"retrained cascade has {cascade.n_cutoffs} cutoffs, "
+                f"template has {self.n_cutoffs}")
+        if self.kind == "forest":
+            if cascade.max_depth != self.max_depth:
+                raise ValueError(
+                    f"retrained max_depth {cascade.max_depth} != template "
+                    f"{self.max_depth} (node capacity would change)")
+            t = int(cascade.node_params[0]["feature"].shape[0])
+            if t != self.n_trees:
+                raise ValueError(
+                    f"retrained n_trees {t} != template {self.n_trees}")
+
+    def _pad(self, node_params) -> list:
+        if self.kind != "forest":
+            return [jax.tree.map(jnp.asarray, p) for p in node_params]
+        return [forest_lib.pad_forest_params(p, self.capacity)
+                for p in node_params]
+
+    # ----------------------------------------------------------- publish --
+    def publish(self, cascade, thresholds, *,
+                trained_on: int = 0) -> PredictorVersion:
+        """Pad + device-place a retrained cascade and make it current."""
+        self._check_compatible(cascade)
+        padded = jax.device_put(self._pad(cascade.node_params))
+        thr = jax.device_put(jnp.asarray(thresholds, jnp.float32))
+        if thr.shape != (self.n_cutoffs,):
+            raise ValueError(
+                f"thresholds shape {thr.shape} != ({self.n_cutoffs},)")
+        with self._lock:
+            v = PredictorVersion(
+                version=self._next_version,
+                node_params=padded, thresholds=thr,
+                trained_on=int(trained_on), t_publish=time.perf_counter())
+            self._next_version += 1
+            self._versions.append(v)
+            if len(self._versions) > self.keep:
+                # keep the recent tail live; evicted entries release
+                # their device buffers by refcount
+                self._versions = self._versions[-self.keep:]
+            self._current = v
+        return v
+
+    def current(self) -> PredictorVersion:
+        with self._lock:
+            return self._current
+
+    @property
+    def n_published(self) -> int:
+        with self._lock:
+            return self._next_version
+
+    def install(self, server) -> int:
+        """Swap the current version into a server's live predict path.
+        Returns the installed version number."""
+        v = self.current()
+        server.swap_predictor(v.node_params, v.thresholds,
+                              version=v.version)
+        return v.version

@@ -1,0 +1,102 @@
+"""Incremental cascade retraining on sliding windows of shadow labels.
+
+The offline pipeline (``core.experiment``) trains once from a frozen MED
+table; the online trainer keeps a bounded window of the shadow executor's
+label batches and refits the whole cascade (``core.cascade.train_cascade``
++ ``tune_thresholds``) whenever enough *new* labels have accumulated.
+Full refits — not warm-started gradient steps — are deliberate: the
+cascade nodes are small forests that train in milliseconds at serving
+feature dimensionality, a fresh fit forgets the stale distribution at
+exactly the window rate, and the resulting parameters are pad-compatible
+with the hot-swap template as long as ``forest_kwargs`` (n_trees,
+max_depth) stay fixed, which this module enforces by construction.
+
+The labeling tau is passed per retrain (the drift monitor owns it), so
+envelope tightening/widening takes effect on the next refit without
+touching the window.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import numpy as np
+
+from repro.core import cascade as cascade_lib
+from repro.core import labeling
+
+__all__ = ["TrainerConfig", "CascadeTrainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    window: int = 2048             # max labeled queries retained
+    min_labels: int = 128          # never refit below this many
+    retrain_every: int = 256       # new labels between refits
+    kind: str = "forest"
+    forest_kwargs: dict | None = None   # MUST stay fixed across refits
+    threshold_grid: tuple = (0.6, 0.7, 0.75, 0.8, 0.85, 0.9)
+    min_compliance: float = 0.95
+    seed: int = 0
+
+
+class CascadeTrainer:
+    """Sliding-window refits of the full cascade from shadow labels."""
+
+    def __init__(self, cfg: TrainerConfig, cutoffs):
+        self.cfg = cfg
+        self.cutoffs = tuple(cutoffs)
+        self._batches: collections.deque = collections.deque()
+        self._n_window = 0
+        self.labels_since_fit = 0
+        self.n_labels = 0
+        self.n_retrains = 0
+
+    # ------------------------------------------------------------ window --
+    def add(self, batch) -> None:
+        """Append one ``ShadowBatch``; evict oldest past the window."""
+        n = batch.features.shape[0]
+        self._batches.append(batch)
+        self._n_window += n
+        self.labels_since_fit += n
+        self.n_labels += n
+        while (self._n_window - len(self._batches[0].features)
+               >= self.cfg.window):
+            old = self._batches.popleft()
+            self._n_window -= old.features.shape[0]
+
+    @property
+    def window_size(self) -> int:
+        return self._n_window
+
+    def window(self) -> tuple[np.ndarray, np.ndarray]:
+        """(features, med_table) over the current window."""
+        x = np.concatenate([b.features for b in self._batches])
+        med = np.concatenate([b.med for b in self._batches])
+        return x, med
+
+    def should_retrain(self) -> bool:
+        return (self._n_window >= self.cfg.min_labels
+                and self.labels_since_fit >= self.cfg.retrain_every)
+
+    # ------------------------------------------------------------- refit --
+    def retrain(self, tau: float):
+        """Refit cascade + per-node thresholds on the window at ``tau``.
+
+        Returns ``(cascade, thresholds)``.  The seed advances with the
+        retrain count so successive windows don't share bootstrap draws,
+        while staying deterministic for a given retrain index."""
+        x, med = self.window()
+        labels = np.asarray(labeling.envelope_labels(med, tau))
+        casc = cascade_lib.train_cascade(
+            x, labels, n_cutoffs=len(self.cutoffs), kind=self.cfg.kind,
+            seed=self.cfg.seed + 1000 * (self.n_retrains + 1),
+            forest_kwargs=self.cfg.forest_kwargs)
+        thresholds = cascade_lib.tune_thresholds(
+            casc, x, med, self.cutoffs, tau,
+            grid=self.cfg.threshold_grid,
+            min_compliance=self.cfg.min_compliance)
+        self.n_retrains += 1
+        self.labels_since_fit = 0
+        return casc, thresholds

@@ -23,6 +23,7 @@ width (k semantics — the rerank cost driver), and per-stage wall-clock.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import jax
@@ -31,6 +32,7 @@ import numpy as np
 
 from repro.core import cascade as cascade_lib
 from repro.core import features as feat_lib
+from repro.core import forest as forest_lib
 from repro.retrieval import gold, jass
 from repro.serving import bucketing
 from repro.serving.engine import ServingEngine, ShardedServingEngine
@@ -81,14 +83,36 @@ class RetrievalServer:
                                         use_kernel=cfg.use_kernel)
         # built eagerly (jax.jit is lazy until called) so concurrent
         # predict_classes callers — the service's admit + warmup threads —
-        # never race a lazy init
+        # never race a lazy init.  The cascade weights enter the jitted
+        # executable as *runtime operands* (a pytree argument), never as
+        # baked-in constants: the online adaptation loop hot-swaps
+        # retrained weights of identical shapes into the live predict
+        # path with a single reference assignment and zero recompiles.
+        # Forest node tables are padded to the depth-derived capacity so
+        # every same-depth retrain produces identically-shaped params.
         self._predict_fn = None
+        self._live = None              # (node_params, thresholds) tuple
+        self._swap_lock = threading.Lock()
+        self.predictor_version = 0
+        self.fallback = False          # drift monitor: serve static max
         if casc is not None:
-            def _predict(q):
-                x = feat_lib.query_features(q, self.stats, self.ctf,
-                                            self.df)
-                return cascade_lib.predict_batched(self.cascade, x,
-                                                   self.cfg.threshold)
+            node_params = casc.node_params
+            if casc.kind == "forest":
+                cap = forest_lib.node_capacity(casc.max_depth)
+                node_params = [forest_lib.pad_forest_params(p, cap)
+                               for p in node_params]
+            thresholds = jnp.full((casc.n_cutoffs,), cfg.threshold,
+                                  jnp.float32)
+            self._live = (node_params, thresholds)
+            kind, depth = casc.kind, casc.max_depth
+            stats_, ctf_, df_ = self.stats, self.ctf, self.df
+
+            def _predict(node_params, thresholds, q):
+                x = feat_lib.query_features(q, stats_, ctf_, df_)
+                p0 = cascade_lib.proba0_from_params(kind, node_params, x,
+                                                    depth)
+                return cascade_lib.classes_from_proba(p0, thresholds)
+
             self._predict_fn = jax.jit(_predict)
         if warmup_batch_sizes and warmup_query_len:
             self.engine.warmup(warmup_batch_sizes, warmup_query_len)
@@ -111,11 +135,74 @@ class RetrievalServer:
         n = query_terms.shape[0]
         qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
                                 self.engine.batch_multiple, fill=-1)
-        return np.asarray(self._predict_fn(jnp.asarray(qt)))[:n]
+        # one tuple read: a concurrent swap_predictor can never hand this
+        # call params from one version and thresholds from another
+        node_params, thresholds = self._live
+        return np.asarray(self._predict_fn(node_params, thresholds,
+                                           jnp.asarray(qt)))[:n]
+
+    def swap_predictor(self, node_params, thresholds=None, *,
+                       version: int | None = None) -> int:
+        """Atomically replace the live cascade weights (and optionally the
+        per-node thresholds) in the jitted predict path.
+
+        The incoming pytree must match the live one in structure, shapes
+        and dtypes — anything else would silently trigger a recompile, so
+        it raises instead (``online.store.PredictorStore`` pads retrained
+        forests to the shared capacity precisely to satisfy this).  The
+        swap is one reference assignment of a ``(params, thresholds)``
+        tuple: in-flight predictions finish on the version they read, the
+        next ``predict_classes`` sees the new one, and there is no window
+        where params and thresholds mix versions.  The old version's
+        device buffers are *not* deleted eagerly — concurrent predict
+        threads (admit + warmup) may still be executing on them, which is
+        also why the params are plain operands rather than jit-donated
+        arguments; they are freed when the last in-flight call drops its
+        reference."""
+        if self._predict_fn is None:
+            raise RuntimeError(
+                "server has no cascade predict path to swap (built with "
+                "casc=None)")
+        with self._swap_lock:
+            old_params, old_thr = self._live
+            flat_new, tree_new = jax.tree_util.tree_flatten(node_params)
+            flat_old, tree_old = jax.tree_util.tree_flatten(old_params)
+            if tree_new != tree_old:
+                raise ValueError(
+                    "swapped predictor pytree structure differs from the "
+                    f"live one ({tree_new} vs {tree_old}); this would "
+                    "recompile the predict executable")
+            for a, b in zip(flat_new, flat_old):
+                if a.shape != b.shape or a.dtype != b.dtype:
+                    raise ValueError(
+                        "swapped predictor leaf mismatch: "
+                        f"{a.shape}/{a.dtype} vs live {b.shape}/{b.dtype}"
+                        " — pad retrained params to the template "
+                        "(online.store.PredictorStore)")
+            node_params = jax.device_put(node_params)
+            if thresholds is None:
+                thresholds = old_thr
+            else:
+                thresholds = jnp.asarray(thresholds, jnp.float32)
+                if thresholds.shape != old_thr.shape:
+                    raise ValueError(
+                        f"thresholds shape {thresholds.shape} != live "
+                        f"{old_thr.shape}")
+                thresholds = jax.device_put(thresholds)
+            self._live = (node_params, thresholds)
+            self.predictor_version = (self.predictor_version + 1
+                                      if version is None else int(version))
+        return self.predictor_version
 
     def params_of(self, classes: np.ndarray) -> np.ndarray:
-        """Predicted class -> engine parameter (k or rho) vector."""
+        """Predicted class -> engine parameter (k or rho) vector.
+
+        When the drift monitor has tripped ``fallback``, every query is
+        served at the static maximal parameter (the global-baseline
+        escape hatch) regardless of the predicted class."""
         cuts = np.asarray(self.cfg.cutoffs)
+        if self.fallback:
+            classes = np.full_like(np.asarray(classes), len(cuts) - 1)
         p = cuts[np.minimum(classes, len(cuts) - 1)]
         if self.cfg.knob == "rho":
             p = np.minimum(p, self.cfg.stream_cap)

@@ -36,6 +36,8 @@ deterministic mode tests and synchronous callers use.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import queue as queue_lib
 import threading
 import time
@@ -108,15 +110,24 @@ class EngineBackend:
         self.query_len = qt.shape[1]
         return qt
 
-    def predict(self, qt: np.ndarray) -> np.ndarray:
-        return self.server.predict_classes(qt)
+    def predict(self, qt: np.ndarray):
+        # capture the predictor version *with* the decision: a hot-swap
+        # landing between predict and execute (or during the handoff
+        # wait) must not re-attribute this batch's classes to the new
+        # weights.  The version is read immediately before the cascade
+        # call, so the attribution window shrinks from the whole
+        # predict->resolve span to the reference read inside
+        # predict_classes itself.
+        ver = self.predictor_version
+        return self.server.predict_classes(qt), ver
 
-    def execute(self, qt, classes) -> tuple[list[dict], dict]:
+    def execute(self, qt, pred) -> tuple[list[dict], dict]:
+        classes, ver = pred
         widths = self.server.params_of(np.asarray(classes))
         ranked, timings = self.server.engine.serve(qt, widths)
         results = [
             {"ranked": ranked[i], "class": int(classes[i]),
-             "width": float(widths[i])}
+             "width": float(widths[i]), "predictor_version": ver}
             for i in range(qt.shape[0])
         ]
         return results, timings
@@ -133,6 +144,21 @@ class EngineBackend:
     @property
     def n_compiles(self) -> int | None:
         return self.server.engine.n_compiles
+
+    # ------------------------------------------- online adaptation hooks --
+    @property
+    def predictor_version(self) -> int:
+        """Version stamp of the live cascade weights (telemetry records
+        carry it so shadow labels can be attributed to the predictor that
+        produced the serving decision)."""
+        return getattr(self.server, "predictor_version", 0)
+
+    def swap_predictor(self, node_params, thresholds=None, *,
+                       version: int | None = None) -> int:
+        """Hot-swap the cascade weights in the server's jitted predict
+        path (see ``pipeline.RetrievalServer.swap_predictor``)."""
+        return self.server.swap_predictor(node_params, thresholds,
+                                          version=version)
 
 
 class ShardedEngineBackend(EngineBackend):
@@ -243,17 +269,73 @@ class WarmupPolicy:
     compilation (the service's background thread calls ``run``).  At most
     ``max_shapes`` distinct shapes are ever compiled — the padded grid is
     discrete, so a handful of shapes covers the mass of the distribution.
+
+    With a ``census_path``, the census *persists across runs*: the
+    service saves the observed shape counts on ``stop()`` and reloads
+    them at construction, scheduling the previous run's most common
+    shapes immediately — so deploy-time background pre-compile starts
+    from the live distribution with no explicit batch-size list.
     """
 
-    def __init__(self, min_count: int = 1, max_shapes: int = 8):
+    def __init__(self, min_count: int = 1, max_shapes: int = 8,
+                 census_path: str | None = None):
         self.min_count = min_count
         self.max_shapes = max_shapes
+        self.census_path = census_path
         self.counts: dict[int, int] = {}
         self.compiled: set[int] = set()
         self.failed: dict[int, Exception] = {}
         self._pending: queue_lib.SimpleQueue = queue_lib.SimpleQueue()
         self._scheduled: set[int] = set()
         self._lock = threading.Lock()
+
+    # ----------------------------------------------- census persistence --
+    def load_census(self) -> list[int]:
+        """Seed the census from the previous run's persisted shape counts
+        and schedule the most common shapes for background compilation.
+        Returns the scheduled shapes (empty when there is no census)."""
+        if not self.census_path or not os.path.exists(self.census_path):
+            return []
+        try:
+            with open(self.census_path) as f:
+                raw = json.load(f).get("shapes", {})
+            shapes = {int(s): int(c) for s, c in raw.items()}
+        except (OSError, ValueError, TypeError, AttributeError):
+            return []                  # corrupt census: start fresh
+        scheduled = []
+        with self._lock:
+            for s, c in shapes.items():
+                self.counts[s] = self.counts.get(s, 0) + c
+            order = sorted(self.counts, key=lambda s: (-self.counts[s], s))
+            # schedule at most half the slots from history: _scheduled
+            # never shrinks, so a full census would otherwise lock live
+            # traffic's new shapes out of background warmup forever
+            cap = max(1, self.max_shapes // 2)
+            for s in order:
+                if (self.counts[s] >= self.min_count
+                        and s not in self._scheduled
+                        and len(self._scheduled) < cap):
+                    self._scheduled.add(s)
+                    self._pending.put(s)
+                    scheduled.append(s)
+        return scheduled
+
+    def save_census(self) -> str | None:
+        """Persist the observed padded-shape counts (no-op without a
+        ``census_path``).  Counts accumulate across runs via
+        ``load_census``, so the distribution tracks long-run traffic."""
+        if not self.census_path:
+            return None
+        with self._lock:
+            shapes = {str(s): int(c) for s, c in sorted(self.counts.items())}
+        payload = {"shapes": shapes, "unix_time": time.time()}
+        d = os.path.dirname(os.path.abspath(self.census_path))
+        os.makedirs(d, exist_ok=True)
+        tmp = self.census_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        os.replace(tmp, self.census_path)
+        return self.census_path
 
     def observe(self, padded_size: int) -> None:
         with self._lock:
@@ -345,7 +427,8 @@ class RetrievalService:
     def __init__(self, backend: Backend,
                  admission: AdmissionConfig | None = None,
                  warmup: WarmupPolicy | None = None,
-                 handoff_depth: int = 2):
+                 handoff_depth: int = 2,
+                 telemetry=None):
         if admission is None:
             admission = AdmissionConfig(pad_multiple=backend.pad_multiple)
         elif admission.pad_multiple != backend.pad_multiple:
@@ -356,6 +439,15 @@ class RetrievalService:
         self.backend = backend
         self.queue = AdmissionQueue(admission)
         self.warmup = WarmupPolicy() if warmup is None else warmup
+        # previous run's padded-shape census (if the policy persists one):
+        # schedules the common shapes now, so the background warmup
+        # thread pre-compiles them before traffic arrives
+        self.warmup.load_census()
+        #: optional ``online.telemetry.TelemetryBuffer`` (duck-typed:
+        #: anything with ``record(payload, result, version, t_wall)``).
+        #: The tap is a bounded ring-buffer append per request, after the
+        #: futures resolve — O(1) and off the result critical path.
+        self.telemetry = telemetry
         self._handoff: queue_lib.Queue = queue_lib.Queue(handoff_depth)
         self._records: list[_BatchRecord] = []
         self._lock = threading.Lock()
@@ -444,6 +536,7 @@ class RetrievalService:
             widths=[res.get("width") for res in results])
         with self._lock:
             self._records.append(rec)
+        enriched = []
         for req, res, qms, tms in zip(b.requests, results, queue_ms,
                                       total_ms):
             res = dict(res)
@@ -452,8 +545,26 @@ class RetrievalService:
             res["service_ms"] = service_ms
             res["total_ms"] = tms
             res["deadline_met"] = t_done <= req.deadline
+            enriched.append(res)
             if not req.future.done():
                 req.future.set_result(res)
+        if self.telemetry is not None:
+            # tap *after* the futures resolve: the append never adds to
+            # request latency, only to the exec thread's turnaround.
+            # Backends that version their predictor stamp each result at
+            # predict time (EngineBackend); the getattr is the fallback
+            # for backends that don't.
+            ver = getattr(self.backend, "predictor_version", 0)
+            try:
+                for req, res in zip(b.requests, enriched):
+                    self.telemetry.record(req.payload, res,
+                                          res.get("predictor_version",
+                                                  ver),
+                                          t_done)
+            except Exception:          # noqa: BLE001 — a faulty (duck-
+                pass                   # typed) recorder must never kill
+                #                        the exec thread; the loop just
+                #                        misses these labels
 
     # ----------------------------------------------------------- threads --
     def _admit_loop(self) -> None:
@@ -544,6 +655,24 @@ class RetrievalService:
             if self._threads:
                 time.sleep(0.001)
 
+    @property
+    def outstanding(self) -> int:
+        """Requests submitted but not yet resolved — the online shadow
+        executor's idle-capacity gate reads this."""
+        with self._lock:
+            return self._outstanding
+
+    def swap_predictor(self, node_params, thresholds=None, *,
+                       version: int | None = None) -> int:
+        """Hot-swap hook: delegate to the backend when it supports
+        swapping (EngineBackend / ShardedEngineBackend)."""
+        fn = getattr(self.backend, "swap_predictor", None)
+        if fn is None:
+            raise TypeError(
+                f"backend {type(self.backend).__name__} has no "
+                "swap_predictor hook")
+        return fn(node_params, thresholds, version=version)
+
     def stop(self, drain: bool = True) -> None:
         if drain:
             self.flush()
@@ -552,7 +681,10 @@ class RetrievalService:
         with self._wake:
             self._wake.notify_all()
         for t in self._threads:
-            t.join(timeout=5.0)
+            # the warmup thread may be mid-compile; wait it out (bounded
+            # by one shape compile) — abandoning a daemon inside an XLA
+            # call aborts interpreter teardown
+            t.join(timeout=60.0 if t.name == "svc-warmup" else 5.0)
         self._threads = []
         if not drain:                  # abort path: resolve, don't strand
             self.queue.flush()
@@ -569,6 +701,9 @@ class RetrievalService:
             if item is not self._SENTINEL:
                 for r in item.requests:
                     r.future.cancel()
+        # persist the padded-shape census for the next run's deploy-time
+        # pre-compile (no-op unless the policy was given a census_path)
+        self.warmup.save_census()
 
     def __enter__(self) -> "RetrievalService":
         return self.start()

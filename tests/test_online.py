@@ -1,0 +1,521 @@
+"""Online adaptation loop: telemetry ring, judgment-free shadow labels,
+sliding-window retrains, the versioned predictor store, hot-swap
+correctness (bit-identity vs restart, compile-count O(1), the 8-device
+sharded mesh path), envelope drift/fallback, and warmup-census
+persistence."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import cascade as cascade_lib
+from repro.core import experiment as E
+from repro.core import forest as forest_lib
+from repro.online import (DriftConfig, EnvelopeMonitor, OnlineConfig,
+                          OnlineController, PredictorStore, ShadowExecutor,
+                          TelemetryBuffer, TelemetryRecord, TrainerConfig,
+                          shifted_queries)
+from repro.serving import pipeline as serve_lib
+from repro.serving.admission import AdmissionConfig
+from repro.serving.service import (EngineBackend, RetrievalService,
+                                   WarmupPolicy)
+
+FOREST_KW = dict(n_trees=4, max_depth=4)
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    return E.build_system(E.ExperimentConfig(
+        n_docs=400, vocab=900, n_queries=64, stream_cap=128,
+        pool_depth=100, gold_depth=50, query_batch=16, seed=21))
+
+
+def _cascade(sys_, seed=0):
+    """Deterministic boot cascade (synthetic labels: the loop mechanics
+    don't care how good the boot predictor is)."""
+    cuts = sys_.k_cutoffs
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, len(cuts) + 1, sys_.features.shape[0])
+    return cascade_lib.train_cascade(
+        sys_.features, labels, n_cutoffs=len(cuts), seed=seed,
+        forest_kwargs=FOREST_KW)
+
+
+def _server(sys_, casc, **cfg_kw):
+    cfg = serve_lib.ServingConfig(
+        knob="k", cutoffs=sys_.k_cutoffs, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap, **cfg_kw)
+    return serve_lib.RetrievalServer(sys_.index, casc, cfg)
+
+
+# ------------------------------------------------ feature validation (sat) --
+
+def test_predict_batched_rejects_empty_batch(small_system):
+    casc = _cascade(small_system)
+    with pytest.raises(ValueError, match="non-empty"):
+        cascade_lib.predict_batched(
+            casc, np.zeros((0, 70), np.float32), 0.75)
+
+
+def test_proba0_rejects_nan_features(small_system):
+    casc = _cascade(small_system)
+    x = np.array(small_system.features[:4])
+    x[1, 3] = np.nan
+    with pytest.raises(ValueError, match="NaN"):
+        casc.proba0(x)
+    with pytest.raises(ValueError, match="NaN"):
+        cascade_lib.predict_batched(casc, x, 0.75)
+    # clean features still predict
+    ok = cascade_lib.predict_batched(casc, small_system.features[:4], 0.75)
+    assert ok.shape == (4,)
+
+
+def test_proba0_rejects_wrong_rank(small_system):
+    casc = _cascade(small_system)
+    with pytest.raises(ValueError, match="non-empty"):
+        casc.proba0(np.zeros(70, np.float32))
+
+
+# ------------------------------------------------------- forest padding --
+
+def test_pad_forest_params_bit_identical(small_system):
+    casc = _cascade(small_system)
+    cap = forest_lib.node_capacity(casc.max_depth)
+    x = np.asarray(small_system.features[:16], np.float32)
+    import jax.numpy as jnp
+    for p in casc.node_params:
+        padded = forest_lib.pad_forest_params(p, cap)
+        assert padded["feature"].shape[1] == cap
+        a = forest_lib.forest_predict_proba(p, jnp.asarray(x),
+                                            casc.max_depth)
+        b = forest_lib.forest_predict_proba(padded, jnp.asarray(x),
+                                            casc.max_depth)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pad_forest_params_rejects_overflow(small_system):
+    casc = _cascade(small_system)
+    n = casc.node_params[0]["feature"].shape[1]
+    with pytest.raises(ValueError, match="capacity"):
+        forest_lib.pad_forest_params(casc.node_params[0], max(1, n - 1))
+
+
+# ------------------------------------------------------- telemetry ring --
+
+def _rec(i):
+    return TelemetryRecord(payload=np.full(3, i), pred_class=i % 4,
+                           width=float(i), ranked=np.arange(5),
+                           total_ms=1.0, predictor_version=0, t_wall=0.0)
+
+
+def test_telemetry_ring_bounded_overwrite():
+    buf = TelemetryBuffer(capacity=4)
+    for i in range(6):
+        buf.append(_rec(i))
+    assert len(buf) == 4
+    assert buf.n_seen == 6 and buf.n_dropped == 2
+    window = buf.snapshot()
+    assert [r.seq for r in window] == [2, 3, 4, 5]   # oldest evicted
+    rng = np.random.default_rng(0)
+    assert len(buf.sample(10, rng)) == 4             # clamped to window
+    assert buf.sample(2, rng, min_seq=5)[0].seq == 5
+    assert buf.sample(2, rng, min_seq=6) == []
+
+
+def test_telemetry_service_tap(small_system):
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    buf = TelemetryBuffer(capacity=32)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=8, pad_multiple=8), telemetry=buf)
+    qt = small_system.queries.terms[:12]
+    results = service.serve_all(list(qt))
+    assert buf.n_seen == 12
+    recs = buf.snapshot()
+    for r, res, row in zip(recs, results, qt):
+        np.testing.assert_array_equal(np.asarray(r.payload), row)
+        np.testing.assert_array_equal(r.ranked, res["ranked"])
+        assert r.pred_class == res["class"]
+        assert r.predictor_version == server.predictor_version
+
+
+# ---------------------------------------------------- shadow labeling --
+
+def test_shadow_labels_are_judgment_free(small_system):
+    """The shadow executor labels logged traffic against the system's own
+    full-fidelity run — reference cutoffs score MED 0, everything comes
+    from the engine, and no relevance data exists anywhere to consult."""
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    buf = TelemetryBuffer(capacity=64)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=16, pad_multiple=8), telemetry=buf)
+    service.serve_all(list(small_system.queries.terms[:16]))
+    shadow = ShadowExecutor(server, buf, sample=8, seed=3)
+    batch = shadow.run_once()
+    c = len(server.cfg.cutoffs)
+    assert batch.features.shape == (8, 70)
+    assert batch.med.shape == (8, c)
+    assert np.isfinite(batch.features).all()
+    assert (batch.med >= 0).all() and np.isfinite(batch.med).all()
+    # the reference cutoff's own run has MED(A, A) = 0 exactly
+    ref = max(server.cfg.cutoffs)
+    for ci, cut in enumerate(server.cfg.cutoffs):
+        if cut == ref:
+            assert (batch.med[:, ci] == 0).all()
+    assert (batch.observed_med >= 0).all()
+    # MED is monotone non-increasing in k on average (deeper pools can
+    # only get closer to the full-fidelity reference)
+    assert batch.med[:, 0].mean() >= batch.med[:, -1].mean()
+    # second cycle: the remaining 8 unread records, then nothing new
+    assert shadow.run_once() is not None
+    assert shadow.run_once() is None
+    assert shadow.n_labeled == 16
+
+
+def test_shadow_scores_the_decision_not_the_fallback_width(small_system):
+    """During breaker fallback the *served* width is the reference run
+    itself (observed MED of the served list would be identically 0 and
+    recovery would be vacuous); the shadow must score the predictor's
+    logged class instead, so the monitor tracks the counterfactual
+    quality of the still-live predictor."""
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    buf = TelemetryBuffer(capacity=32)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=8, pad_multiple=8), telemetry=buf)
+    server.fallback = True                 # breaker tripped
+    service.serve_all(list(small_system.queries.terms[:8]))
+    server.fallback = False
+    recs = buf.snapshot()
+    ref = max(server.cfg.cutoffs)
+    assert all(r.width == ref for r in recs)      # served at reference
+    batch = ShadowExecutor(server, buf, sample=8, seed=0).run_once()
+    c = len(server.cfg.cutoffs)
+    want = batch.med[np.arange(8),
+                     np.minimum(batch.served_class, c - 1)]
+    np.testing.assert_array_equal(batch.observed_med, want)
+
+
+def test_shadow_handles_classless_records(small_system):
+    """Duck-typed traffic without 'class'/'width' (pred_class=-1,
+    width=NaN) must fall through to directly scoring the logged list —
+    not crash on int(NaN)."""
+    server = _server(small_system, None)
+    buf = TelemetryBuffer(8)
+    qt = small_system.queries.terms[:4]
+    ref = server.serve_fixed(qt, max(server.cfg.cutoffs))["ranked"]
+    for i in range(4):
+        buf.record(qt[i], {"ranked": ref[i]}, 0, 0.0)   # no class/width
+    batch = ShadowExecutor(server, buf, sample=4).run_once()
+    assert (batch.served_class == -1).all()
+    # logged lists ARE the reference at these positions -> MED identity
+    np.testing.assert_array_equal(batch.observed_med, np.zeros(4))
+
+
+# -------------------------------------------------- store + hot-swap --
+
+def test_store_versions_and_compatibility(small_system):
+    casc_a = _cascade(small_system, seed=0)
+    casc_b = _cascade(small_system, seed=1)
+    store = PredictorStore(casc_a, [0.75] * casc_a.n_cutoffs)
+    assert store.current().version == 0
+    v = store.publish(casc_b, [0.8] * casc_b.n_cutoffs, trained_on=32)
+    assert v.version == 1 and store.n_published == 2
+    # every version's leaves share one shape (the hot-swap invariant)
+    cap = forest_lib.node_capacity(casc_a.max_depth)
+    for p in v.node_params:
+        assert p["feature"].shape[1] == cap
+    deeper = cascade_lib.train_cascade(
+        small_system.features,
+        np.zeros(small_system.features.shape[0], np.int64) + 1,
+        n_cutoffs=casc_a.n_cutoffs,
+        forest_kwargs=dict(n_trees=4, max_depth=6))
+    with pytest.raises(ValueError, match="max_depth"):
+        store.publish(deeper, [0.75] * casc_a.n_cutoffs)
+
+
+def test_hot_swap_bit_identical_to_restart(small_system):
+    """Swapping weights mid-stream == restarting the service with those
+    weights: same classes, same rankings, bit for bit — and the swap
+    itself compiles nothing."""
+    casc_a = _cascade(small_system, seed=0)
+    casc_b = _cascade(small_system, seed=1)
+    server = _server(small_system, casc_a)
+    qt1 = small_system.queries.terms[:16]
+    qt2 = small_system.queries.terms[16:32]
+    server.serve_batch(qt1)                      # warm + serve on A
+    compiles = server.engine.n_compiles
+    store = PredictorStore(casc_a,
+                           [server.cfg.threshold] * casc_a.n_cutoffs)
+    store.publish(casc_b, [server.cfg.threshold] * casc_b.n_cutoffs)
+    store.install(server)                        # hot-swap to B
+    out_swapped = server.serve_batch(qt2)
+    assert server.engine.n_compiles == compiles  # zero swap compiles
+    assert server.predictor_version == 1
+
+    restarted = _server(small_system, casc_b)    # cold server on B
+    out_restart = restarted.serve_batch(qt2)
+    np.testing.assert_array_equal(out_swapped["classes"],
+                                  out_restart["classes"])
+    np.testing.assert_array_equal(out_swapped["ranked"],
+                                  out_restart["ranked"])
+
+
+def test_swap_rejects_shape_mismatch(small_system):
+    casc = _cascade(small_system, seed=0)
+    server = _server(small_system, casc)
+    other = cascade_lib.train_cascade(
+        small_system.features,
+        np.ones(small_system.features.shape[0], np.int64),
+        n_cutoffs=casc.n_cutoffs,
+        forest_kwargs=dict(n_trees=3, max_depth=4))   # fewer trees
+    with pytest.raises(ValueError, match="mismatch|structure"):
+        server.swap_predictor(other.node_params)
+    with pytest.raises(ValueError, match="thresholds"):
+        server.swap_predictor(server._live[0], thresholds=[0.5, 0.5])
+
+
+def test_swap_requires_a_cascade(small_system):
+    server = _server(small_system, None)
+    with pytest.raises(RuntimeError, match="no cascade"):
+        server.swap_predictor([])
+
+
+def test_compile_count_constant_under_swaps_and_mixed_batches(
+        small_system):
+    """Acceptance: hot-swaps interleaved with mixed batch sizes leave the
+    executable cache exactly where warmup put it."""
+    casc_a = _cascade(small_system, seed=0)
+    server = _server(small_system, casc_a)
+    service = RetrievalService(
+        EngineBackend(server,
+                      query_len=small_system.queries.terms.shape[1]),
+        AdmissionConfig(max_batch=16, pad_multiple=8))
+    service.warmup_now([8, 16])
+    base = server.engine.n_compiles
+    assert base > 0
+    store = PredictorStore(casc_a,
+                           [server.cfg.threshold] * casc_a.n_cutoffs)
+    for i, n in enumerate((3, 8, 11, 16, 5)):
+        store.publish(_cascade(small_system, seed=10 + i),
+                      [server.cfg.threshold] * casc_a.n_cutoffs)
+        service.swap_predictor(store.current().node_params,
+                               store.current().thresholds,
+                               version=store.current().version)
+        service.serve_all(list(small_system.queries.terms[:n]))
+    assert server.engine.n_compiles == base
+    assert server.predictor_version == store.current().version
+
+
+# --------------------------------------------------------- drift monitor --
+
+def test_envelope_monitor_fallback_and_recovery():
+    mon = EnvelopeMonitor(DriftConfig(target=0.05, ema=1.0, min_obs=1,
+                                      fallback_factor=3.0,
+                                      recover_batches=2))
+    d = mon.observe(np.full(8, 0.5))             # 10x target: trip
+    assert d.fallback and mon.n_fallbacks == 1
+    assert d.tau < 0.05                          # labeling tightened
+    d = mon.observe(np.full(8, 0.01))            # one good batch: hold
+    assert d.fallback
+    d = mon.observe(np.full(8, 0.01))            # second: recover
+    assert not d.fallback
+    for _ in range(8):                           # cold envelope: widen
+        d = mon.observe(np.full(8, 0.001))
+    assert d.tau == pytest.approx(0.05 * 1.5)
+    assert mon.n_fallbacks == 1                  # no re-trip
+
+
+def test_fallback_serves_static_max(small_system):
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    classes = np.array([0, 2, 5])
+    widths = server.params_of(classes)
+    assert len(set(widths.tolist())) > 1
+    server.fallback = True
+    np.testing.assert_array_equal(
+        server.params_of(classes),
+        np.full(3, max(server.cfg.cutoffs), np.int64))
+    server.fallback = False
+
+
+# ------------------------------------------------------- controller e2e --
+
+def test_controller_closes_the_loop(small_system):
+    """serve -> telemetry -> shadow labels -> retrain -> hot-swap, with
+    zero engine compiles after warmup and a bumped predictor version."""
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    service = RetrievalService(
+        EngineBackend(server,
+                      query_len=small_system.queries.terms.shape[1]),
+        AdmissionConfig(max_batch=16, pad_multiple=8),
+        telemetry=TelemetryBuffer(capacity=128))
+    service.warmup_now([16])
+    ctrl = OnlineController(service, server, OnlineConfig(
+        tau=0.05, shadow_sample=16,
+        trainer=TrainerConfig(min_labels=16, retrain_every=16, window=64,
+                              forest_kwargs=FOREST_KW)))
+    assert server.predictor_version == 0         # boot = store version 0
+    base = server.engine.n_compiles
+    for lo in (0, 16, 32):
+        service.serve_all(list(small_system.queries.terms[lo:lo + 16]))
+        ctrl.step()
+    st = ctrl.stats()
+    assert st["n_labels"] == 48
+    assert st["n_retrains"] >= 2 and st["n_swaps"] >= 2
+    assert server.predictor_version == st["n_swaps"]
+    assert server.engine.n_compiles == base      # the whole loop: 0 new
+    # the swapped-in predictor still serves
+    out = service.serve_all(list(small_system.queries.terms[:5]))
+    assert len(out) == 5
+
+
+def test_controller_requires_boot_cascade(small_system):
+    server = _server(small_system, None)
+    service = RetrievalService(EngineBackend(server))
+    with pytest.raises(ValueError, match="trained cascade"):
+        OnlineController(service, server)
+
+
+def test_shifted_queries_bands(small_system):
+    corpus = small_system.index.corpus
+    for band in ("head", "tail", "long"):
+        q = shifted_queries(corpus, 16, band=band, max_len=5)
+        assert q.terms.shape == (16, 5)
+        assert (q.lengths >= 1).all()
+        assert ((q.terms >= -1) & (q.terms < corpus.config.vocab)).all()
+    assert shifted_queries(corpus, 16, band="long").lengths.min() >= 3
+    with pytest.raises(ValueError, match="band"):
+        shifted_queries(corpus, 4, band="nope")
+
+
+# --------------------------------------------- warmup census persistence --
+
+def test_warmup_census_round_trip(tmp_path, small_system):
+    """The service persists the padded-shape census on stop() and a new
+    service pre-compiles last run's distribution with no traffic and no
+    explicit batch-size list."""
+    path = str(tmp_path / "census.json")
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    backend = EngineBackend(
+        server, query_len=small_system.queries.terms.shape[1])
+    service = RetrievalService(
+        backend, AdmissionConfig(max_batch=16, pad_multiple=8),
+        warmup=WarmupPolicy(census_path=path))
+    for n in (5, 16, 7):
+        service.serve_all(list(small_system.queries.terms[:n]))
+    service.stop()
+    census = json.loads(open(path).read())["shapes"]
+    assert census == {"8": 2, "16": 1}
+
+    # fresh "deploy": a new engine, census reloaded at construction
+    server2 = _server(small_system, casc)
+    backend2 = EngineBackend(
+        server2, query_len=small_system.queries.terms.shape[1])
+    service2 = RetrievalService(
+        backend2, AdmissionConfig(max_batch=16, pad_multiple=8),
+        warmup=WarmupPolicy(census_path=path))
+    assert service2.warmup.top_shapes() == [8, 16]
+    assert server2.engine.n_compiles == 0
+    compiled = service2.warmup.run(backend2, block=False, timeout=None)
+    assert compiled == 2                       # both shapes pre-compiled
+    base = server2.engine.n_compiles
+    assert base > 0
+    service2.serve_all(list(small_system.queries.terms[:13]))   # -> 16
+    assert server2.engine.n_compiles == base   # traffic hits warm shapes
+    service2.stop()
+    merged = json.loads(open(path).read())["shapes"]
+    assert merged == {"8": 2, "16": 2}         # counts accumulate
+
+
+def test_census_missing_or_corrupt_starts_fresh(tmp_path):
+    p = WarmupPolicy(census_path=str(tmp_path / "none.json"))
+    assert p.load_census() == []
+    for i, content in enumerate((
+            "{not json",                          # unparseable
+            '{"shapes": {"64x": 3}}',             # non-integer key
+            '{"shapes": {"8": "lots"}}',          # non-integer count
+            '{"shapes": [8, 16]}',                # wrong container
+            '{"shapes": null}')):
+        bad = tmp_path / f"bad{i}.json"
+        bad.write_text(content)
+        p = WarmupPolicy(census_path=str(bad))
+        assert p.load_census() == []              # ignored, not fatal
+        assert p.counts == {}
+
+
+# --------------------------------------------------- sharded mesh swap --
+
+_SHARDED_SWAP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import numpy as np
+    from repro.core import cascade as cl, experiment as E
+    from repro.distrib.sharding import make_compat_mesh
+    from repro.online import PredictorStore
+    from repro.serving import pipeline as sp
+    from repro.serving.admission import AdmissionConfig
+    from repro.serving.service import RetrievalService, ShardedEngineBackend
+
+    sys_ = E.build_system(E.ExperimentConfig(
+        n_docs=301, vocab=900, n_queries=48, stream_cap=128,
+        pool_depth=100, gold_depth=50, query_batch=16, seed=5))
+    cuts = sys_.k_cutoffs
+    rng = np.random.default_rng(0)
+
+    def casc(seed):
+        labels = np.random.default_rng(seed).integers(
+            0, len(cuts) + 1, sys_.features.shape[0])
+        return cl.train_cascade(sys_.features, labels,
+                                n_cutoffs=len(cuts), seed=seed,
+                                forest_kwargs=dict(n_trees=4, max_depth=4))
+
+    a, b = casc(0), casc(1)
+    cfg = sp.ServingConfig(knob="k", cutoffs=cuts, rerank_depth=30,
+                           stream_cap=sys_.cfg.stream_cap)
+    mesh = make_compat_mesh((2, 2), ("data", "model"))
+    srv = sp.RetrievalServer(sys_.index, a, cfg, mesh=mesh)
+    backend = ShardedEngineBackend(srv,
+                                   query_len=sys_.queries.terms.shape[1])
+    service = RetrievalService(backend, AdmissionConfig(
+        max_batch=16, pad_multiple=backend.pad_multiple))
+    service.warmup_now([8, 16])
+    base = srv.engine.n_compiles
+    assert base > 0
+    qt = sys_.queries.terms
+    service.serve_all(list(qt[:16]))             # serve on A
+    store = PredictorStore(a, [cfg.threshold] * a.n_cutoffs)
+    store.publish(b, [cfg.threshold] * b.n_cutoffs)
+    service.swap_predictor(store.current().node_params,
+                           store.current().thresholds,
+                           version=store.current().version)
+    res = service.serve_all(list(qt[16:32]))     # serve on B, post-swap
+    assert srv.engine.n_compiles == base, "sharded swap recompiled"
+    assert srv.predictor_version == 1
+
+    # restart oracle: a fresh sharded server built with B from scratch
+    srv2 = sp.RetrievalServer(sys_.index, b, cfg, mesh=mesh)
+    direct = srv2.serve_batch(qt[16:32])
+    got = np.stack([r["ranked"] for r in res])
+    assert np.array_equal(got, direct["ranked"]), "swap != restart"
+    assert [r["class"] for r in res] == direct["classes"].tolist()
+    print("ALL_OK")
+""")
+
+
+def test_sharded_mesh_hot_swap():
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SWAP_SCRIPT],
+                       capture_output=True, text=True, cwd="/root/repo",
+                       timeout=600)
+    assert "ALL_OK" in r.stdout, r.stdout + r.stderr
