@@ -1,0 +1,80 @@
+"""Invariant analyzer: AST lint passes + opt-in runtime sanitizers.
+
+Static entry point (pure ``ast`` — imports no jax, executes no repo
+code)::
+
+    python -m repro.analysis src/
+
+Passes:
+
+* ``recompile`` — O(1)-compile hazards inside traced bodies
+  (repro.analysis.recompile)
+* ``locks``     — guarded attributes accessed outside their lock
+  (repro.analysis.locks, shared registry with the runtime mode)
+* ``pallas``    — kernel grid discipline: pl.when guards, SMEM
+  prefetch, pure index maps, no hardcoded block shapes
+  (repro.analysis.pallas)
+* ``hostsync``  — device↔host round trips in hot-path scopes
+  (repro.analysis.hostsync)
+
+Runtime sanitizers (import separately — they pull in jax):
+``repro.analysis.sanitizers`` — ``no_transfers`` (transfer-guard),
+``compile_sentinel`` (0-recompile assertions), ``lock_order``
+(instrumented locks + deadlock-cycle detection).
+
+Vetted exceptions live in ``analysis_baseline.json`` at the repo root;
+the CI job fails only on findings not covered there (see
+docs/INVARIANTS.md).
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis import hostsync, locks, pallas, recompile
+from repro.analysis.findings import Finding
+
+__all__ = ["ALL_PASSES", "analyze_paths", "analyze_source", "Finding"]
+
+ALL_PASSES = {
+    recompile.PASS_NAME: recompile,
+    locks.PASS_NAME: locks,
+    pallas.PASS_NAME: pallas,
+    hostsync.PASS_NAME: hostsync,
+}
+
+
+def analyze_source(source: str, path: str,
+                   passes=None) -> list[Finding]:
+    """Run the selected passes over one file's source text."""
+    tree = ast.parse(source, filename=path)
+    findings: list[Finding] = []
+    for name, mod in ALL_PASSES.items():
+        if passes is not None and name not in passes:
+            continue
+        findings.extend(mod.run(tree, path))
+    return findings
+
+
+def _iter_py_files(paths):
+    for p in paths:
+        if os.path.isfile(p):
+            yield p
+            continue
+        for root, dirs, files in os.walk(p):
+            dirs[:] = sorted(d for d in dirs
+                             if not d.startswith(".") and d != "__pycache__")
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    yield os.path.join(root, f)
+
+
+def analyze_paths(paths, passes=None) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in _iter_py_files(paths):
+        rel = os.path.relpath(path).replace(os.sep, "/")
+        with open(path, encoding="utf-8") as f:
+            src = f.read()
+        findings.extend(analyze_source(src, rel, passes=passes))
+    return findings

@@ -1,0 +1,434 @@
+"""Shared AST machinery for the invariant analyzer.
+
+Pure ``ast`` — no repro or jax imports — so ``python -m repro.analysis``
+lints the tree without executing any of it (and the CI leg needs no
+accelerator runtime).
+
+Two building blocks every pass shares:
+
+* **Traced-context discovery** (`find_traced_contexts`): which function
+  bodies execute under a JAX trace.  A function is traced when it is
+
+    - decorated with ``jit`` (bare, ``jax.jit``, or
+      ``functools.partial(jax.jit, static_argnames=...)``),
+    - passed by name (or as a lambda) to a trace entrypoint —
+      ``jax.jit(f)``, ``vmap``, ``shard_map``/``compat_shard_map``,
+      ``pl.pallas_call``, ``lax.scan``/``fori_loop``/``while_loop``/
+      ``cond`` — directly or through a ``functools.partial`` alias,
+    - bound by a *keyword-only* ``functools.partial`` (the repo's stage-
+      function convention: static config enters via partial keywords,
+      per-query operands stay positional — serving/engine.py), or
+    - lexically nested inside any of the above.
+
+  Functions reaching ``pl.pallas_call`` are marked ``kind="kernel"`` —
+  the Pallas pass owns those; the recompile pass skips them.
+
+* **Taint tracking** (`Taint`): which names inside a traced body hold
+  traced values.  Seeds are the positional parameters (minus
+  ``static_argnames`` and, by repo convention, all keyword-only
+  parameters); taint propagates through assignment, tuple unpacking,
+  ``for`` targets and calls, and stops at static metadata
+  (``.shape``/``.dtype``/``.ndim``/``.size``, ``len()``).  Results of
+  ``axis_index``/``program_id`` are traced regardless of their inputs.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+__all__ = ["TracedContext", "Taint", "find_traced_contexts", "tail",
+           "dotted", "qualname_map", "module_names", "walk_shallow",
+           "iter_calls"]
+
+#: attribute reads that yield static (trace-time) metadata of a traced value
+STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "sharding", "weak_type"}
+
+#: calls whose result is static even on traced operands
+STATIC_CALLS = {"len", "isinstance", "issubclass", "type", "getattr",
+                "hasattr", "callable", "id", "repr", "str", "format"}
+
+#: calls whose result is traced regardless of operand taint
+TRACED_PRODUCERS = {"axis_index", "program_id", "num_programs", "axis_size"}
+
+#: call tails that trace the function arguments passed to them
+TRACE_ENTRYPOINTS = {"jit", "vmap", "pmap", "grad", "value_and_grad",
+                     "shard_map", "compat_shard_map", "smap", "pallas_call",
+                     "fori_loop", "while_loop", "scan", "cond", "switch",
+                     "checkpoint", "remat", "custom_vjp", "custom_jvp",
+                     "named_call"}
+
+KERNEL_ENTRYPOINTS = {"pallas_call"}
+
+
+def tail(node: ast.AST) -> str | None:
+    """Last component of a call target: ``jax.jit`` -> ``"jit"``."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def dotted(node: ast.AST) -> str | None:
+    """Full dotted name of an attribute chain, or None if not a chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+_SCOPE_NODES = _FUNC_NODES + (ast.Lambda, ast.ClassDef)
+
+
+def walk_shallow(node: ast.AST, *, skip_root_scopes: bool = False):
+    """``ast.walk`` that does not descend into nested function/class
+    scopes (their bodies are separate contexts)."""
+    stack = [node]
+    first = True
+    while stack:
+        cur = stack.pop()
+        if not first and isinstance(cur, _SCOPE_NODES):
+            yield cur              # the def itself (decorators checked by
+            continue               # the caller), but not its body
+        if first and skip_root_scopes and isinstance(cur, _SCOPE_NODES):
+            pass
+        first = False
+        yield cur
+        stack.extend(ast.iter_child_nodes(cur))
+
+
+def iter_calls(node: ast.AST):
+    for n in ast.walk(node):
+        if isinstance(n, ast.Call):
+            yield n
+
+
+def qualname_map(tree: ast.Module) -> dict[ast.AST, str]:
+    """node -> dotted qualname (``Class.method.inner``) for every
+    function/class definition in the module."""
+    out: dict[ast.AST, str] = {}
+
+    def visit(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, _FUNC_NODES + (ast.ClassDef,)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                out[child] = q
+                visit(child, q)
+            else:
+                visit(child, prefix)
+
+    visit(tree, "")
+    return out
+
+
+def module_names(tree: ast.Module) -> set[str]:
+    """Top-level bindings of the module: imports, defs, assignments —
+    static from the perspective of an index-map lambda."""
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                names.add((a.asname or a.name).split(".")[0])
+        elif isinstance(node, _FUNC_NODES + (ast.ClassDef,)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        names.add(n.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                           ast.Name):
+            names.add(node.target.id)
+    return names
+
+
+# ------------------------------------------------------- traced contexts --
+
+@dataclasses.dataclass
+class TracedContext:
+    node: ast.AST                  # FunctionDef / Lambda
+    kind: str                      # "jit" | "kernel" | "nested"
+    static_names: frozenset[str]   # params that stay static under trace
+    reason: str                    # why this context was marked (messages)
+
+
+def _partial_target(call: ast.Call) -> tuple[ast.expr | None, bool,
+                                             set[str], int]:
+    """For a ``functools.partial(F, ...)`` call: (F, keyword_only, bound
+    keyword names, bound positional count).  (None, ...) when not a
+    partial call."""
+    if tail(call.func) != "partial":
+        return None, False, set(), 0
+    if not call.args:
+        return None, False, set(), 0
+    target = call.args[0]
+    kw_only = len(call.args) == 1
+    bound = {k.arg for k in call.keywords if k.arg is not None}
+    return target, kw_only, bound, len(call.args) - 1
+
+
+def _bound_positional_names(fn_node: ast.AST, n_pos: int) -> set[str]:
+    """First ``n_pos`` positional params of a def: bound at partial time
+    with host values, hence static under the trace."""
+    a = fn_node.args
+    params = list(getattr(a, "posonlyargs", [])) + list(a.args)
+    return {p.arg for p in params[:n_pos]}
+
+
+def _static_argnames(deco: ast.Call) -> set[str]:
+    """Parse ``static_argnames=("a", "b")`` from a jit decorator call."""
+    out: set[str] = set()
+    for k in deco.keywords:
+        if k.arg == "static_argnames":
+            v = k.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for e in v.elts:
+                    if isinstance(e, ast.Constant) and isinstance(e.value,
+                                                                  str):
+                        out.add(e.value)
+    return out
+
+
+def _own_static_names(fn: ast.AST, extra: set[str]) -> frozenset[str]:
+    """Keyword-only params (repo convention: static config) + explicitly
+    declared static argnames + partial-bound keywords."""
+    if isinstance(fn, ast.Lambda):
+        a = fn.args
+    else:
+        a = fn.args
+    kwonly = {p.arg for p in a.kwonlyargs}
+    return frozenset(kwonly | extra)
+
+
+def find_traced_contexts(tree: ast.Module) -> dict[ast.AST, TracedContext]:
+    """Map of function node -> TracedContext for every traced body."""
+    # module-level (and class-level) function defs by name, for resolving
+    # names passed to entrypoints; shadowing is rare enough to ignore
+    defs: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, _FUNC_NODES):
+            defs.setdefault(node.name, node)
+
+    # one-level partial aliasing: x = functools.partial(F, ...)
+    aliases: dict[str, tuple[ast.AST, set[str]]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            target_fn, _, bound, n_pos = _partial_target(node.value)
+            if target_fn is not None:
+                name = tail(target_fn)
+                if name in defs:
+                    statics = bound | _bound_positional_names(defs[name],
+                                                              n_pos)
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            aliases[t.id] = (defs[name], statics)
+
+    marked: dict[ast.AST, TracedContext] = {}
+
+    def mark(fn_node, kind, reason, extra_static=None):
+        if fn_node in marked:
+            if kind == "kernel" and marked[fn_node].kind != "kernel":
+                marked[fn_node].kind = "kernel"   # kernel marking wins
+            return
+        statics = _own_static_names(fn_node, set(extra_static or ()))
+        marked[fn_node] = TracedContext(fn_node, kind, statics, reason)
+
+    def mark_arg(arg, kind, reason):
+        """Resolve one entrypoint argument to a function def and mark."""
+        if isinstance(arg, ast.Lambda):
+            mark(arg, kind, reason)
+            return
+        if isinstance(arg, ast.Call):
+            target_fn, _, bound, n_pos = _partial_target(arg)
+            if target_fn is not None:
+                name = tail(target_fn)
+                if name in defs:
+                    mark(defs[name], kind, reason,
+                         extra_static=bound | _bound_positional_names(
+                             defs[name], n_pos))
+            return
+        name = tail(arg)
+        if name is None:
+            return
+        if name in aliases:
+            fn_node, bound = aliases[name]
+            mark(fn_node, kind, reason, extra_static=bound)
+        elif name in defs:
+            mark(defs[name], kind, reason)
+
+    # (a) jit-decorated functions
+    for node in ast.walk(tree):
+        if not isinstance(node, _FUNC_NODES):
+            continue
+        for deco in node.decorator_list:
+            if tail(deco) == "jit":
+                mark(node, "jit", "decorated @jit")
+            elif isinstance(deco, ast.Call):
+                if tail(deco.func) == "jit":
+                    mark(node, "jit", "decorated @jit(...)",
+                         extra_static=_static_argnames(deco))
+                elif (tail(deco.func) == "partial" and deco.args
+                        and tail(deco.args[0]) == "jit"):
+                    mark(node, "jit", "decorated @partial(jit, ...)",
+                         extra_static=_static_argnames(deco))
+
+    # (b) functions passed to trace entrypoints
+    for call in iter_calls(tree):
+        t = tail(call.func)
+        if t in TRACE_ENTRYPOINTS:
+            kind = "kernel" if t in KERNEL_ENTRYPOINTS else "jit"
+            for arg in call.args:
+                mark_arg(arg, kind, f"passed to {t}()")
+
+    # (c) keyword-only partial binding (the stage-function convention)
+    for call in iter_calls(tree):
+        target_fn, kw_only, bound, _ = _partial_target(call)
+        if target_fn is None or not kw_only:
+            continue
+        name = tail(target_fn)
+        if isinstance(target_fn, ast.Name) and name in defs:
+            mark(defs[name], "jit", "keyword-only functools.partial",
+                 extra_static=bound)
+
+    # (d) nested defs inherit the enclosing traced context
+    for fn_node in list(marked):
+        ctx = marked[fn_node]
+        for inner in ast.walk(fn_node):
+            if inner is fn_node or not isinstance(
+                    inner, _FUNC_NODES + (ast.Lambda,)):
+                continue
+            if inner not in marked:
+                statics = _own_static_names(inner, set())
+                marked[inner] = TracedContext(
+                    inner, "nested" if ctx.kind != "kernel" else "kernel",
+                    statics, f"nested in traced {getattr(fn_node, 'name', '<lambda>')}")
+    return marked
+
+
+# --------------------------------------------------------------- tainting --
+
+class Taint:
+    """Which names in one traced function body hold traced values.
+
+    ``seeds``: positional parameters minus static names; ``extra`` lets a
+    nested context inherit its parent's tainted closure names.  ``vararg``
+    is tracked separately: the bare name is a (static-length) tuple whose
+    truthiness is static, but its *elements* are traced.
+    """
+
+    def __init__(self, fn_node: ast.AST,
+                 static_names: frozenset[str] = frozenset(),
+                 extra: set[str] | None = None,
+                 producer_tails: set[str] | None = None,
+                 seed_params: bool = True):
+        a = fn_node.args
+        self.static = set(static_names)
+        self.vararg = a.vararg.arg if a.vararg else None
+        self.kwarg = a.kwarg.arg if a.kwarg else None
+        self.producers = (set(TRACED_PRODUCERS) if producer_tails is None
+                          else producer_tails)
+        self.tainted: set[str] = set(extra or ())
+        if seed_params:
+            for p in list(getattr(a, "posonlyargs", [])) + list(a.args):
+                if p.arg not in self.static and p.arg != "self":
+                    self.tainted.add(p.arg)
+        self.tainted -= self.static
+        self._propagate(fn_node)
+
+    # ---------------------------------------------------------- fixpoint --
+    def _propagate(self, root) -> None:
+        for _ in range(8):                   # small fixpoint: chains are
+            before = len(self.tainted)       # short in practice
+            for node in walk_shallow(root):
+                self._step(node)
+            if len(self.tainted) == before:
+                return
+
+    def _taint_target(self, target: ast.expr) -> None:
+        # only the *binding* names: a[i] = traced taints a, never the
+        # index i; storing through an attribute taints nothing we track
+        if isinstance(target, ast.Name):
+            if target.id not in self.static and target.id not in (
+                    self.vararg, self.kwarg):
+                self.tainted.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._taint_target(e)
+        elif isinstance(target, ast.Starred):
+            self._taint_target(target.value)
+        elif isinstance(target, ast.Subscript):
+            self._taint_target(target.value)
+
+    def _step(self, node: ast.AST) -> None:
+        if isinstance(node, ast.Assign):
+            if self.is_tainted(node.value):
+                for t in node.targets:
+                    self._taint_target(t)
+        elif isinstance(node, ast.AugAssign):
+            if self.is_tainted(node.value):
+                self._taint_target(node.target)
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            if self.is_tainted(node.value):
+                self._taint_target(node.target)
+        elif isinstance(node, ast.NamedExpr):
+            if self.is_tainted(node.value):
+                self._taint_target(node.target)
+        elif isinstance(node, ast.For):
+            if self.is_tainted(node.iter):
+                self._taint_target(node.target)
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for comp in node.generators:
+                if self.is_tainted(comp.iter):
+                    self._taint_target(comp.target)
+
+    # ------------------------------------------------------------ queries --
+    def is_tainted(self, e: ast.AST) -> bool:
+        """Does evaluating ``e`` yield (or require concretizing) a traced
+        value?"""
+        if e is None or isinstance(e, ast.Constant):
+            return False
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in STATIC_ATTRS:
+                return False               # static trace-time metadata
+            return self.is_tainted(e.value)
+        if isinstance(e, ast.Subscript):
+            if (isinstance(e.value, ast.Name)
+                    and e.value.id in (self.vararg, self.kwarg)):
+                return True                # elements of *args are traced
+            return self.is_tainted(e.value) or self.is_tainted(e.slice)
+        if isinstance(e, ast.Call):
+            t = tail(e.func)
+            if t in STATIC_CALLS:
+                return False
+            if t in self.producers:
+                return True
+            if any(self.is_tainted(a) for a in e.args):
+                return True
+            if any(self.is_tainted(k.value) for k in e.keywords):
+                return True
+            # method call on a traced object (acc.sum(), x.astype(...))
+            if isinstance(e.func, ast.Attribute):
+                return self.is_tainted(e.func.value)
+            return False
+        if isinstance(e, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+            return False                   # identity vs None/sentinel is
+                                           # static even on tracers
+        if isinstance(e, (ast.Lambda, ast.FunctionDef,
+                          ast.AsyncFunctionDef)):
+            return False                   # a function object is static
+        # generic: any tainted sub-expression taints the whole
+        return any(self.is_tainted(c) for c in ast.iter_child_nodes(e)
+                   if isinstance(c, (ast.expr, ast.comprehension,
+                                     ast.keyword)))

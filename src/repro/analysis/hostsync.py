@@ -1,0 +1,123 @@
+"""Host-sync detector: no device↔host round trips in the hot path.
+
+The latency story (per-query rho/k inside the effectiveness envelope)
+assumes the serve loop stays on device between the admission boundary
+and the ranked-list boundary.  A stray ``block_until_ready``,
+``np.asarray``/``np.array`` on a device array, ``.item()``, or
+``jax.device_get`` in the hot path serializes the pipeline on every
+batch — invisible in correctness tests, ruinous at p99.
+
+Static side (this pass): flag host-sync calls in the hot-path scopes
+below.  Vetted exceptions — the engine's ``timed`` fence (timing
+*requires* a sync) and the ranked-list boundary ``np.asarray`` — live in
+the committed baseline with notes, so anything new fails CI.
+
+Runtime side: ``repro.analysis.sanitizers.no_transfers`` arms
+``jax.transfer_guard("disallow")`` so *implicit* transfers the AST can't
+see (a numpy operand silently entering a jitted call) fail tier-1 tests.
+
+Scope: ``serving/engine.py`` (everything except construction/warmup,
+which compile and may sync), ``kernels/*`` (all of it), and the exec
+loop of ``serving/service.py``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+PASS_NAME = "hostsync"
+
+#: (path suffix, allowed-scope predicate config) — fn_allowlist of None
+#: means every function in the file is hot; otherwise only the listed
+#: function names are checked.
+HOT_PATHS: tuple[tuple[str, tuple[str, ...] | None, tuple[str, ...]], ...] = (
+    # (suffix, only_these_functions, exempt_functions)
+    ("serving/engine.py", None,
+     ("__init__", "warmup", "warmup_shape", "padded_batch")),
+    ("serving/service.py", ("_exec_loop", "_run_batch"), ()),
+    ("kernels/", None, ()),
+)
+
+_SYNC_TAILS = {"block_until_ready", "device_get", "copy_to_host_async"}
+_NP_ROOTS = {"np", "numpy", "onp"}
+_NP_FUNCS = {"asarray", "array", "ascontiguousarray", "asanyarray"}
+_ITEM_METHODS = {"item", "tolist"}
+
+
+def _snippet(node) -> str:
+    try:
+        s = ast.unparse(node)
+    except Exception:                    # pragma: no cover - defensive
+        s = f"<{type(node).__name__}>"
+    return s if len(s) <= 120 else s[:117] + "..."
+
+
+def _hot_scope(path: str):
+    p = path.replace("\\", "/")
+    for suffix, only, exempt in HOT_PATHS:
+        if suffix.endswith("/"):
+            if ("/" + suffix) in ("/" + p) or p.startswith(suffix):
+                return only, exempt
+        elif p.endswith(suffix):
+            return only, exempt
+    return None
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    scope_cfg = _hot_scope(path)
+    if scope_cfg is None:
+        return []
+    only, exempt = scope_cfg
+    quals = astutil.qualname_map(tree)
+    findings: list[Finding] = []
+
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if only is not None and fn.name not in only:
+            continue
+        if fn.name in exempt:
+            continue
+        scope = quals.get(fn, fn.name)
+        for node in astutil.walk_shallow(fn, skip_root_scopes=True):
+            # nested defs are visited on their own walk; here we check
+            # only this function's direct statements
+            if not isinstance(node, ast.Call):
+                continue
+            t = astutil.tail(node.func)
+            d = astutil.dotted(node.func) or ""
+            if t in _SYNC_TAILS:
+                findings.append(Finding(
+                    invariant="hostsync/blocking-sync",
+                    file=path, line=node.lineno, scope=scope,
+                    code=_snippet(node),
+                    message=(f"`{t}` in a hot-path scope forces a full "
+                             "device sync per batch."),
+                    hint=("let dispatch stay async; sync only at the "
+                          "serve boundary or inside an explicitly vetted "
+                          "timing fence (baseline it with a note)")))
+            elif (t in _NP_FUNCS and d.split(".")[0] in _NP_ROOTS):
+                findings.append(Finding(
+                    invariant="hostsync/device-to-host",
+                    file=path, line=node.lineno, scope=scope,
+                    code=_snippet(node),
+                    message=("numpy conversion in a hot-path scope is a "
+                             "device-to-host copy when the operand lives "
+                             "on device."),
+                    hint=("keep intermediate results as jax arrays; "
+                          "convert once at the ranked-list boundary")))
+            elif (t in _ITEM_METHODS
+                  and isinstance(node.func, ast.Attribute)
+                  and not isinstance(node.func.value, ast.Constant)):
+                findings.append(Finding(
+                    invariant="hostsync/device-to-host",
+                    file=path, line=node.lineno, scope=scope,
+                    code=_snippet(node),
+                    message=(f"`.{t}()` in a hot-path scope pulls a "
+                             "scalar/array to host synchronously."),
+                    hint=("carry the value as a 0-d jax array, or move "
+                          "the readout past the serve boundary")))
+    return findings

@@ -1,0 +1,140 @@
+"""Lock-discipline checker: guarded attributes stay under their lock.
+
+The serving path runs four concurrent threads (svc-admit, svc-exec,
+svc-warmup, plus the online controller), coordinated by a handful of
+per-object locks.  ``LOCK_REGISTRY`` below is the declarative contract:
+for each class, which lock guards which attributes.  The AST pass flags
+any ``self.<attr>`` read or write of a guarded attribute outside a
+``with self.<lock>:`` block.
+
+Escape hatches keep the contract honest rather than noisy:
+
+* ``__init__`` is exempt (the object is not yet shared);
+* ``assume_held`` methods are internal helpers documented as
+  caller-holds-the-lock (e.g. ``AdmissionQueue._form``);
+* vetted lock-free patterns — like ``RetrievalServer.predict_classes``'s
+  single atomic tuple read of ``_live`` — are carried as baseline
+  entries with a note, not silenced in code.
+
+The runtime complement (instrumented locks + lock-order graph) lives in
+``repro.analysis.sanitizers``; it shares this registry so the static and
+dynamic checkers can never drift apart.
+
+Note: the issue's ``TelemetryRing._lock`` refers to the telemetry ring
+buffer, whose class is ``TelemetryBuffer`` (online/telemetry.py).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+PASS_NAME = "locks"
+
+
+@dataclasses.dataclass(frozen=True)
+class LockSpec:
+    cls: str                     # class name the contract applies to
+    lock: str                    # lock attribute on self
+    guarded: tuple[str, ...]     # attributes that require the lock
+    assume_held: tuple[str, ...] = ()   # methods with caller-holds-lock
+
+
+LOCK_REGISTRY: tuple[LockSpec, ...] = (
+    # engine: AOT executable cache + compile counter
+    LockSpec("ServingEngine", "_cache_lock", ("_cache", "n_compiles")),
+    LockSpec("ShardedServingEngine", "_cache_lock",
+             ("_cache", "n_compiles")),
+    # server: live predictor tuple + its version counter
+    LockSpec("RetrievalServer", "_swap_lock",
+             ("_live", "predictor_version")),
+    # admission: pending heap / formed batches / shape census
+    LockSpec("AdmissionQueue", "_lock",
+             ("_heap", "_ready", "shape_counts", "n_submitted"),
+             assume_held=("_form", "_oldest")),
+    # warmup policy: shape census + compile bookkeeping
+    LockSpec("WarmupPolicy", "_lock",
+             ("counts", "_scheduled", "compiled", "failed")),
+    # service: batch records + outstanding-request count
+    LockSpec("RetrievalService", "_lock", ("_records", "_outstanding")),
+    # online loop: telemetry ring and predictor version store
+    LockSpec("TelemetryBuffer", "_lock", ("_ring", "n_seen", "n_dropped")),
+    LockSpec("PredictorStore", "_lock",
+             ("_versions", "_current", "_next_version")),
+)
+
+
+def _is_self_attr(node: ast.AST, attr: str) -> bool:
+    return (isinstance(node, ast.Attribute) and node.attr == attr
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self")
+
+
+def _with_locks(node: ast.With) -> set[str]:
+    """Lock attribute names acquired by a ``with`` statement."""
+    out = set()
+    for item in node.items:
+        d = astutil.dotted(item.context_expr)
+        if d and d.startswith("self."):
+            out.add(d.split(".", 1)[1])
+    return out
+
+
+def _check_method(method, spec: LockSpec, path: str, scope: str,
+                  findings: list[Finding]) -> None:
+    def visit(node: ast.AST, held: bool) -> None:
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            now_held = held or spec.lock in _with_locks(node)
+            for item in node.items:
+                visit(item.context_expr, held)
+            for child in node.body:
+                visit(child, now_held)
+            return
+        if not held:
+            for g in spec.guarded:
+                if _is_self_attr(node, g):
+                    action = ("write" if isinstance(
+                        node.ctx, (ast.Store, ast.Del)) else "read")
+                    findings.append(Finding(
+                        invariant="locks/unguarded",
+                        file=path, line=node.lineno, scope=scope,
+                        code=f"self.{g} ({action})",
+                        message=(f"`{spec.cls}.{g}` is guarded by "
+                                 f"`self.{spec.lock}` but {action} "
+                                 "outside a `with` block."),
+                        hint=(f"wrap in `with self.{spec.lock}:` (or add "
+                              "the method to the registry's assume_held "
+                              "and document the caller contract)")))
+                    break
+        for child in ast.iter_child_nodes(node):
+            visit(child, held)
+
+    for stmt in method.body:
+        visit(stmt, False)
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    quals = astutil.qualname_map(tree)
+    specs: dict[str, list[LockSpec]] = {}
+    for s in LOCK_REGISTRY:
+        specs.setdefault(s.cls, []).append(s)
+
+    findings: list[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef) or node.name not in specs:
+            continue
+        for spec in specs[node.name]:
+            for method in node.body:
+                if not isinstance(method, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef)):
+                    continue
+                if method.name == "__init__":
+                    continue
+                if method.name in spec.assume_held:
+                    continue
+                _check_method(method, spec, path,
+                              quals.get(method, method.name), findings)
+    return findings

@@ -1,0 +1,281 @@
+"""Pallas kernel lint: grid discipline for the accelerator path.
+
+The kernel path (kernels/impact_scan, topk, flash_attention,
+embedding_bag) keeps the O(1)-compile and correctness story only under
+four structural rules, each of which has bitten a PR before (PR 4's
+"rho was a silent no-op on the kernel path" was a grid-guard bug):
+
+* ``pallas/python-branch-in-kernel`` — Python ``if``/``while`` on a
+  value derived from refs or ``pl.program_id`` inside a kernel body.
+  Grid-cell skipping must go through ``pl.when`` (the compiler predicate)
+  — a Python branch either crashes on the tracer or silently bakes one
+  arm into every cell.
+* ``pallas/scalar-read-without-prefetch`` — a kernel indexing an operand
+  ref with a ``program_id``-derived index when that operand is not a
+  scalar-prefetch ref.  Per-grid-cell scalar lookups (rho_vec, segment
+  bounds, bag ids) must ride SMEM via
+  ``PrefetchScalarGridSpec(num_scalar_prefetch=...)``; HBM refs are
+  blocked by the BlockSpec, not indexed ad hoc.
+* ``pallas/traced-index-map`` — a BlockSpec index map closing over a
+  traced value of the enclosing function.  Index maps run at trace time
+  over grid indices (plus prefetch refs passed as lambda params); a
+  traced free variable either fails to lower or silently specializes.
+* ``pallas/hardcoded-block-shape`` — integer literals > 1 in BlockSpec
+  block shapes or grid tuples.  Block geometry must come from the
+  clamped ``kernel_block_p``/``kernel_block_d`` config (see
+  ``posting_blocks``'s clamp + ragged-tail padding) so the documented
+  divisibility constraints hold at every problem size; a hardcoded 512
+  breaks the test-scale grids and the pad discipline.
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+PASS_NAME = "pallas"
+
+_BUILTINS = set(dir(builtins))
+
+
+def _snippet(node) -> str:
+    try:
+        s = ast.unparse(node)
+    except Exception:                    # pragma: no cover - defensive
+        s = f"<{type(node).__name__}>"
+    return s if len(s) <= 120 else s[:117] + "..."
+
+
+def _const_int(node) -> int | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _resolve_kernel(call: ast.Call, defs: dict[str, ast.AST],
+                    local_partials: dict[str, tuple[str, set[str]]]):
+    """pallas_call first arg -> (kernel def node or None)."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if isinstance(arg, ast.Call) and astutil.tail(arg.func) == "partial":
+        if len(arg.args) >= 1:
+            name = astutil.tail(arg.args[0])
+            return defs.get(name)
+        return None
+    name = astutil.tail(arg)
+    if name in local_partials:
+        return defs.get(local_partials[name][0])
+    return defs.get(name)
+
+
+def _num_prefetch(call: ast.Call, fn: ast.AST) -> int:
+    """num_scalar_prefetch of a pallas_call site (0 for plain grids)."""
+    spec_call = None
+    for kw in call.keywords:
+        if kw.arg != "grid_spec":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Call):
+            spec_call = v
+        elif isinstance(v, ast.Name):
+            # resolve a local `grid_spec = pltpu.PrefetchScalarGridSpec(...)`
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Call)
+                        and any(isinstance(t, ast.Name) and t.id == v.id
+                                for t in node.targets)):
+                    spec_call = node.value
+    if spec_call is None:
+        return 0
+    if astutil.tail(spec_call.func) != "PrefetchScalarGridSpec":
+        return 0
+    for kw in spec_call.keywords:
+        if kw.arg == "num_scalar_prefetch":
+            n = _const_int(kw.value)
+            return n if n is not None else 0
+    return 0
+
+
+def _kernel_params(kernel_def) -> list[str]:
+    """Positional (ref) parameter names, in order."""
+    a = kernel_def.args
+    return [p.arg for p in list(getattr(a, "posonlyargs", [])) + list(a.args)]
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    quals = astutil.qualname_map(tree)
+    contexts = astutil.find_traced_contexts(tree)
+    mod_names = astutil.module_names(tree)
+    findings: list[Finding] = []
+
+    defs: dict[str, ast.AST] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.setdefault(node.name, node)
+
+    local_partials: dict[str, tuple[str, set[str]]] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and isinstance(node.value, ast.Call)
+                and astutil.tail(node.value.func) == "partial"
+                and node.value.args):
+            name = astutil.tail(node.value.args[0])
+            if name is not None:
+                bound = {k.arg for k in node.value.keywords if k.arg}
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        local_partials[t.id] = (name, bound)
+
+    def scope_of(node):
+        return quals.get(node, getattr(node, "name", "<lambda>"))
+
+    # ---------------- PL1: python branch in kernel body -------------------
+    for fn_node, ctx in contexts.items():
+        if ctx.kind != "kernel":
+            continue
+        extra: set[str] = set()
+        for outer, octx in contexts.items():
+            if outer is not fn_node and any(n is fn_node
+                                            for n in ast.walk(outer)):
+                t = astutil.Taint(outer, octx.static_names)
+                extra |= t.tainted
+        taint = astutil.Taint(fn_node, ctx.static_names, extra=extra)
+        for node in astutil.walk_shallow(fn_node):
+                test = None
+                if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                    test = node.test
+                if test is not None and taint.is_tainted(test):
+                    findings.append(Finding(
+                        invariant="pallas/python-branch-in-kernel",
+                        file=path, line=node.lineno,
+                        scope=scope_of(fn_node), code=_snippet(test),
+                        message=("Python branch on a ref/program_id-"
+                                 "derived value inside a Pallas kernel "
+                                 "body — grid-cell work must be skipped "
+                                 "with a compiler predicate."),
+                        hint=("guard the cell with `@pl.when(cond)` (or "
+                              "jnp.where for value selection); only "
+                              "static keyword-only params may drive "
+                              "Python control flow")))
+
+    # per enclosing function: pallas_call sites + their BlockSpecs ---------
+    for fn in list(defs.values()):
+        sites = [c for c in astutil.iter_calls(fn)
+                 if astutil.tail(c.func) == "pallas_call"]
+        if not sites:
+            continue
+
+        # ------------- PL2: scalar reads need prefetch --------------------
+        for call in sites:
+            kernel_def = _resolve_kernel(call, defs, local_partials)
+            if kernel_def is None:
+                continue
+            n_pre = _num_prefetch(call, fn)
+            params = _kernel_params(kernel_def)
+            hbm_refs = set(params[n_pre:])
+            kctx = contexts.get(kernel_def)
+            statics = kctx.static_names if kctx else frozenset()
+            # taint *only* by program_id: which names are grid indices
+            pid = astutil.Taint(kernel_def, statics, seed_params=False,
+                                producer_tails={"program_id"})
+            for node in ast.walk(kernel_def):
+                if not isinstance(node, ast.Subscript):
+                    continue
+                if not isinstance(node.ctx, ast.Load):
+                    continue           # stores at traced offsets are
+                                       # ordinary dynamic writes
+                if not (isinstance(node.value, ast.Name)
+                        and node.value.id in hbm_refs):
+                    continue
+                if pid.is_tainted(node.slice):
+                    findings.append(Finding(
+                        invariant="pallas/scalar-read-without-prefetch",
+                        file=path, line=node.lineno,
+                        scope=scope_of(kernel_def), code=_snippet(node),
+                        message=("kernel indexes operand ref "
+                                 f"`{node.value.id}` with a program_id-"
+                                 "derived index, but the operand is not "
+                                 "a scalar-prefetch (SMEM) ref."),
+                        hint=("move the operand into "
+                              "PrefetchScalarGridSpec(num_scalar_"
+                              "prefetch=...) so per-cell scalars ride "
+                              "SMEM, or block it via its BlockSpec "
+                              "index map")))
+
+        # ------------- PL3/PL4: BlockSpec hygiene -------------------------
+        ctx = contexts.get(fn)
+        taint = (astutil.Taint(fn, ctx.static_names) if ctx is not None
+                 else None)
+        for call in astutil.iter_calls(fn):
+            t = astutil.tail(call.func)
+            if t == "BlockSpec":
+                shape = call.args[0] if call.args else None
+                imap = call.args[1] if len(call.args) > 1 else None
+                for kw in call.keywords:
+                    if kw.arg == "index_map":
+                        imap = kw.value
+                if isinstance(shape, (ast.Tuple, ast.List)):
+                    for e in shape.elts:
+                        v = _const_int(e)
+                        if v is not None and v > 1:
+                            findings.append(Finding(
+                                invariant="pallas/hardcoded-block-shape",
+                                file=path, line=e.lineno,
+                                scope=scope_of(fn), code=_snippet(call),
+                                message=(f"literal block dim {v} in a "
+                                         "BlockSpec shape — block "
+                                         "geometry must come from the "
+                                         "clamped kernel_block_p/"
+                                         "kernel_block_d config."),
+                                hint=("derive the dim from cfg (clamped "
+                                      "to the problem size, ragged tail "
+                                      "padded) so divisibility holds at "
+                                      "every scale")))
+                if isinstance(imap, ast.Lambda):
+                    params = {p.arg for p in imap.args.args}
+                    if imap.args.vararg:
+                        params.add(imap.args.vararg.arg)
+                    for node in ast.walk(imap.body):
+                        if not isinstance(node, ast.Name):
+                            continue
+                        n = node.id
+                        if (n in params or n in mod_names
+                                or n in _BUILTINS):
+                            continue
+                        if taint is not None and taint.is_tainted(node):
+                            findings.append(Finding(
+                                invariant="pallas/traced-index-map",
+                                file=path, line=imap.lineno,
+                                scope=scope_of(fn), code=_snippet(imap),
+                                message=(f"BlockSpec index map closes "
+                                         f"over traced value `{n}` — "
+                                         "index maps must be pure in "
+                                         "grid indices, statics, and "
+                                         "prefetch refs."),
+                                hint=("pass the value as a scalar-"
+                                      "prefetch operand (it arrives as "
+                                      "a lambda param after the grid "
+                                      "indices) or hoist it to a static")))
+            elif t in ("PrefetchScalarGridSpec", "GridSpec", "pallas_call"):
+                for kw in call.keywords:
+                    if kw.arg != "grid":
+                        continue
+                    if isinstance(kw.value, (ast.Tuple, ast.List)):
+                        for e in kw.value.elts:
+                            v = _const_int(e)
+                            if v is not None and v > 1:
+                                findings.append(Finding(
+                                    invariant="pallas/hardcoded-block-shape",
+                                    file=path, line=e.lineno,
+                                    scope=scope_of(fn),
+                                    code=_snippet(kw.value),
+                                    message=(f"literal grid extent {v} — "
+                                             "grids must be derived from "
+                                             "the padded problem size."),
+                                    hint=("compute the grid with ceil-div "
+                                          "over the clamped block size")))
+    return findings

@@ -1,0 +1,182 @@
+"""Recompile-hazard lint: the O(1)-compile invariant, statically.
+
+The serving engine compiles once per padded shape and never again
+(ServingEngine._compiled); predictor hot-swaps reuse executables because
+params are *operands*, not constants.  Anything that concretizes a traced
+value inside a traced body punches a hole in that: Python ``if``/``while``
+on a tracer raises at best and silently specializes at worst,
+``int()/float()/bool()/.item()`` force a device sync and bake the value
+into the executable, ``np.asarray`` pulls the array to host, and deriving
+cache keys from traced data defeats shape-keyed caching.
+
+Checks (invariant names):
+
+* ``recompile/traced-branch``     — ``if``/``while``/``assert``/ternary /
+  ``and``/``or`` on a tainted expression
+* ``recompile/traced-coercion``   — ``int()/float()/bool()`` or
+  ``.item()/.tolist()`` on a tainted expression
+* ``recompile/host-round-trip``   — ``np.asarray``/``np.array`` on a
+  tainted operand inside a traced body
+* ``recompile/traced-cache-key``  — a tainted expression used as a dict
+  subscript/key (executable-cache poisoning)
+* ``recompile/traced-iteration``  — Python ``for`` over a tainted iterable
+  (unrolls the loop into the trace; use ``lax.scan``/``fori_loop``)
+
+Kernel bodies (``pallas_call`` targets) are owned by the Pallas pass and
+skipped here to avoid double reporting.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import astutil
+from repro.analysis.findings import Finding
+
+PASS_NAME = "recompile"
+
+_COERCIONS = {"int", "float", "bool", "complex"}
+_ITEM_METHODS = {"item", "tolist", "to_py"}
+_NP_ROOTS = {"np", "numpy", "onp"}
+_NP_FUNCS = {"asarray", "array", "ascontiguousarray", "asanyarray"}
+
+
+def _snippet(node) -> str:
+    try:
+        s = ast.unparse(node)
+    except Exception:                    # pragma: no cover - defensive
+        s = f"<{type(node).__name__}>"
+    return s if len(s) <= 120 else s[:117] + "..."
+
+
+def _cond_of(node):
+    if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+        return node.test
+    if isinstance(node, ast.Assert):
+        return node.test
+    return None
+
+
+_CONTAINER_CALLS = {"list", "tuple", "dict", "set", "sorted", "reversed",
+                    "zip", "enumerate", "range", "items", "keys", "values"}
+
+
+def _is_container(e: ast.AST) -> bool:
+    """Expression that is a Python container / iterator of static length
+    (its elements may be traced; iterating it is a static unroll)."""
+    return (isinstance(e, (ast.List, ast.Tuple, ast.Set, ast.Dict,
+                           ast.ListComp, ast.SetComp, ast.DictComp,
+                           ast.GeneratorExp))
+            or (isinstance(e, ast.Call)
+                and astutil.tail(e.func) in _CONTAINER_CALLS))
+
+
+def run(tree: ast.Module, path: str) -> list[Finding]:
+    quals = astutil.qualname_map(tree)
+    contexts = astutil.find_traced_contexts(tree)
+    findings: list[Finding] = []
+
+    for fn_node, ctx in contexts.items():
+        if ctx.kind == "kernel":
+            continue                     # the Pallas pass owns kernels
+        scope = quals.get(fn_node, getattr(fn_node, "name", "<lambda>"))
+
+        # nested contexts inherit tainted closure names from the parent
+        extra: set[str] = set()
+        for outer, octx in contexts.items():
+            if outer is fn_node or octx.kind == "kernel":
+                continue
+            if any(n is fn_node for n in ast.walk(outer)):
+                t = astutil.Taint(outer, octx.static_names)
+                extra |= t.tainted
+        taint = astutil.Taint(fn_node, ctx.static_names, extra=extra)
+
+        def emit(node, invariant, message, hint, expr=None):
+            findings.append(Finding(
+                invariant=invariant, file=path, line=node.lineno,
+                scope=scope, code=_snippet(expr if expr is not None
+                                           else node),
+                message=message, hint=hint))
+
+        # names bound to Python containers: iterating them is a
+        # static-length unroll by construction (feats = [...]; for f in
+        # feats), not data-dependent iteration over a traced array
+        containers: set[str] = set()
+        for node in astutil.walk_shallow(fn_node):
+            if isinstance(node, ast.Assign) and _is_container(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        containers.add(t.id)
+
+        for node in astutil.walk_shallow(fn_node):
+                cond = _cond_of(node)
+                if cond is not None and taint.is_tainted(cond):
+                    kind = type(node).__name__.lower()
+                    emit(node, "recompile/traced-branch",
+                         f"Python `{kind}` on a traced value inside a "
+                         f"traced body ({ctx.reason}) — concretizes the "
+                         "tracer and breaks the one-compile-per-shape "
+                         "cache.",
+                         "use jnp.where / lax.cond / lax.select, or hoist "
+                         "the decision to a static (keyword-only) "
+                         "parameter", expr=cond)
+                elif (isinstance(node, ast.For)
+                      and taint.is_tainted(node.iter)
+                      and not _is_container(node.iter)
+                      and not (isinstance(node.iter, ast.Name)
+                               and node.iter.id in containers)):
+                    emit(node, "recompile/traced-iteration",
+                         "Python `for` over a traced iterable unrolls "
+                         "data-dependent work into the trace.",
+                         "use lax.scan / lax.fori_loop with a static trip "
+                         "count", expr=node.iter)
+                elif isinstance(node, ast.Call):
+                    t = astutil.tail(node.func)
+                    if (t in _COERCIONS and node.args
+                            and taint.is_tainted(node.args[0])):
+                        emit(node, "recompile/traced-coercion",
+                             f"`{t}()` on a traced value forces a host "
+                             "sync and bakes the value into the "
+                             "executable.",
+                             "keep the value traced (jnp ops) or derive "
+                             "it from static shape metadata")
+                    elif (t in _ITEM_METHODS
+                          and isinstance(node.func, ast.Attribute)
+                          and taint.is_tainted(node.func.value)):
+                        emit(node, "recompile/traced-coercion",
+                             f"`.{t}()` on a traced value forces a "
+                             "device-to-host round trip inside the trace.",
+                             "return the traced array and concretize at "
+                             "the serving boundary")
+                    elif (t in _NP_FUNCS
+                          and isinstance(node.func, ast.Attribute)
+                          and astutil.dotted(node.func) is not None
+                          and astutil.dotted(node.func).split(".")[0]
+                          in _NP_ROOTS
+                          and node.args
+                          and taint.is_tainted(node.args[0])):
+                        emit(node, "recompile/host-round-trip",
+                             "numpy conversion of a traced operand pulls "
+                             "it to host mid-trace.",
+                             "stay in jnp; convert only at the "
+                             "serve()/np.asarray boundary")
+                elif isinstance(node, ast.Subscript) and isinstance(
+                        node.ctx, ast.Store):
+                    # d[key] = ... with a traced key: cache poisoning
+                    if (taint.is_tainted(node.slice)
+                            and not taint.is_tainted(node.value)):
+                        emit(node, "recompile/traced-cache-key",
+                             "traced value used as a container key — a "
+                             "per-value key defeats shape-keyed caching "
+                             "and forces concretization.",
+                             "key caches on static shape/dtype metadata "
+                             "only (see ServingEngine._compiled)",
+                             expr=node)
+                elif isinstance(node, ast.Dict):
+                    for k in node.keys:
+                        if k is not None and taint.is_tainted(k):
+                            emit(node, "recompile/traced-cache-key",
+                                 "traced value used as a dict key.",
+                                 "key on static metadata (shape, dtype, "
+                                 "name), not traced data", expr=k)
+    return findings

@@ -1,0 +1,261 @@
+"""Opt-in runtime sanitizers: the dynamic half of the invariant analyzer.
+
+The AST passes (``python -m repro.analysis``) catch what is visible in
+the source; these context managers catch what is not — an *implicit*
+host transfer from a numpy operand silently entering a jitted call, a
+recompile triggered by a shape that slipped past padding, a lock
+acquisition order that only deadlocks under the right thread
+interleaving.  They are designed for tier-1 tests: cheap to arm, loud on
+violation, and inert in production code paths (nothing here is imported
+by the serving modules).
+
+This module imports jax; the lint driver does not import it.
+
+* ``no_transfers()`` — arms ``jax.transfer_guard``.  The default
+  ``"disallow"`` level fails *implicit* transfers only: explicit
+  conversions at the serve boundary (``jnp.asarray(qt)``,
+  ``np.asarray(ranked)``) stay legal, while a numpy array leaking
+  straight into a jitted call — the silent per-batch h2d copy the
+  hostsync pass cannot see — raises.
+* ``compile_sentinel(*probes, allowed=0)`` — snapshots compile counters
+  before the block and asserts at most ``allowed`` new compiles after.
+  Probes: a ``ServingEngine`` (reads ``n_compiles``), a jitted function
+  (reads ``_cache_size()``), or any zero-arg callable returning an int.
+* ``hot_path(*probes)`` — both of the above: the invariant the serving
+  path claims (no transfers, zero recompiles) as one context manager.
+* ``lock_order(*objects)`` — wraps the locks the static registry
+  (``repro.analysis.locks.LOCK_REGISTRY``) declares on the given
+  objects with instrumented proxies, builds the held→acquiring
+  lock-order graph across all threads, and raises ``LockOrderError``
+  on exit if the graph has a cycle — the deadlock *potential* between
+  swap-lock / cache-lock / admission-lock, caught even when the
+  schedule happened not to deadlock this run.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+from repro.analysis.locks import LOCK_REGISTRY
+
+__all__ = ["RecompileError", "LockOrderError", "no_transfers",
+           "compile_sentinel", "hot_path", "lock_order",
+           "LockOrderGraph", "InstrumentedLock"]
+
+
+class RecompileError(AssertionError):
+    """A guarded block compiled more executables than allowed."""
+
+
+class LockOrderError(AssertionError):
+    """Instrumented locks were acquired in cyclically inconsistent
+    order (deadlock potential)."""
+
+
+# ---------------------------------------------------------- transfers --
+
+@contextlib.contextmanager
+def no_transfers(level: str = "disallow"):
+    """Fail implicit device↔host transfers inside the block.
+
+    ``level`` is any ``jax.transfer_guard`` level; ``"disallow"``
+    (default) permits explicit conversions, ``"disallow_explicit"``-style
+    hardening can be passed through if a test wants it.
+    """
+    with jax.transfer_guard(level):
+        yield
+
+
+# ----------------------------------------------------- compile sentinel --
+
+def _as_probe(p):
+    """Normalize a probe to a zero-arg callable returning an int."""
+    if hasattr(p, "n_compiles"):
+        return lambda: p.n_compiles
+    cache_size = getattr(p, "_cache_size", None)
+    if callable(cache_size):
+        return cache_size
+    if callable(p):
+        return p
+    raise TypeError(
+        f"compile sentinel probe {p!r} is neither an engine "
+        "(n_compiles), a jitted function (_cache_size), nor a callable")
+
+
+class CompileRecord:
+    """Filled in when the sentinel block exits."""
+
+    def __init__(self):
+        self.new_compiles = None
+
+
+@contextlib.contextmanager
+def compile_sentinel(*probes, allowed: int = 0):
+    """Assert that at most ``allowed`` new executables are compiled
+    across the block, summed over all probes."""
+    fns = [_as_probe(p) for p in probes]
+    if not fns:
+        raise TypeError("compile_sentinel needs at least one probe")
+    start = [f() for f in fns]
+    rec = CompileRecord()
+    yield rec                      # body exceptions propagate unchecked
+    rec.new_compiles = sum(f() - s for f, s in zip(fns, start))
+    if rec.new_compiles > allowed:
+        raise RecompileError(
+            f"{rec.new_compiles} new compile(s) inside a "
+            f"compile_sentinel block (allowed {allowed}) — a shape, "
+            "static arg, or traced-value concretization defeated the "
+            "executable cache")
+
+
+@contextlib.contextmanager
+def hot_path(*probes, allowed: int = 0, level: str = "disallow"):
+    """The serving-path invariant in one guard: no implicit transfers
+    and no recompiles."""
+    with no_transfers(level), compile_sentinel(
+            *probes, allowed=allowed) as rec:
+        yield rec
+
+
+# --------------------------------------------------------- lock order --
+
+class LockOrderGraph:
+    """held-lock → acquiring-lock edges, accumulated across threads."""
+
+    def __init__(self):
+        self._edges: dict[str, set[str]] = {}
+        self._mu = threading.Lock()
+        self._tls = threading.local()
+
+    def _held(self) -> list[str]:
+        held = getattr(self._tls, "held", None)
+        if held is None:
+            held = self._tls.held = []
+        return held
+
+    def note_acquire(self, name: str) -> None:
+        held = self._held()
+        with self._mu:
+            for h in held:
+                if h != name:
+                    self._edges.setdefault(h, set()).add(name)
+        held.append(name)
+
+    def note_release(self, name: str) -> None:
+        held = self._held()
+        if name in held:
+            held.reverse()
+            held.remove(name)      # drop the most recent acquisition
+            held.reverse()
+
+    def cycles(self) -> list[list[str]]:
+        """All distinct lock-order cycles (each as a closed name path)."""
+        out, seen = [], set()
+
+        def dfs(node, path, on_path):
+            for nxt in sorted(self._edges.get(node, ())):
+                if nxt in on_path:
+                    cyc = path[path.index(nxt):] + [nxt]
+                    lo = min(range(len(cyc) - 1),
+                             key=lambda i: cyc[i])       # canonical form
+                    canon = tuple(cyc[lo:-1] + cyc[:lo])
+                    if canon not in seen:
+                        seen.add(canon)
+                        out.append(cyc)
+                    continue
+                dfs(nxt, path + [nxt], on_path | {nxt})
+
+        for start in sorted(self._edges):
+            dfs(start, [start], {start})
+        return out
+
+    def check(self) -> None:
+        cyc = self.cycles()
+        if cyc:
+            lines = " ; ".join(" -> ".join(c) for c in cyc)
+            raise LockOrderError(
+                f"inconsistent lock acquisition order (deadlock "
+                f"potential): {lines}. Fix the ordering or release the "
+                "outer lock before taking the inner one.")
+
+
+class InstrumentedLock:
+    """Drop-in lock proxy that reports acquisitions to a graph."""
+
+    def __init__(self, inner, name: str, graph: LockOrderGraph):
+        self._inner = inner
+        self._name = name
+        self._graph = graph
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._inner.acquire(blocking, timeout)
+        if ok:
+            self._graph.note_acquire(self._name)
+        return ok
+
+    def release(self) -> None:
+        self._graph.note_release(self._name)
+        self._inner.release()
+
+    def locked(self) -> bool:
+        return self._inner.locked()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+def _registry_lock_attrs(obj) -> list[str]:
+    attrs = []
+    for klass in type(obj).__mro__:
+        for spec in LOCK_REGISTRY:
+            if spec.cls == klass.__name__ and spec.lock not in attrs:
+                attrs.append(spec.lock)
+    return attrs
+
+
+@contextlib.contextmanager
+def lock_order(*objects, extra=(), graph: LockOrderGraph | None = None):
+    """Instrument the registry-declared locks of ``objects`` (plus any
+    explicit ``(obj, attr_name)`` pairs in ``extra``) for the duration
+    of the block; raise ``LockOrderError`` on exit if the observed
+    acquisition graph has a cycle.
+
+    Instrument *before* starting the threads that use the locks — the
+    attribute swap itself is not atomic with respect to a concurrent
+    ``with obj._lock`` entry.
+    """
+    graph = graph or LockOrderGraph()
+    targets: list[tuple[object, str]] = []
+    for obj in objects:
+        attrs = _registry_lock_attrs(obj)
+        if not attrs:
+            raise TypeError(
+                f"{type(obj).__name__} has no locks in "
+                "repro.analysis.locks.LOCK_REGISTRY; pass it via "
+                "extra=[(obj, '_lock')]")
+        targets.extend((obj, a) for a in attrs)
+    targets.extend(tuple(e) for e in extra)
+
+    patched: list[tuple[object, str, object]] = []
+    used: dict[str, int] = {}
+    try:
+        for obj, attr in targets:
+            inner = getattr(obj, attr)
+            name = f"{type(obj).__name__}.{attr}"
+            used[name] = used.get(name, 0) + 1
+            if used[name] > 1:     # two instances of the same class:
+                name += f"#{used[name]}"   # distinct graph nodes
+            setattr(obj, attr, InstrumentedLock(inner, name, graph))
+            patched.append((obj, attr, inner))
+        yield graph
+    finally:
+        for obj, attr, inner in patched:
+            setattr(obj, attr, inner)
+    graph.check()
