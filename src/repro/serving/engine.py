@@ -290,21 +290,25 @@ class ServingEngine:
         """Pre-compile the full pipeline for one padded batch size (the
         unit the learned warmup policy requests).  Returns executables
         compiled (0 when the shape was already warm)."""
-        before = self.n_compiles
+        with self._cache_lock:
+            before = self.n_compiles
         b = self.padded_batch(int(batch_size))
         qt = np.full((b, query_len), -1, np.int32)
         pv = np.ones(b, np.int32)
         self.serve(qt, pv)
-        return self.n_compiles - before
+        with self._cache_lock:
+            return self.n_compiles - before
 
     def warmup(self, batch_sizes, query_len: int) -> int:
         """Pre-compile the pipeline for each padded batch size in
         ``batch_sizes`` (the configured pad-multiple grid).  Returns the
         number of executables compiled."""
-        before = self.n_compiles
+        with self._cache_lock:
+            before = self.n_compiles
         for b in sorted({self.padded_batch(int(b)) for b in batch_sizes}):
             self.warmup_shape(b, query_len)
-        return self.n_compiles - before
+        with self._cache_lock:
+            return self.n_compiles - before
 
 
 # ----------------------------------------------------- mesh-sharded stages --
