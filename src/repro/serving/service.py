@@ -362,20 +362,26 @@ class WarmupPolicy:
                 shape = self._pending.get(block=block, timeout=timeout)
             except queue_lib.Empty:
                 return done
-            if shape in self.compiled:
+            with self._lock:
+                warm = shape in self.compiled
+            if warm:
                 continue
             try:
+                # compile outside the lock: concurrent observe()/census
+                # calls must not stall behind XLA
                 n = backend.warmup_shape(shape)
             except Exception as e:     # noqa: BLE001 — warmup must never
-                self.failed[shape] = e  # kill the background thread; the
-                continue               # shape just compiles at serve time
+                with self._lock:       # kill the background thread; the
+                    self.failed[shape] = e  # shape just compiles at
+                continue                    # serve time
             if n is None:
                 # backend can't warm yet (e.g. request sizing unknown):
                 # leave it schedulable for a later pass
                 with self._lock:
                     self._scheduled.discard(shape)
                 continue
-            self.compiled.add(shape)
+            with self._lock:
+                self.compiled.add(shape)
             done += 1
 
     def prewarm(self, backend: Backend, sizes) -> int:
@@ -384,13 +390,16 @@ class WarmupPolicy:
         n = 0
         for s in sizes:
             s = bucketing.pad_length(int(s), backend.pad_multiple)
-            if s not in self.compiled:
-                if backend.warmup_shape(s) is None:
-                    continue           # backend can't size this shape yet
+            with self._lock:
+                warm = s in self.compiled
+            if warm:
+                continue
+            if backend.warmup_shape(s) is None:
+                continue               # backend can't size this shape yet
+            with self._lock:
                 self.compiled.add(s)
-                with self._lock:
-                    self._scheduled.add(s)
-                n += 1
+                self._scheduled.add(s)
+            n += 1
         return n
 
 
