@@ -103,6 +103,11 @@ class RetrievalServer:
                                for p in node_params]
             thresholds = jnp.full((casc.n_cutoffs,), cfg.threshold,
                                   jnp.float32)
+            # commit the boot params to device once, like swap_predictor
+            # does: otherwise every predict_classes call re-uploads any
+            # host-resident leaf — an implicit h2d transfer per batch
+            # that jax.transfer_guard("disallow") rightly rejects
+            node_params = jax.device_put(node_params)
             self._live = (node_params, thresholds)
             kind, depth = casc.kind, casc.max_depth
             stats_, ctf_, df_ = self.stats, self.ctf, self.df
@@ -192,7 +197,7 @@ class RetrievalServer:
             self._live = (node_params, thresholds)
             self.predictor_version = (self.predictor_version + 1
                                       if version is None else int(version))
-        return self.predictor_version
+            return self.predictor_version
 
     def params_of(self, classes: np.ndarray) -> np.ndarray:
         """Predicted class -> engine parameter (k or rho) vector.
