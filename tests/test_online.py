@@ -14,6 +14,7 @@ import pytest
 
 from repro.core import cascade as cascade_lib
 from repro.core import experiment as E
+from repro.analysis import sanitizers
 from repro.core import forest as forest_lib
 from repro.online import (DriftConfig, EnvelopeMonitor, OnlineConfig,
                           OnlineController, PredictorStore, ShadowExecutor,
@@ -304,13 +305,15 @@ def test_compile_count_constant_under_swaps_and_mixed_batches(
     assert base > 0
     store = PredictorStore(casc_a,
                            [server.cfg.threshold] * casc_a.n_cutoffs)
-    for i, n in enumerate((3, 8, 11, 16, 5)):
-        store.publish(_cascade(small_system, seed=10 + i),
-                      [server.cfg.threshold] * casc_a.n_cutoffs)
-        service.swap_predictor(store.current().node_params,
-                               store.current().thresholds,
-                               version=store.current().version)
-        service.serve_all(list(small_system.queries.terms[:n]))
+    with sanitizers.compile_sentinel(server.engine) as rec:
+        for i, n in enumerate((3, 8, 11, 16, 5)):
+            store.publish(_cascade(small_system, seed=10 + i),
+                          [server.cfg.threshold] * casc_a.n_cutoffs)
+            service.swap_predictor(store.current().node_params,
+                                   store.current().thresholds,
+                                   version=store.current().version)
+            service.serve_all(list(small_system.queries.terms[:n]))
+    assert rec.new_compiles == 0
     assert server.engine.n_compiles == base
     assert server.predictor_version == store.current().version
 

@@ -5,6 +5,7 @@ scatter_back/padding round-trips."""
 import numpy as np
 import pytest
 
+from repro.analysis import sanitizers
 from repro.core import experiment as E
 from repro.serving import bucketing
 from repro.serving import pipeline as serve_lib
@@ -41,7 +42,9 @@ def test_single_dispatch_bit_identical_to_reference(small_system, knob):
     classes = np.arange(n) % (len(cuts) + 1)   # every bucket live
     _stub_classes(server, classes)
     qt = sys_.queries.terms[:n]
-    dyn = server.serve_batch(qt)
+    server.serve_batch(qt)               # warm the executable cache
+    with sanitizers.no_transfers():      # steady state: no implicit h2d
+        dyn = server.serve_batch(qt)
     ref = server.serve_batch_reference(qt)
     np.testing.assert_array_equal(dyn["ranked"], ref["ranked"])
     np.testing.assert_array_equal(dyn["widths"], ref["widths"])
@@ -70,13 +73,14 @@ def test_compile_count_constant_in_class_diversity(small_system):
     server.serve_batch(qt)               # compile for this padded shape
     base = server.engine.n_compiles
     assert base > 0
-    for n_distinct in (1, 2, 4, len(cuts) + 1):
-        _stub_classes(server, np.arange(24) % n_distinct)
-        out = server.serve_batch(qt)
-        assert out["n_compiles"] == base, (
-            f"recompiled at {n_distinct} distinct classes")
-    # the fixed baseline rides the same executables
-    server.serve_fixed(qt, int(cuts[-1]))
+    with sanitizers.hot_path(server.engine):   # no recompiles, no
+        for n_distinct in (1, 2, 4, len(cuts) + 1):  # implicit transfers
+            _stub_classes(server, np.arange(24) % n_distinct)
+            out = server.serve_batch(qt)
+            assert out["n_compiles"] == base, (
+                f"recompiled at {n_distinct} distinct classes")
+        # the fixed baseline rides the same executables
+        server.serve_fixed(qt, int(cuts[-1]))
     assert server.engine.n_compiles == base
 
 
@@ -145,8 +149,11 @@ def test_kernel_path_bit_identical_to_oracle(small_system, knob):
     for server in (oracle, kern):
         _stub_classes(server, classes)
     qt = sys_.queries.terms[:n]
-    a = oracle.serve_batch(qt)
-    b = kern.serve_batch(qt)
+    oracle.serve_batch(qt)               # warm both executable caches
+    kern.serve_batch(qt)
+    with sanitizers.no_transfers():      # steady state: no implicit h2d
+        a = oracle.serve_batch(qt)
+        b = kern.serve_batch(qt)
     np.testing.assert_array_equal(a["ranked"], b["ranked"])
     np.testing.assert_array_equal(a["widths"], b["widths"])
     ref = kern.serve_batch_reference(qt)
@@ -181,11 +188,13 @@ def test_kernel_path_compile_count_constant(small_system):
     server.serve_batch(qt)
     base = server.engine.n_compiles
     assert base > 0
-    for n_distinct in (2, 4, len(cuts) + 1):
-        _stub_classes(server, np.arange(24) % n_distinct)
-        out = server.serve_batch(qt)
-        assert out["n_compiles"] == base, (
-            f"kernel path recompiled at {n_distinct} distinct rho classes")
+    with sanitizers.hot_path(server.engine):
+        for n_distinct in (2, 4, len(cuts) + 1):
+            _stub_classes(server, np.arange(24) % n_distinct)
+            out = server.serve_batch(qt)
+            assert out["n_compiles"] == base, (
+                f"kernel path recompiled at "
+                f"{n_distinct} distinct rho classes")
 
 
 def test_force_kernel_env(small_system, monkeypatch):
