@@ -135,7 +135,6 @@ def bench_table7() -> list[tuple]:
     pred = res.preds["cascade_t0.75"]
 
     # judge pool: binary relevance for top-12 gold docs per held query
-    from repro.core.experiment import _batches  # noqa: SLF001
     import jax.numpy as jnp
     from repro.retrieval import gold, jass
     idx = sys_.index

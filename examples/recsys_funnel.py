@@ -11,7 +11,6 @@ Run:  PYTHONPATH=src python examples/recsys_funnel.py
 import numpy as np
 
 from repro.core import cascade as cascade_lib
-from repro.data import recsys_data
 from repro.models.recsys import bst as BS
 from repro.models.recsys import retrieval_tower as RT
 from repro.serving import funnel as F

@@ -12,7 +12,6 @@ arch is built, dry-run and rooflined without it.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,7 @@ exposing predict_proba(params, x) -> (B, 2).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Sequence
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

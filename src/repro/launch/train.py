@@ -16,11 +16,9 @@ On a pod, the same module runs the full config on the production mesh
 from __future__ import annotations
 
 import argparse
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

@@ -22,7 +22,6 @@ cell runnable.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -7,9 +7,6 @@ trees can be built host-side and device_put with shardings attached.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 import numpy as np

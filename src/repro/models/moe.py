@@ -16,7 +16,6 @@ balancing aux loss, and token dropping at the capacity bound.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import layers as L
-from repro.models.recsys import embedding as E
 
 __all__ = ["WideDeepConfig", "init_wide_deep", "wide_deep_logits",
            "wide_deep_loss"]

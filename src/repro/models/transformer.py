@@ -473,7 +473,6 @@ def prefill(params: dict, cfg: LMConfig, tokens: jnp.ndarray):
     cache = {}
 
     def run(stacked, x, moe_cfg):
-        decode_caches = []
 
         def body(lp, x):
             xin = L.rms_norm(lp["ln1"], x)

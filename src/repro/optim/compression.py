@@ -13,7 +13,6 @@ for feedback.  Opt-in via ``launch/train.py --grad-compression``.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -17,7 +17,7 @@ and evaluation code paths are scale-free.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -7,7 +7,6 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
@@ -58,7 +57,6 @@ def test_compressed_allreduce_with_error_feedback():
     mesh = S.make_compat_mesh((1,), ("data",))
     g = {"w": jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32))[None]}
     e = jax.tree.map(jnp.zeros_like, g)
-    total_err = jnp.zeros(())
     # error feedback: averaged over steps the bias must shrink
     acc = jnp.zeros((1, 64))
     for _ in range(8):
