@@ -29,6 +29,8 @@ def main() -> None:
         bench_serving.bench_dynamic_vs_fixed,
         bench_serving.bench_compile_amortization,
         bench_serving.bench_admission_service,
+        bench_serving.bench_continuous_scheduler,
+        bench_serving.bench_paced_deadlines,
         bench_serving.bench_sharded_vs_single,
         bench_online.bench_online_adaptation,
         roofline.bench_roofline,

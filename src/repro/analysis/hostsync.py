@@ -38,6 +38,11 @@ HOT_PATHS: tuple[tuple[str, tuple[str, ...] | None, tuple[str, ...]], ...] = (
     ("serving/engine.py", None,
      ("__init__", "warmup", "warmup_shape", "padded_batch")),
     ("serving/service.py", ("_exec_loop", "_run_batch"), ()),
+    # the continuous scheduler's per-tick device step: admission-time
+    # gather and finalize are *designed* d2h boundaries (and live in
+    # engine.py's SchedPrograms, vetted via baseline entries), but the
+    # chunk advance in between must stay free of host syncs
+    ("serving/sched/scheduler.py", ("_chunk_step",), ()),
     ("kernels/", None, ()),
 )
 

@@ -58,8 +58,19 @@ LOCK_REGISTRY: tuple[LockSpec, ...] = (
     # warmup policy: shape census + compile bookkeeping
     LockSpec("WarmupPolicy", "_lock",
              ("counts", "_scheduled", "compiled", "failed")),
-    # service: batch records + outstanding-request count
-    LockSpec("RetrievalService", "_lock", ("_records", "_outstanding")),
+    # service: batch records + outstanding-request count + deadline tally
+    LockSpec("RetrievalService", "_lock",
+             ("_records", "_outstanding", "_n_deadline_met",
+              "_n_deadline_missed", "_n_cancelled")),
+    # continuous scheduler: slot table, retire queue, churn counters.
+    # SlotTable itself is deliberately lock-free — every access runs
+    # under this lock, keeping the subsystem at one lock (its position
+    # in the order: service -> admission -> sched -> swap -> cache).
+    LockSpec("ContinuousScheduler", "_lock",
+             ("table", "_retired", "retire_reasons", "n_admitted",
+              "n_retired", "n_refill_calls", "n_chunk_calls",
+              "n_finalize_calls"),
+             assume_held=("_pop_group", "_retire")),
     # online loop: telemetry ring and predictor version store
     LockSpec("TelemetryBuffer", "_lock", ("_ring", "n_seen", "n_dropped")),
     LockSpec("PredictorStore", "_lock",

@@ -22,6 +22,31 @@ from repro.kernels.impact_scan.ref import (impact_scan_masked_ref,
 __all__ = ["saat_accumulate"]
 
 
+def _oracle_stats(rho_vec, seg_bounds, *, qn: int, p: int, n_docs: int,
+                  block_p: int, block_d: int) -> jnp.ndarray:
+    """Analytic (Q, n_doc_blocks) executed-cell counts for the oracle.
+
+    The oracle runs no grid, but the kernel's live predicate is pure
+    arithmetic over (rho, seg bounds), so the counts the kernel *would*
+    report are computable exactly — same predicate as
+    ``kernel.live_cell_count``, keeping the per-doc-block axis the
+    kernel's stats output has instead of collapsing to a scalar."""
+    bp, n_p = posting_blocks(p, block_p)
+    bd = min(block_d, n_docs)
+    n_d = -(-n_docs // bd)
+    if seg_bounds is None:
+        seg_lo = jnp.zeros((qn, n_p), jnp.int32)
+        seg_hi = jnp.full((qn, n_p), n_docs - 1, jnp.int32)
+    else:
+        seg_lo, seg_hi = seg_bounds
+    pb = jnp.arange(n_p, dtype=jnp.int32)
+    base = jnp.arange(n_d, dtype=jnp.int32) * bd
+    live = ((pb[None, None, :] * bp < rho_vec[:, None, None])
+            & (seg_lo[:, None, :] < base[None, :, None] + bd)
+            & (seg_hi[:, None, :] >= base[None, :, None]))
+    return jnp.sum(live.astype(jnp.int32), axis=2)
+
+
 def saat_accumulate(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
                     n_docs: int, rho, use_kernel: bool = True,
                     block_p: int = 512, block_d: int = 2048,
@@ -32,8 +57,9 @@ def saat_accumulate(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
     rho: static int or traced (Q,) integer vector.
     seg_bounds: optional (seg_lo, seg_hi) pair, each (Q, n_posting_blocks)
     int32 at the same ``block_p`` (kernel path only).
-    with_stats: also return the kernel's executed-grid-cell counts
-    (kernel path only).
+    with_stats: also return the executed-grid-cell counts — the kernel's
+    measured counts on the kernel path, the analytically identical
+    predicate sum on the oracle path.
     """
     qn, p = doc_stream.shape
     static_rho = None
@@ -54,14 +80,20 @@ def saat_accumulate(doc_stream: jnp.ndarray, impact_stream: jnp.ndarray, *,
         rho_vec = rho_vec.astype(jnp.int32)
 
     if not use_kernel:
-        if with_stats:
-            raise ValueError("with_stats requires use_kernel=True "
-                             "(the oracle runs no grid)")
         if static_rho is not None:
-            return impact_scan_ref(doc_stream, impact_stream,
-                                   n_docs=n_docs, rho=static_rho)
-        return impact_scan_masked_ref(doc_stream, impact_stream, rho_vec,
-                                      n_docs=n_docs)
+            acc = impact_scan_ref(doc_stream, impact_stream,
+                                  n_docs=n_docs, rho=static_rho)
+        else:
+            acc = impact_scan_masked_ref(doc_stream, impact_stream,
+                                         rho_vec, n_docs=n_docs)
+        if with_stats:
+            # the oracle runs no grid; report the counts the kernel
+            # would have, so stats-consuming callers (benchmarks, the
+            # scheduler's dispatch accounting) work on either path
+            return acc, _oracle_stats(rho_vec, seg_bounds, qn=qn, p=p,
+                                      n_docs=n_docs, block_p=block_p,
+                                      block_d=block_d)
+        return acc
 
     if static_rho == 0:           # nothing to score: no kernel launch
         zeros = jnp.zeros((qn, n_docs), jnp.float32)

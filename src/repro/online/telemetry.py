@@ -39,6 +39,13 @@ class TelemetryRecord:
     predictor_version: int         # live predictor at serve time
     t_wall: float                  # perf_counter at resolution
     seq: int = 0                   # monotone arrival index
+    # continuous-scheduler retirement trail (defaults on the batch path,
+    # where a request is served whole and never retired early)
+    retire_reason: str | None = None   # rho_exhausted | stream_exhausted
+    #                                    | pool_complete
+    chunks_executed: int = 0       # stage-1 chunk dispatches this request
+    chunks_max: int = 0            # padded maximum (stream_cap / chunk_p)
+    slot_occupancy: float = 0.0    # table occupancy at retirement
 
 
 class TelemetryBuffer:
@@ -61,14 +68,19 @@ class TelemetryBuffer:
     def record(self, payload, result: dict, predictor_version: int,
                t_wall: float) -> None:
         """The service tap: one O(1) slot write per resolved request."""
+        cls = result.get("class")
         self.append(TelemetryRecord(
             payload=payload,
-            pred_class=int(result.get("class", -1)),
+            pred_class=-1 if cls is None else int(cls),
             width=float(result.get("width", float("nan"))),
             ranked=result.get("ranked"),
             total_ms=float(result.get("total_ms", float("nan"))),
             predictor_version=int(predictor_version),
             t_wall=float(t_wall),
+            retire_reason=result.get("retire_reason"),
+            chunks_executed=int(result.get("chunks_executed", 0)),
+            chunks_max=int(result.get("chunks_max", 0)),
+            slot_occupancy=float(result.get("slot_occupancy", 0.0)),
         ))
 
     def append(self, rec: TelemetryRecord) -> None:

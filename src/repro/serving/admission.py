@@ -161,6 +161,25 @@ class AdmissionQueue:
                 return None
             return self._form(trigger, now)
 
+    # ------------------------------------------------------ slot handoff --
+    def take_urgent(self, n: int) -> list[Request]:
+        """Pop up to ``n`` most-urgent pending requests (deadline order,
+        FIFO within equal deadlines) — the continuous scheduler's slot
+        refill path.  Bypasses batch formation entirely: no census entry,
+        nothing lands in ``_ready``; the scheduler owns the popped
+        requests until it resolves them or hands them back."""
+        with self._lock:
+            take = min(int(n), len(self._heap))
+            return [heapq.heappop(self._heap)[1] for _ in range(take)]
+
+    def requeue(self, reqs) -> None:
+        """Return un-admitted requests (class co-grouping leftovers) to
+        the pending set; the heap restores deadline order, and their
+        original submit times keep staleness accounting honest."""
+        with self._lock:
+            for r in reqs:
+                heapq.heappush(self._heap, (r.sort_key(), r))
+
     def flush(self, now: float | None = None) -> list[Batch]:
         """Force-form batches from everything pending (drain / shutdown /
         deterministic tests).  Formed batches queue up for ``poll``."""

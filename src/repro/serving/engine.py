@@ -46,6 +46,7 @@ reference path was updated to match.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 import os
@@ -63,7 +64,8 @@ from repro.retrieval import topk as topk_lib
 from repro.retrieval.index import block_doc_bounds
 from repro.serving import bucketing
 
-__all__ = ["ServingEngine", "ShardedServingEngine"]
+__all__ = ["SchedPrograms", "SchedState", "ServingEngine",
+           "ShardedServingEngine"]
 
 
 class _PendingCompile:
@@ -133,6 +135,100 @@ def _stage2(sdocs, s3, doc_len, qids, *, n_docs: int):
 
 
 def _stage_rerank(stage2, pool, *, depth: int):
+    return gold.rerank_pool(stage2, pool, depth)
+
+
+# ----------------------------------------------------- scheduler stages --
+# The continuous scheduler's four programs.  Same rule as above: static
+# geometry (chunk/bounds block sizes, doc counts) via functools.partial,
+# everything per-slot — stream positions, remaining rho, slot indices,
+# qids — stays a traced operand, so the slot table can churn through any
+# admit/retire pattern on exactly these four executables.
+
+def _sched_gather(offsets, pdoc, pimp, pscore, qt, *, cap: int,
+                  bounds_p: int, n_docs: int, with_bounds: bool):
+    """Per-request slot rows: posting/score streams, segment bounds at the
+    *chunk* granularity, and the true stream length (the scheduler's
+    ragged-tail retirement bound)."""
+    ds, im, seg_lo, seg_hi, sdocs, s3 = _stage_gather(
+        offsets, pdoc, pimp, pscore, qt, cap=cap, block_p=bounds_p,
+        n_docs=n_docs, with_bounds=with_bounds)
+    slen = jnp.sum(ds >= 0, axis=-1).astype(jnp.int32)
+    return ds, im, seg_lo, seg_hi, sdocs, s3, slen
+
+
+def _sched_refill(ds_b, im_b, lo_b, hi_b, sd_b, s3_b, acc, slot_idx,
+                  ds, im, lo, hi, sd, s3):
+    """Install a refill group's gathered rows into its slots and zero the
+    accumulator rows.  ``slot_idx`` entries past the table (== capacity)
+    are the group's padding and are dropped by the scatter."""
+    drop = dict(mode="drop")
+    return (ds_b.at[slot_idx].set(ds, **drop),
+            im_b.at[slot_idx].set(im, **drop),
+            lo_b.at[slot_idx].set(lo, **drop),
+            hi_b.at[slot_idx].set(hi, **drop),
+            sd_b.at[slot_idx].set(sd, **drop),
+            s3_b.at[slot_idx].set(s3, **drop),
+            acc.at[slot_idx].set(0.0, **drop))
+
+
+def _sched_chunk(ds_b, im_b, lo_b, hi_b, acc, pos, end, *, chunk_p: int,
+                 bounds_p: int, n_docs: int, use_kernel: bool,
+                 interpret: bool, block_d: int):
+    """One resumable stage-1 step over the whole slot table: accumulate
+    each slot's next ``chunk_p`` postings, masked to its remaining budget
+    ``end - pos`` (idle slots carry rho 0 and add exact zeros).
+
+    The chunked partial sums reproduce the batch-once accumulator bit for
+    bit: impacts are quantized integer-valued float32, so every scatter-add
+    is exact and the split into chunks cannot change the total.
+    """
+    p = ds_b.shape[-1]
+    off = pos[:, None] + jnp.arange(chunk_p, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(off, p - 1)       # clamp idle slots; rho-masked below
+    ds = jnp.take_along_axis(ds_b, idx, axis=1)
+    im = jnp.take_along_axis(im_b, idx, axis=1)
+    rho_rem = jnp.clip(end - pos, 0, chunk_p).astype(jnp.int32)
+    if use_kernel:
+        nb = chunk_p // bounds_p
+        bidx = (pos[:, None] // bounds_p
+                + jnp.arange(nb, dtype=jnp.int32)[None, :])
+        bidx = jnp.minimum(bidx, lo_b.shape[-1] - 1)
+        seg = (jnp.take_along_axis(lo_b, bidx, axis=1),
+               jnp.take_along_axis(hi_b, bidx, axis=1))
+    else:
+        seg = None
+    inc = jass.saat_scores_masked(ds, im, rho_rem, n_docs,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret, seg_bounds=seg,
+                                  block_p=bounds_p, block_d=block_d)
+    return acc + inc
+
+
+def _sched_finalize_rho(acc, sd_b, s3_b, slot_idx, qids, doc_len, *,
+                        depth: int, n_docs: int, use_kernel: bool,
+                        interpret: bool):
+    """Stages 1b-3 for a retiring group: pool selection over the finished
+    accumulator rows, then stage-2 + rerank exactly as the batch path
+    (qids are the request's arrival index, so stage-2 noise matches)."""
+    rows = acc[slot_idx]
+    pool = topk_lib.select_pool(rows, depth, use_kernel=use_kernel,
+                                interpret=interpret)
+    stage2 = _stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
+                     n_docs=n_docs)
+    return gold.rerank_pool(stage2, pool, depth)
+
+
+def _sched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, qids, doc_len, *,
+                      depth: int, max_k: int, n_docs: int,
+                      use_kernel: bool, interpret: bool):
+    rows = acc[slot_idx]
+    pool = topk_lib.select_pool(rows, max_k, use_kernel=use_kernel,
+                                interpret=interpret)
+    keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
+    pool = jnp.where(keep, pool, -1)
+    stage2 = _stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
+                     n_docs=n_docs)
     return gold.rerank_pool(stage2, pool, depth)
 
 
@@ -582,3 +678,175 @@ class ShardedServingEngine(ServingEngine):
         # and the serving path never reshards
         spec = self._specs[name.split(":")[0]][j]
         return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+
+# ------------------------------------------------- scheduler programs --
+
+@dataclasses.dataclass(frozen=True)
+class SchedState:
+    """The slot table's device residency: per-slot posting/score streams,
+    segment bounds, and the resumable stage-1 accumulator.  Treated as an
+    immutable value — every program returns a new state, so a failed
+    dispatch can never leave half-updated rows behind."""
+
+    ds: jax.Array        # (S, P) int32 posting doc ids, -1 padded
+    im: jax.Array        # (S, P) float32 impacts, -1 padded
+    seg_lo: jax.Array    # (S, n_blocks) int32 per-block min doc id
+    seg_hi: jax.Array    # (S, n_blocks) int32 per-block max doc id
+    sdocs: jax.Array     # (S, L*P) int32 stage-2 score-stream doc ids
+    s3: jax.Array        # (S, L*P, 3) float32 stage-2 scorer features
+    acc: jax.Array       # (S, n_docs) float32 resumable stage-1 scores
+
+
+def _default_chunk_p(p: int) -> int:
+    """Largest divisor of the stream cap that is <= cap/8 — enough chunk
+    positions for early retirement to matter, without a degenerate grid."""
+    c = max(p // 8, 1)
+    while p % c:
+        c -= 1
+    return c
+
+
+class SchedPrograms:
+    """The continuous scheduler's execution surface over ``ServingEngine``.
+
+    Four programs — ``sgather``, ``refill``, ``chunk``, ``finalize`` —
+    cover the whole slot lifecycle, and their shapes are fixed at
+    construction (group width = the scheduler's refill grain, chunk span =
+    the full slot table), so *any* admit/retire churn pattern reuses the
+    same four AOT executables: the O(1)-compiles invariant survives the
+    move from batch-once to continuous batching.  Per-slot stream
+    positions and remaining budgets are traced operands; the host keeps
+    the only authoritative copy, so no program ever reads device state
+    back mid-flight (the d2h points are the admission-time stream length
+    and the finalize result — the same vetted boundaries as ``serve``).
+
+    Sharded engines are refused: the slot table assumes unsharded
+    (replicated) stage buffers.
+    """
+
+    def __init__(self, engine: ServingEngine, *, grain: int,
+                 chunk_p: int | None = None):
+        if isinstance(engine, ShardedServingEngine):
+            raise TypeError(
+                "SchedPrograms supports the unsharded ServingEngine only; "
+                "the sharded engine keeps the batch-once path")
+        self.engine = engine
+        cfg = engine.cfg
+        p = cfg.stream_cap
+        self.grain = int(grain)
+        self.chunk_p = int(chunk_p) if chunk_p else _default_chunk_p(p)
+        if p % self.chunk_p:
+            raise ValueError(
+                f"chunk_p={self.chunk_p} must divide stream_cap={p} so "
+                "chunk windows tile the posting streams exactly")
+        # segment bounds live at the coarsest granularity that still tiles
+        # the chunk window, so a chunk's bounds are a contiguous gather
+        self.bounds_p = (engine.block_p
+                         if self.chunk_p % engine.block_p == 0
+                         else self.chunk_p)
+        self.n_chunks = p // self.chunk_p
+
+        self._gather_fn = functools.partial(
+            _sched_gather, cap=p, bounds_p=self.bounds_p,
+            n_docs=engine.n_docs, with_bounds=engine.use_kernel)
+        self._chunk_fn = functools.partial(
+            _sched_chunk, chunk_p=self.chunk_p, bounds_p=self.bounds_p,
+            n_docs=engine.n_docs, use_kernel=engine.use_kernel,
+            interpret=engine.interpret, block_d=engine.block_d)
+        common = dict(depth=cfg.rerank_depth, n_docs=engine.n_docs,
+                      use_kernel=engine.use_kernel,
+                      interpret=engine.interpret)
+        if cfg.knob == "rho":
+            self._final_fn = functools.partial(_sched_finalize_rho,
+                                               **common)
+        else:
+            self._final_fn = functools.partial(_sched_finalize_k,
+                                               max_k=engine.max_k,
+                                               **common)
+
+    def _run(self, name: str, fn, *args):
+        a = tuple(jnp.asarray(x) for x in args)
+        return self.engine._compiled(name, fn, a)(*a)
+
+    def init_state(self, slots: int, query_len: int) -> SchedState:
+        """Fresh (empty) slot table residency.  Segment bounds start at
+        the empty interval (n_docs, -1) so unoccupied slots are never
+        executed by the kernel grid."""
+        e = self.engine
+        p = e.cfg.stream_cap
+        nb = p // self.bounds_p if e.use_kernel else 1
+        lp = query_len * p
+        return SchedState(
+            ds=jnp.full((slots, p), -1, jnp.int32),
+            im=jnp.full((slots, p), -1.0, jnp.float32),
+            seg_lo=jnp.full((slots, nb), e.n_docs, jnp.int32),
+            seg_hi=jnp.full((slots, nb), -1, jnp.int32),
+            sdocs=jnp.full((slots, lp), -1, jnp.int32),
+            s3=jnp.zeros((slots, lp, 3), jnp.float32),
+            acc=jnp.zeros((slots, e.n_docs), jnp.float32),
+        )
+
+    def gather(self, qt: np.ndarray):
+        """Gather one refill group's slot rows.  qt: (grain, L) int32,
+        -1 padded.  Returns (device row tuple, host stream lengths)."""
+        e = self.engine
+        *rows, slen = self._run("sgather", self._gather_fn, e.offsets,
+                                e.pdoc, e.pimp, e.pscore, qt)
+        return tuple(rows), np.asarray(slen)
+
+    def refill(self, state: SchedState, slot_idx: np.ndarray,
+               rows) -> SchedState:
+        """Install gathered rows at ``slot_idx`` (pad entries == table
+        capacity are dropped) and zero their accumulator rows."""
+        out = self._run("refill", _sched_refill, state.ds, state.im,
+                        state.seg_lo, state.seg_hi, state.sdocs, state.s3,
+                        state.acc, slot_idx, *rows)
+        return SchedState(*out)
+
+    def chunk(self, state: SchedState, pos: np.ndarray,
+              end: np.ndarray) -> SchedState:
+        """Advance every active slot by one chunk window."""
+        acc = self._run("chunk", self._chunk_fn, state.ds, state.im,
+                        state.seg_lo, state.seg_hi, state.acc, pos, end)
+        return dataclasses.replace(state, acc=acc)
+
+    def finalize(self, state: SchedState, slot_idx: np.ndarray,
+                 pvec: np.ndarray, qids: np.ndarray) -> np.ndarray:
+        """Stages 1b-3 for a retiring group; returns host ranked lists
+        (grain, rerank_depth).  ``pvec`` is the traced pool-width vector
+        (k knob; ignored for rho, where the budget was applied in-chunk)."""
+        e = self.engine
+        if e.cfg.knob == "rho":
+            r = self._run("finalize", self._final_fn, state.acc,
+                          state.sdocs, state.s3, slot_idx, qids, e.doc_len)
+        else:
+            r = self._run("finalize", self._final_fn, state.acc,
+                          state.sdocs, state.s3, slot_idx, pvec, qids,
+                          e.doc_len)
+        ranked = np.asarray(r)
+        if ranked.shape[1] < e.cfg.rerank_depth:
+            pad = e.cfg.rerank_depth - ranked.shape[1]
+            ranked = np.pad(ranked, ((0, 0), (0, pad)),
+                            constant_values=-1)
+        return ranked
+
+    def warmup(self, slots: int, query_len: int) -> int:
+        """Compile all four programs.  Safe mid-flight: the dummy refill
+        scatters to all-out-of-bounds slot indices (every row dropped) and
+        the dummy chunk runs at rho 0 (adds exact zeros), so live state is
+        never perturbed.  Returns executables compiled."""
+        e = self.engine
+        with e._cache_lock:
+            before = e.n_compiles
+        g = self.grain
+        state = self.init_state(slots, query_len)
+        qt = np.full((g, query_len), -1, np.int32)
+        rows, _ = self.gather(qt)
+        state = self.refill(state, np.full(g, slots, np.int32), rows)
+        zeros = np.zeros(slots, np.int32)
+        state = self.chunk(state, zeros, zeros)
+        self.finalize(state, np.zeros(g, np.int32),
+                      np.ones(g, np.int32), np.zeros(g, np.int32))
+        with e._cache_lock:
+            return e.n_compiles - before

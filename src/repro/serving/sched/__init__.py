@@ -1,0 +1,29 @@
+"""Continuous-batching scheduler (slot-based in-flight scheduling).
+
+Replaces batch-once formation with a slot table over the engine's padded
+shapes: requests occupy slots, stage-1 advances every active slot one
+posting chunk per dispatch, a query whose traced ρ budget is exhausted
+(or whose k-pool scan is complete) retires mid-flight, and freed slots
+are refilled from the admission queue at the next stage boundary — so
+per-query predicted parameters finally reach the wall clock instead of
+being absorbed by the batch's padded maximum.
+
+Layering:
+
+* ``engine.SchedPrograms`` — the four AOT executables (sgather / refill
+  / chunk / finalize) and the device-resident ``SchedState``.
+* ``slots.SlotTable`` — host-side slot bookkeeping (the only truth for
+  stream positions; no per-chunk device readback).
+* ``scheduler.ContinuousScheduler`` — the tick loop: finalize retiring
+  groups, refill free slots (deadline-first, class co-grouped), chunk
+  the table.
+
+``service.ContinuousBackend`` plugs the scheduler into the unified
+``RetrievalService`` front door; the batch-once path stays intact as the
+bit-identity oracle.
+"""
+
+from repro.serving.sched.scheduler import ContinuousScheduler
+from repro.serving.sched.slots import Slot, SlotTable
+
+__all__ = ["ContinuousScheduler", "Slot", "SlotTable"]

@@ -41,6 +41,22 @@ class ServerStats:
     n_compiles: int | None = None       # engine executable-cache size
     queue_ms: list | None = None        # per-request admission delay
     service_ms: list | None = None      # per-batch backend execute time
+    n_deadline_met: int | None = None   # resolved requests, on time
+    n_deadline_missed: int | None = None  # resolved requests, late
+    n_cancelled: int = 0                # stop()-cancelled, never served
+
+    @property
+    def deadline_met(self) -> float:
+        """Fraction of *resolved* requests that met their deadline.
+
+        Only requests that actually produced a result count: futures
+        cancelled by ``stop()`` (or otherwise never served) are tracked
+        in ``n_cancelled`` and excluded, so aborting a loaded service
+        does not masquerade as a deadline-miss storm."""
+        met = self.n_deadline_met or 0
+        missed = self.n_deadline_missed or 0
+        total = met + missed
+        return float("nan") if total == 0 else met / total
 
     @property
     def p50_ms(self) -> float:
@@ -60,6 +76,12 @@ class ServerStats:
                 for k, v in self.stage_ms.items())
         comp = (f" compiles={self.n_compiles}"
                 if self.n_compiles is not None else "")
+        dl = ""
+        if (self.n_deadline_met is not None
+                or self.n_deadline_missed is not None):
+            dl = f" deadline_met={self.deadline_met:.1%}"
+            if self.n_cancelled:
+                dl += f" cancelled={self.n_cancelled}"
         queue = ""
         if self.queue_ms is not None:
             # where a request's latency goes: waiting for admission vs
@@ -69,4 +91,4 @@ class ServerStats:
                      f" service_p50={_pct(self.service_ms, 50):.1f}ms")
         return (f"q={self.n_queries} p50={self.p50_ms:.1f}ms "
                 f"p99={self.p99_ms:.1f}ms mean_param={self.mean_param:.0f}"
-                + env + queue + stages + comp)
+                + env + dl + queue + stages + comp)

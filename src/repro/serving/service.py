@@ -18,7 +18,10 @@ request/response API:
   ``EngineBackend`` (cascade + single-dispatch engine),
   ``ShardedEngineBackend`` (the same pipeline over a device mesh: doc
   dim sharded over 'model', request batches over ('pod','data')), and
-  ``FunnelBackend`` (two-tower + BST funnel).
+  ``FunnelBackend`` (two-tower + BST funnel).  ``ContinuousBackend``
+  opts out of batch formation entirely: the slot-table scheduler
+  (``serving/sched``) admits requests into in-flight work at stage
+  boundaries and retires each one at its own predicted budget.
 * **Overlap**: the backend splits into ``predict`` (the admission-side
   cascade) and ``execute`` (the staged engine dispatch); the service runs
   them on separate threads connected by a bounded handoff queue, so the
@@ -48,7 +51,8 @@ import numpy as np
 from repro.serving.admission import AdmissionConfig, AdmissionQueue, Batch
 
 __all__ = ["Backend", "EngineBackend", "ShardedEngineBackend",
-           "FunnelBackend", "WarmupPolicy", "RetrievalService"]
+           "ContinuousBackend", "FunnelBackend", "WarmupPolicy",
+           "RetrievalService"]
 
 
 # ------------------------------------------------------------- backends --
@@ -187,6 +191,74 @@ class ShardedEngineBackend(EngineBackend):
                 "a mesh (RetrievalServer(..., mesh=mesh)); got an "
                 "unsharded engine — use EngineBackend for that.")
         super().__init__(server, query_len)
+
+
+class ContinuousBackend:
+    """Continuous-batching backend: the slot-table scheduler
+    (``serving/sched``) replaces batch-once formation.
+
+    Deviates from the ``Backend`` protocol deliberately: the service
+    detects a ``ContinuousBackend`` and routes admission straight to the
+    scheduler's slot refill (``collate``/``predict``/``execute`` never
+    run), so requests join and leave in-flight work at stage boundaries
+    instead of riding a formed batch.  Warmup, stats, telemetry and the
+    hot-swap hook keep the same surface as ``EngineBackend``.
+
+    Constructor knobs (forwarded to ``ContinuousScheduler``):
+    ``slots`` (table capacity), ``grain`` (refill/finalize group width,
+    default = the engine's pad multiple), ``chunk_p`` (stage-1 chunk
+    length, default = the largest divisor of ``stream_cap`` <= cap/8),
+    ``window`` (candidate pool for class co-grouping), ``co_group``,
+    and ``fixed_param`` (serve everything at one budget — the
+    dynamic-vs-fixed race's baseline arm).
+    """
+
+    def __init__(self, server, query_len: int | None = None, *,
+                 slots: int = 32, grain: int | None = None,
+                 chunk_p: int | None = None, window: int | None = None,
+                 co_group: bool = True, fixed_param: int | None = None):
+        from repro.serving.engine import ShardedServingEngine
+        if isinstance(server.engine, ShardedServingEngine):
+            raise TypeError(
+                "ContinuousBackend supports the unsharded engine only; "
+                "use ShardedEngineBackend's batch-once path on a mesh")
+        self.server = server
+        self.pad_multiple = server.engine.batch_multiple
+        self.n_classes = len(server.cfg.cutoffs) + 1
+        self.query_len = query_len
+        self._sched_kw = dict(slots=slots, grain=grain, chunk_p=chunk_p,
+                              window=window, co_group=co_group,
+                              fixed_param=fixed_param)
+        self.scheduler = None          # bound by RetrievalService
+
+    def make_scheduler(self, queue, on_results):
+        from repro.serving.sched import ContinuousScheduler
+        self.scheduler = ContinuousScheduler(
+            self.server, queue, query_len=self.query_len,
+            on_results=on_results, **self._sched_kw)
+        return self.scheduler
+
+    def warmup_shape(self, padded_size: int) -> int | None:
+        # the scheduler's shapes are fixed by (slots, grain, chunk_p),
+        # not the admission census — any observed size warms the same
+        # four programs + the cascade's padded candidate windows
+        del padded_size
+        if self.scheduler is None:
+            return None
+        return self.scheduler.warmup()
+
+    @property
+    def n_compiles(self) -> int | None:
+        return self.server.engine.n_compiles
+
+    @property
+    def predictor_version(self) -> int:
+        return getattr(self.server, "predictor_version", 0)
+
+    def swap_predictor(self, node_params, thresholds=None, *,
+                       version: int | None = None) -> int:
+        return self.server.swap_predictor(node_params, thresholds,
+                                          version=version)
 
 
 class FunnelBackend:
@@ -464,7 +536,17 @@ class RetrievalService:
         self._gen = 0                  # bumps on submit/flush (lost-wakeup
         self._stop = threading.Event()  # guard for the admit loop)
         self._outstanding = 0
+        self._n_deadline_met = 0
+        self._n_deadline_missed = 0
+        self._n_cancelled = 0
         self._threads: list[threading.Thread] = []
+        # continuous mode: a ContinuousBackend swaps batch formation for
+        # the slot-table scheduler; admission still runs through
+        # self.queue (deadline heap), but the scheduler pops it directly
+        self._sched = None
+        if isinstance(backend, ContinuousBackend):
+            self._sched = backend.make_scheduler(self.queue,
+                                                 self._note_results)
 
     # ------------------------------------------------------------ submit --
     def submit(self, payload, deadline_ms: float | None = None):
@@ -481,20 +563,33 @@ class RetrievalService:
         return [self.submit(p, deadline_ms) for p in payloads]
 
     def flush(self) -> None:
-        """Force the pending set into batches immediately."""
-        self.queue.flush()
+        """Force the pending set into batches immediately.  In continuous
+        mode this only wakes the scheduler: forming batches would strand
+        requests in the queue's ready deque, which the scheduler's slot
+        refill never reads."""
+        if self._sched is None:
+            self.queue.flush()
         with self._wake:
             self._gen += 1
             self._wake.notify_all()
 
-    def _on_done(self, _fut) -> None:
+    def _on_done(self, fut) -> None:
         with self._lock:
             self._outstanding -= 1
+            if fut.cancelled():
+                # stop()-aborted, never served: tracked apart so it can't
+                # be mistaken for a deadline miss (ServerStats.deadline_met)
+                self._n_cancelled += 1
 
     # ------------------------------------------------------------ inline --
     def step(self, now: float | None = None) -> int:
-        """Run one admission+dispatch cycle inline.  Returns the number
-        of requests served (0 when no batch was ready)."""
+        """Run one admission+dispatch cycle inline.  Batch-once mode:
+        returns the number of requests served (0 when no batch was
+        ready).  Continuous mode: runs one scheduler tick and returns its
+        work units — dispatches plus resolutions, so 0 still means
+        'nothing to do' but a positive count may resolve no futures yet."""
+        if self._sched is not None:
+            return self._sched.tick(now)
         b = self.queue.poll(now)
         if b is None:
             return 0
@@ -510,8 +605,18 @@ class RetrievalService:
         futs = self.submit_many(payloads, deadline_ms)
         self.flush()
         if not self._threads:
-            while self.step():
-                pass
+            if self._sched is not None:
+                # a tick can do work without resolving anything, so loop
+                # on outstanding; an idle tick with work pending is a bug
+                # worth failing loudly over, not spinning on
+                while self.outstanding:
+                    if not self.step():
+                        raise RuntimeError(
+                            "continuous scheduler went idle with "
+                            f"{self.outstanding} requests outstanding")
+            else:
+                while self.step():
+                    pass
         return [f.result(timeout) for f in futs]
 
     # --------------------------------------------------------- execution --
@@ -557,6 +662,10 @@ class RetrievalService:
             enriched.append(res)
             if not req.future.done():
                 req.future.set_result(res)
+        met = sum(1 for res in enriched if res["deadline_met"])
+        with self._lock:
+            self._n_deadline_met += met
+            self._n_deadline_missed += len(enriched) - met
         if self.telemetry is not None:
             # tap *after* the futures resolve: the append never adds to
             # request latency, only to the exec thread's turnaround.
@@ -575,7 +684,58 @@ class RetrievalService:
                 #                        the exec thread; the loop just
                 #                        misses these labels
 
+    def _note_results(self, requests, results, t_done, *,
+                      service_ms: float) -> None:
+        """Continuous-mode accounting: the scheduler resolves futures
+        itself and reports each finalized group here — records, deadline
+        counters, and the telemetry tap mirror ``_run_batch``."""
+        rec = _BatchRecord(
+            n=len(requests),
+            predict_ms=float(np.mean([res["predict_ms"]
+                                      for res in results])),
+            service_ms=service_ms,
+            queue_ms=[res["queue_ms"] for res in results],
+            total_ms=[res["total_ms"] for res in results],
+            timings={},
+            classes=[res.get("class") for res in results],
+            widths=[res.get("width") for res in results])
+        met = sum(1 for res in results if res["deadline_met"])
+        with self._lock:
+            self._records.append(rec)
+            self._n_deadline_met += met
+            self._n_deadline_missed += len(results) - met
+        if self.telemetry is not None:
+            ver = getattr(self.backend, "predictor_version", 0)
+            try:
+                for req, res in zip(requests, results):
+                    self.telemetry.record(req.payload, res,
+                                          res.get("predictor_version",
+                                                  ver),
+                                          t_done)
+            except Exception:          # noqa: BLE001 — same contract as
+                pass                   # _run_batch: a faulty recorder
+                #                        must never kill the tick thread
+
     # ----------------------------------------------------------- threads --
+    def _sched_loop(self) -> None:
+        """Continuous-mode worker: tick until stopped, sleeping only when
+        a tick reports no work (lost-wakeup guarded like _admit_loop).  A
+        tick that raises fails the in-flight slots and keeps serving —
+        one poisoned batch must not wedge every later request."""
+        while not self._stop.is_set():
+            with self._wake:
+                gen0 = self._gen
+            try:
+                n = self._sched.tick()
+            except Exception as e:     # noqa: BLE001
+                self._sched.abort(e)
+                continue
+            if n:
+                continue
+            with self._wake:
+                if self._gen == gen0:
+                    self._wake.wait(0.001)
+
     def _admit_loop(self) -> None:
         while not self._stop.is_set():
             with self._wake:
@@ -636,14 +796,24 @@ class RetrievalService:
         if self._threads:
             return self
         self._stop.clear()
-        self._threads = [
-            threading.Thread(target=self._admit_loop,
-                             name="svc-admit", daemon=True),
-            threading.Thread(target=self._exec_loop,
-                             name="svc-exec", daemon=True),
-            threading.Thread(target=self._warmup_loop,
-                             name="svc-warmup", daemon=True),
-        ]
+        if self._sched is not None:
+            # one tick thread owns all scheduler device state; warmup
+            # still runs aside (the scheduler's warmup is safe mid-flight)
+            self._threads = [
+                threading.Thread(target=self._sched_loop,
+                                 name="svc-sched", daemon=True),
+                threading.Thread(target=self._warmup_loop,
+                                 name="svc-warmup", daemon=True),
+            ]
+        else:
+            self._threads = [
+                threading.Thread(target=self._admit_loop,
+                                 name="svc-admit", daemon=True),
+                threading.Thread(target=self._exec_loop,
+                                 name="svc-exec", daemon=True),
+                threading.Thread(target=self._warmup_loop,
+                                 name="svc-warmup", daemon=True),
+            ]
         for t in self._threads:
             t.start()
         return self
@@ -696,6 +866,9 @@ class RetrievalService:
             t.join(timeout=60.0 if t.name == "svc-warmup" else 5.0)
         self._threads = []
         if not drain:                  # abort path: resolve, don't strand
+            if self._sched is not None:
+                # the tick thread has joined; cancel mid-flight slots
+                self._sched.abort()
             self.queue.flush()
             while (b := self.queue.poll()) is not None:
                 for r in b.requests:
@@ -740,6 +913,8 @@ class RetrievalService:
         from repro.serving.server import ServerStats
         with self._lock:
             recs = list(self._records)
+            met, missed = self._n_deadline_met, self._n_deadline_missed
+            cancelled = self._n_cancelled
         lat = [t for r in recs for t in r.total_ms]
         queue_ms = [q for r in recs for q in r.queue_ms]
         service_ms = [r.service_ms for r in recs]
@@ -764,4 +939,7 @@ class RetrievalService:
             n_compiles=self.backend.n_compiles,
             queue_ms=queue_ms,
             service_ms=service_ms,
+            n_deadline_met=met,
+            n_deadline_missed=missed,
+            n_cancelled=cancelled,
         )

@@ -200,9 +200,33 @@ def test_impact_scan_validation_errors():
         is_ops.saat_accumulate(docs, imps, n_docs=40,
                                rho=jnp.asarray([1, 2], jnp.int32),
                                block_p=8, seg_bounds=(bad, bad))
-    with pytest.raises(ValueError, match="use_kernel"):
-        is_ops.saat_accumulate(docs, imps, n_docs=40, rho=4,
-                               use_kernel=False, with_stats=True)
+
+
+def test_oracle_with_stats_matches_kernel_counts():
+    """The oracle path now supports with_stats: the analytic predicate
+    sum must equal what the kernel actually measures, per doc block."""
+    from repro.retrieval.index import block_doc_bounds
+
+    q, p, nd, bp, bd = 3, 64, 128, 16, 32
+    docs, imps = _int_streams(q, p, nd)
+    rho = jnp.asarray([0, 20, 64], jnp.int32)
+    seg = block_doc_bounds(docs, block_p=bp, n_docs=nd)
+    acc_k, cnt_k = is_ops.saat_accumulate(
+        docs, imps, n_docs=nd, rho=rho, block_p=bp, block_d=bd,
+        seg_bounds=seg, with_stats=True)
+    acc_o, cnt_o = is_ops.saat_accumulate(
+        docs, imps, n_docs=nd, rho=rho, block_p=bp, block_d=bd,
+        seg_bounds=seg, with_stats=True, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_o))
+    np.testing.assert_array_equal(np.asarray(cnt_k), np.asarray(cnt_o))
+    # and without seg bounds both synthesize the same full-range bounds
+    _, cd_k = is_ops.saat_accumulate(docs, imps, n_docs=nd, rho=rho,
+                                     block_p=bp, block_d=bd,
+                                     with_stats=True)
+    _, cd_o = is_ops.saat_accumulate(docs, imps, n_docs=nd, rho=rho,
+                                     block_p=bp, block_d=bd,
+                                     with_stats=True, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(cd_k), np.asarray(cd_o))
 
 
 # ------------------------------------------------------------------ topk --

@@ -1,0 +1,253 @@
+"""Continuous-batching scheduler: churn bit-identity against the
+batch-once engine on every predicted-class bucket, O(1) compiles across
+admit/retire churn, class co-grouping, deadline/cancel accounting, and
+the retirement telemetry trail."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.analysis import sanitizers as S
+from repro.core import experiment as E
+from repro.online.telemetry import TelemetryBuffer
+from repro.serving import pipeline as serve_lib
+from repro.serving.service import ContinuousBackend, RetrievalService
+
+
+@pytest.fixture(scope="module")
+def small_system():
+    return E.build_system(E.ExperimentConfig(
+        n_docs=400, vocab=900, n_queries=40, stream_cap=128,
+        pool_depth=100, gold_depth=50, query_batch=16, seed=21))
+
+
+def _hash_rows(qt):
+    # classes as a pure function of query *content*: the scheduler's
+    # refill groups differ from batch-once groups, so a batch-position
+    # stub (test_service.py's idiom) would not survive regrouping
+    qt = np.asarray(qt)
+    return np.where(qt >= 0, qt, 0).sum(axis=1) + (qt >= 0).sum(axis=1)
+
+
+def _server(sys_, knob="rho", class_shift=None, **cfg_kw):
+    cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+    cfg = serve_lib.ServingConfig(
+        knob=knob, cutoffs=cuts, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap, **cfg_kw)
+    server = serve_lib.RetrievalServer(sys_.index, None, cfg)
+    n_cls = len(cuts) + 1
+    shift = class_shift if class_shift is not None else {"v": 0}
+    server.predict_classes = (
+        lambda qt: ((_hash_rows(qt) + shift["v"]) % n_cls).astype(np.int64))
+    return server, shift
+
+
+def _drain(svc):
+    while svc.outstanding:
+        if not svc.step():
+            raise RuntimeError("scheduler idle with work outstanding")
+
+
+# ------------------------------------------------- churn bit-identity --
+
+@pytest.mark.parametrize("knob", ["rho", "k"])
+def test_churn_bit_identity_every_bucket(small_system, knob):
+    """Results under slot churn are bit-identical to one batch-once
+    ``engine.serve`` of the same stream — with every class bucket of the
+    cutoff grid represented in the mix."""
+    server, _ = _server(small_system, knob)
+    qt = small_system.queries.terms[:40]
+    classes = np.asarray(server.predict_classes(qt))
+    n_cls = len(server.cfg.cutoffs) + 1
+    assert set(classes.tolist()) == set(range(n_cls))  # all buckets hit
+    ranked_ref, _ = server.engine.serve(qt, server.params_of(classes))
+
+    backend = ContinuousBackend(server, slots=16, grain=4, window=8)
+    svc = RetrievalService(backend)
+    out = svc.serve_all(list(qt), deadline_ms=1e6)
+    for i, res in enumerate(out):
+        np.testing.assert_array_equal(res["ranked"], ranked_ref[i])
+        assert res["class"] == classes[i]
+        assert res["chunks_executed"] <= res["chunks_max"]
+        assert 0.0 < res["slot_occupancy"] <= 1.0
+    sch = backend.scheduler.stats()
+    assert sch["n_admitted"] == sch["n_retired"] == 40
+    if knob == "rho":
+        assert set(sch["retire_reasons"]) <= {"rho_exhausted",
+                                              "stream_exhausted"}
+    else:
+        assert set(sch["retire_reasons"]) == {"pool_complete"}
+
+
+@pytest.mark.parametrize("n", [1, 7])
+def test_ragged_tail_bit_identity(small_system, n):
+    """Trickle traffic (below a refill grain / not a grain multiple)
+    pads within the fixed shapes and stays bit-identical."""
+    server, _ = _server(small_system, "rho")
+    qt = small_system.queries.terms[:n]
+    classes = np.asarray(server.predict_classes(qt))
+    ranked_ref, _ = server.engine.serve(qt, server.params_of(classes))
+    backend = ContinuousBackend(server, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    out = svc.serve_all(list(qt), deadline_ms=1e6)
+    for i, res in enumerate(out):
+        np.testing.assert_array_equal(res["ranked"], ranked_ref[i])
+
+
+def test_mid_flight_hot_swap_bit_identity(small_system):
+    """A predictor swap while slots are in flight: admitted requests
+    keep their admission-time widths, later admissions see the new
+    predictor — and every result stays bit-identical to a batch-once
+    serve at the widths actually used."""
+    shift = {"v": 0}
+    server, _ = _server(small_system, "rho", class_shift=shift)
+    backend = ContinuousBackend(server, slots=8, grain=4, window=8)
+    svc = RetrievalService(backend)
+    qt = small_system.queries.terms[:24]
+
+    futs = svc.submit_many(list(qt[:12]), deadline_ms=1e6)
+    svc.flush()
+    # tick until some (not all) of the first wave resolved: mid-flight
+    while sum(f.done() for f in futs) < 4:
+        assert svc.step()
+    assert svc.outstanding > 0
+    # a stubbed swap: predict_classes is already a stand-in (no cascade
+    # was built), so flip its weights-equivalent and bump the version
+    # the way swap_predictor would
+    shift["v"] = 2
+    server.predictor_version += 1
+    futs += svc.submit_many(list(qt[12:]), deadline_ms=1e6)
+    svc.flush()
+    _drain(svc)
+
+    out = [f.result() for f in futs]
+    versions = {res["predictor_version"] for res in out}
+    assert len(versions) == 2           # both predictors served traffic
+    widths = np.asarray([res["width"] for res in out], np.int64)
+    ranked_ref, _ = server.engine.serve(qt, widths)
+    for i, res in enumerate(out):
+        np.testing.assert_array_equal(res["ranked"], ranked_ref[i])
+
+
+# ------------------------------------------------------- O(1) compiles --
+
+def test_zero_compiles_across_50_churn_cycles(small_system):
+    """50 admit/retire cycles with mixed batch sizes compile nothing
+    after warmup: the four scheduler programs are the whole executable
+    surface, whatever the churn pattern."""
+    server, _ = _server(small_system, "rho")
+    engine = server.engine
+    L = small_system.queries.terms.shape[1]
+    backend = ContinuousBackend(server, query_len=L, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    assert backend.scheduler.warmup() > 0      # cold start compiles
+    rng = np.random.default_rng(7)
+    qpool = small_system.queries.terms
+    with S.compile_sentinel(engine):
+        for cycle in range(50):
+            n = 1 + cycle % 8                  # 1..8, every tail shape
+            rows = qpool[rng.integers(0, qpool.shape[0], n)]
+            svc.serve_all(list(rows), deadline_ms=1e6)
+    sch = backend.scheduler.stats()
+    assert sch["n_admitted"] == sch["n_retired"] == sum(
+        1 + c % 8 for c in range(50))
+
+
+# --------------------------------------------------------- co-grouping --
+
+def test_co_grouping_selects_nearest_classes(small_system):
+    server, _ = _server(small_system, "rho")
+    backend = ContinuousBackend(server, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    sched = backend.scheduler
+    cand = list(range(5))               # only len() matters to _select
+    classes = np.array([3, 0, 3, 1, 3])
+    keep, back = sched._select(cand, classes, 3)
+    # head (most urgent) always ships; seats go to its class neighbors
+    assert keep.tolist() == [0, 2, 4] and back.tolist() == [1, 3]
+    sched.co_group = False
+    keep, back = sched._select(cand, classes, 3)
+    assert keep.tolist() == [0, 1, 2]   # urgency order, no regrouping
+    del svc
+
+
+def test_grain_must_fit_slot_table(small_system):
+    server, _ = _server(small_system, "rho")
+    backend = ContinuousBackend(server, slots=4, grain=8)
+    with pytest.raises(ValueError, match="grain"):
+        RetrievalService(backend)
+
+
+def test_overlong_query_fails_fast(small_system):
+    server, _ = _server(small_system, "rho")
+    L = small_system.queries.terms.shape[1]
+    backend = ContinuousBackend(server, query_len=L, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    fut = svc.submit(np.zeros(L + 3, np.int32), deadline_ms=1e6)
+    svc.flush()
+    while not fut.done():
+        svc.step()
+    with pytest.raises(ValueError, match="query length"):
+        fut.result()
+
+
+# ------------------------------------------------ deadline accounting --
+
+def test_deadline_tally_counts_served_requests(small_system):
+    server, _ = _server(small_system, "rho")
+    backend = ContinuousBackend(server, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    ok = svc.serve_all(list(small_system.queries.terms[:4]),
+                       deadline_ms=1e6)
+    late = svc.serve_all(list(small_system.queries.terms[4:8]),
+                         deadline_ms=0.0)     # expired on arrival
+    assert all(res["deadline_met"] for res in ok)
+    assert not any(res["deadline_met"] for res in late)
+    st = svc.stats()
+    assert st.n_deadline_met == 4 and st.n_deadline_missed == 4
+    assert st.deadline_met == pytest.approx(0.5)
+    assert "deadline_met=50.0%" in st.summary()
+
+
+def test_cancelled_requests_are_not_deadline_misses(small_system):
+    """stop(drain=False) with work queued and mid-flight: every future
+    resolves (cancel or result), and cancels never pollute the
+    deadline-met fraction."""
+    server, _ = _server(small_system, "rho")
+    backend = ContinuousBackend(server, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    futs = svc.submit_many(list(small_system.queries.terms[:10]),
+                           deadline_ms=1e6)
+    svc.flush()
+    svc.step()                          # admit a grain: some mid-flight
+    svc.stop(drain=False)
+    assert all(f.done() for f in futs)
+    n_cancelled = sum(f.cancelled() for f in futs)
+    assert n_cancelled > 0
+    st = svc.stats()
+    assert st.n_cancelled == n_cancelled
+    served = 10 - n_cancelled
+    assert (st.n_deadline_met or 0) + (st.n_deadline_missed or 0) == served
+    if served == 0:
+        assert math.isnan(st.deadline_met)
+    else:
+        assert st.deadline_met == 1.0   # generous deadlines: all met
+    assert f"cancelled={n_cancelled}" in st.summary()
+
+
+# ----------------------------------------------- retirement telemetry --
+
+def test_retirement_trail_reaches_telemetry_ring(small_system):
+    server, _ = _server(small_system, "rho")
+    backend = ContinuousBackend(server, slots=8, grain=4)
+    buf = TelemetryBuffer(capacity=64)
+    svc = RetrievalService(backend, telemetry=buf)
+    svc.serve_all(list(small_system.queries.terms[:8]), deadline_ms=1e6)
+    recs = buf.snapshot()
+    assert len(recs) == 8
+    for r in recs:
+        assert r.retire_reason in ("rho_exhausted", "stream_exhausted")
+        assert 0 <= r.chunks_executed <= r.chunks_max
+        assert 0.0 < r.slot_occupancy <= 1.0
+        assert r.pred_class >= 0 and r.ranked is not None
