@@ -28,7 +28,26 @@ BENCH_KERNELS_JSON = os.path.join(ART, "BENCH_kernels.json")
 BENCH_KERNELS_FULL_JSON = os.path.join(ART, "BENCH_kernels_full.json")
 
 #: structured records the sweep benches append for write_kernels_json
-_RECORDS: dict = {"impact_scan_sweep": [], "service": {}}
+_RECORDS: dict = {"impact_scan_sweep": [], "service": {}, "chosen": {}}
+
+
+def choose_block_defaults(sweep: list[dict]) -> dict:
+    """Pick ``kernel_block_p`` / ``kernel_block_d`` from the sweep.
+
+    Deterministic criterion, machine-independent: fewest executed grid
+    cells on the production variant (``rho+seg`` — mixed predicted rho
+    with segment skips), tie broken toward the largest ``block_d`` then
+    the largest ``block_p`` (bigger tiles amortize grid overhead at equal
+    work).  Keyed by ``jax.default_backend()`` so a TPU run records its
+    own row next to the CPU one instead of overwriting it."""
+    rows = [r for r in sweep if r["variant"] == "rho+seg"]
+    if not rows:
+        return {}
+    best = min(rows, key=lambda r: (r["cells"], -r["block_d"],
+                                    -r["block_p"]))
+    return {jax.default_backend(): dict(
+        kernel_block_p=best["block_p"], kernel_block_d=best["block_d"],
+        cells=best["cells"], dense_cells=best["dense_cells"])}
 
 
 def _time(fn, n=3):
@@ -142,6 +161,12 @@ def bench_impact_scan_sweep() -> list[tuple]:
                     block_p=bp, block_d=bd, variant=variant,
                     cells=cells, dense_cells=dense_cells,
                     us=round(dt * 1e6, 1)))
+    _RECORDS["chosen"] = choose_block_defaults(
+        _RECORDS["impact_scan_sweep"])
+    for plat, c in _RECORDS["chosen"].items():
+        rows.append((f"kernel/impact_scan/chosen_{plat}", float(c["cells"]),
+                     f"block_p={c['kernel_block_p']} "
+                     f"block_d={c['kernel_block_d']}"))
     return rows
 
 
@@ -210,8 +235,16 @@ def write_kernels_json(path: str | None = None,
         "min_cell_fraction": (
             min(r["cells"] / r["dense_cells"] for r in skipped)
             if skipped else None),
+        "chosen_defaults": _RECORDS["chosen"] or None,
         "service_mixed_rho": _RECORDS["service"] or None,
     }
+    if _RECORDS["chosen"] and os.path.exists(path):
+        try:                        # keep other platforms' chosen rows
+            with open(path) as f:
+                prev = json.load(f).get("chosen_defaults") or {}
+            summary["chosen_defaults"] = {**prev, **_RECORDS["chosen"]}
+        except (OSError, ValueError):
+            pass
     os.makedirs(ART, exist_ok=True)
     wrote = None
     if explicit or common.scale_name() == "tiny":

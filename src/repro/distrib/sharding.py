@@ -22,7 +22,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-__all__ = ["dp_axes", "dp_axis_spec", "fsdpify", "lm_param_specs",
+__all__ = ["dp_axes", "dp_axis_spec", "stream_shard_spec", "fsdpify",
+           "lm_param_specs",
            "lm_opt_specs", "sage_param_specs", "recsys_param_specs",
            "tree_shardings", "batch_specs_lm", "MeshInfo",
            "make_compat_mesh", "compat_shard_map"]
@@ -79,6 +80,14 @@ def dp_axis_spec(mesh: Mesh):
     if not dp:
         return None
     return dp if len(dp) > 1 else dp[0]
+
+
+def stream_shard_spec(mesh: Mesh, axis: str = "model") -> P:
+    """PartitionSpec of a doc-range-partitioned per-query stream: batch
+    over the data-parallel axes, stream columns over the doc shard axis
+    (each shard holds only the postings/scores of docs it owns — the
+    serving engine's partitioned layout, vs the old replicated streams)."""
+    return P(dp_axis_spec(mesh), axis)
 
 
 class MeshInfo:

@@ -19,7 +19,23 @@ from repro.kernels.impact_scan.kernel import posting_blocks
 from repro.kernels.impact_scan.ref import (impact_scan_masked_ref,
                                            impact_scan_ref)
 
-__all__ = ["saat_accumulate"]
+__all__ = ["saat_accumulate", "owned_prefix_len"]
+
+
+def owned_prefix_len(gpos: jnp.ndarray, rho) -> jnp.ndarray:
+    """Shard-local rho for a doc-range-partitioned stream.
+
+    ``gpos`` (Q, cap) is ``partition_postings``' global-stream-position
+    column: strictly increasing over each query's kept (owned) prefix,
+    with the sentinel P on padding.  The owned postings admitted by a
+    global budget ``rho`` therefore form a *prefix* of the local stream,
+    and its length — ``count(gpos < rho)`` — is a drop-in rho vector for
+    ``saat_accumulate`` on the local stream: the same kernel/oracle path
+    serves the partitioned layout with no new masking."""
+    rho_vec = jnp.asarray(rho)
+    if rho_vec.ndim == 0:
+        rho_vec = rho_vec[None]
+    return jnp.sum(gpos < rho_vec[:, None], axis=-1).astype(jnp.int32)
 
 
 def _oracle_stats(rho_vec, seg_bounds, *, qn: int, p: int, n_docs: int,

@@ -61,11 +61,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.retrieval import gold, jass
 from repro.retrieval import topk as topk_lib
-from repro.retrieval.index import block_doc_bounds
+from repro.retrieval.index import (block_doc_bounds, partition_cap,
+                                   partition_postings,
+                                   partition_scored_postings)
 from repro.serving import bucketing
 
 __all__ = ["SchedPrograms", "SchedState", "ServingEngine",
-           "ShardedServingEngine"]
+           "ShardedSchedPrograms", "ShardedServingEngine"]
 
 
 class _PendingCompile:
@@ -406,65 +408,131 @@ class ServingEngine:
         with self._cache_lock:
             return self.n_compiles - before
 
+    # ----------------------------------------------- continuous serving --
+    @property
+    def supports_continuous(self) -> bool:
+        """Whether ``SchedPrograms``/``ContinuousBackend`` can drive this
+        engine (capability check — backends name the missing piece via
+        ``continuous_unsupported_reason`` instead of guessing by type)."""
+        return True
+
+    @property
+    def continuous_unsupported_reason(self) -> str | None:
+        return None
+
 
 # ----------------------------------------------------- mesh-sharded stages --
 # Per-shard bodies (run inside shard_map).  The doc/candidate dimension is
 # sharded over the 'model' axis, request batches over the data axes.  The
-# posting streams stay *replicated* over 'model' — the rho mask is defined
-# on the global impact-ordered stream, so sharding it would change which
-# postings the knob admits — while every (Q, n_docs) accumulator shrinks
-# to (Q, n_docs / n_shards) per device.  Each shard scatter-adds only the
-# contributions of docs it owns; pool selection sends only k-sized
-# survivor lists over the interconnect (collectives.merge_local_topk).
-# The traced rho-mask / pool-width-mask design is unchanged, so the AOT
-# executable count stays O(1) per padded batch shape on any mesh.
+# posting streams are *doc-range partitioned* at gather time
+# (``retrieval.index.partition_postings``): each shard keeps only the
+# postings of docs it owns, compacted into a ~cap/n_shards-wide local
+# stream whose per-posting global stream position (``gpos``) carries the
+# rho bookkeeping — ``count(gpos < rho)`` is the shard-local rho prefix,
+# so the same traced-rho kernel/oracle path runs on 1/n_shards of the
+# stream with no extra masking.  Every (Q, n_docs) accumulator likewise
+# shrinks to (Q, n_docs / n_shards) per device, and pool selection sends
+# only k-sized survivor lists over the interconnect
+# (collectives.gather_local_topk / merge_gathered_topk — split so the
+# all-gather overlaps stage-2 compute).  The traced rho-mask /
+# pool-width-mask design is unchanged, so the AOT executable count stays
+# O(1) per padded batch shape on any mesh.
 
-def _local_accumulate(ds, contrib, *, axis: str, width: int):
-    """This shard's slice of the (Q, n_docs) scatter-add.
+def _sh_gather(offsets, pdoc, pimp, pscore, qt, *, cap: int,
+               shard_cap: int, block_p: int, width: int, axis: str,
+               n_shards: int, slack: float, with_bounds: bool):
+    """Gather + doc-range partition: this shard's slice of the streams.
 
-    Contributions of docs outside [lo, lo + width) are zeroed and land on
-    column 0 — the same inert +0.0 the unsharded path adds for stream
-    padding — so each real doc receives exactly the unsharded sequence of
-    additions and the local block is a bit-identical slice."""
+    The global impact-ordered streams are materialized exactly as on the
+    unsharded path, then split by doc range: owned postings compact into
+    a ``shard_cap``-wide local stream (global order preserved, so every
+    accumulator addition happens in the unsharded sequence), segment
+    bounds are computed on the *local* stream in shard-local coordinates,
+    and the stage-2 score streams partition the same way.  The returned
+    ``over`` vector is the per-query partition overflow (postings dropped
+    because a shard owned more than its slack-capped stream; the engine
+    raises on any nonzero — results would silently be wrong otherwise).
+    """
     lo = jax.lax.axis_index(axis) * width
-    own = (ds >= lo) & (ds < lo + width)
-    c = jnp.where(own, contrib, 0.0)
-    idx = jnp.clip(ds - lo, 0, width - 1)
+    ds, im = jass.gather_streams(offsets, pdoc, pimp, qt, cap=cap)
+    ds_l, im_l, gpos, novf = partition_postings(ds, im, lo, width=width,
+                                                cap=shard_cap)
+    if with_bounds:
+        seg_lo, seg_hi = block_doc_bounds(ds_l, block_p=block_p,
+                                          n_docs=width)
+    else:
+        seg_lo = seg_hi = jnp.zeros((qt.shape[0], 1), jnp.int32)
+    sdocs, s3 = jass.gather_score_streams(offsets, pdoc, pscore, qt,
+                                          cap=cap)
+    # static per trace: the score-stream length is L*cap with L the
+    # (padded) query width of this executable's shape
+    score_cap = partition_cap(sdocs.shape[-1], n_shards, slack)
+    sd_l, s3_l, sovf = partition_scored_postings(sdocs, s3, lo,
+                                                 width=width,
+                                                 cap=score_cap)
+    over = jax.lax.pmax(jnp.maximum(novf, sovf), axis)
+    return ds_l, im_l, seg_lo, seg_hi, gpos, sd_l, s3_l, over
 
-    def one(i, cc):
-        return jnp.zeros(width, jnp.float32).at[i].add(cc)
 
-    return jax.vmap(one)(idx, c)
+def _sh_stage1_local(ds_l, im_l, seg_lo, seg_hi, gpos, pvec, *,
+                     knob: str, axis: str, width: int, kl: int,
+                     use_kernel: bool, interpret: bool, block_p: int,
+                     block_d: int):
+    """Local stage 1 over the owned partition: rho-masked accumulation +
+    this shard's top-``kl`` survivors (values, global doc ids).
 
-
-def _local_scores(ds, im, seg_lo, seg_hi, rho_vec, *, axis: str,
-                  width: int, use_kernel: bool, interpret: bool,
-                  block_p: int, block_d: int):
-    """This shard's (Q, width) slice of the ρ-masked accumulators.
-
-    Kernel path: docs outside [lo, lo + width) are relabeled to the
-    stream-padding sentinel -1 and the Pallas ``impact_scan`` runs on
-    local doc ids with the traced ρ vector; the segment bounds shift to
-    shard-local coordinates, so posting blocks whose doc range misses
-    this shard entirely are skipped at the grid level (a conservative
-    intersection: blocks straddling the shard boundary still run).
-    Dropping a non-owned doc and adding its +0.0 to column 0 (the oracle
-    path below) are the same arithmetic — accumulators only ever sum
-    non-negative terms — so both paths stay bit-identical slices of the
-    unsharded accumulator for the quantized (integer-valued) impacts the
-    index produces."""
-    lo = jax.lax.axis_index(axis) * width
+    The global rho budget translates to the local stream through the
+    prefix property: ``gpos`` is strictly increasing over the compacted
+    owned postings, so the admitted ones are exactly the first
+    ``count(gpos < rho)`` — a drop-in rho vector for the unified
+    kernel/oracle ``saat_scores_masked`` on local doc ids.  No collective
+    runs here; the survivor merge is its own dispatch so its all-gather
+    can overlap stage 2."""
+    if knob == "rho":
+        from repro.kernels.impact_scan.ops import owned_prefix_len
+        rho_l = owned_prefix_len(gpos, pvec)
+    else:
+        # k knob: exhaustive stage-1 scores, budget applied at the pool
+        rho_l = jnp.full(ds_l.shape[:1], ds_l.shape[-1], jnp.int32)
+    acc = jass.saat_scores_masked(ds_l, im_l, rho_l, width,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret,
+                                  seg_bounds=(seg_lo, seg_hi),
+                                  block_p=block_p, block_d=block_d)
     if use_kernel:
-        own = (ds >= lo) & (ds < lo + width)
-        ds_loc = jnp.where(own, ds - lo, -1).astype(jnp.int32)
-        return jass.saat_scores_masked(
-            ds_loc, im, rho_vec, width, use_kernel=True,
-            interpret=interpret, seg_bounds=(seg_lo - lo, seg_hi - lo),
-            block_p=block_p, block_d=block_d)
-    p = ds.shape[-1]
-    mask = (jnp.arange(p)[None, :] < rho_vec[:, None]) & (ds >= 0)
-    return _local_accumulate(ds, jnp.where(mask, im, 0.0),
-                             axis=axis, width=width)
+        from repro.kernels.topk import ops as tk_ops
+        v, i = tk_ops.topk_select(acc, kl, interpret=interpret)
+    else:
+        v, i = jax.lax.top_k(acc, kl)
+    lo = jax.lax.axis_index(axis) * width
+    gi = (i + lo).astype(jnp.int32)
+    return v, gi
+
+
+def _sh_allgather(v, gi, *, axis: str):
+    """The cross-shard survivor all-gather, as its own dispatch: issued
+    asynchronously before stage 2 so the interconnect time hides behind
+    the stage-2 accumulator fetch (the lexsort merge runs after)."""
+    from repro.distrib import collectives
+    return collectives.gather_local_topk(v, gi, axis)
+
+
+def _sh_merge_rho(vflat, gflat, *, depth: int):
+    """The arithmetic half of the pool merge (rho knob): lexsort the
+    gathered survivors down to the global top-``depth`` pool."""
+    from repro.distrib import collectives
+    mv, mg = collectives.merge_gathered_topk(vflat, gflat, depth)
+    return jnp.where(mv > 0, mg, -1)
+
+
+def _sh_merge_k(vflat, gflat, k_vec, *, max_k: int):
+    """Pool merge (k knob): shared static-``max_k`` pool, per-query width
+    as a traced mask — the sharded form of ``_stage1_k``'s tail."""
+    from repro.distrib import collectives
+    mv, mg = collectives.merge_gathered_topk(vflat, gflat, max_k)
+    pool = jnp.where(mv > 0, mg, -1)
+    keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
+    return jnp.where(keep, pool, -1)
 
 
 def _pool_from_local(acc, depth: int, *, axis: str, width: int,
@@ -493,48 +561,30 @@ def _pool_from_local(acc, depth: int, *, axis: str, width: int,
     return jnp.where(mv > 0, mg, -1)
 
 
-def _sh_stage1_rho(ds, im, seg_lo, seg_hi, rho_vec, *, axis: str,
-                   width: int, depth: int, use_kernel: bool,
-                   interpret: bool, block_p: int, block_d: int):
-    acc = _local_scores(ds, im, seg_lo, seg_hi, rho_vec, axis=axis,
-                        width=width, use_kernel=use_kernel,
-                        interpret=interpret, block_p=block_p,
-                        block_d=block_d)
-    return _pool_from_local(acc, depth, axis=axis, width=width,
-                            use_kernel=use_kernel, interpret=interpret)
-
-
-def _sh_stage1_k(ds, im, seg_lo, seg_hi, k_vec, *, axis: str, width: int,
-                 max_k: int, use_kernel: bool, interpret: bool,
-                 block_p: int, block_d: int):
-    # exhaustive stage-1 scores (rho = P) like _stage1_k, pool width as a
-    # traced mask over the shared max-k pool
-    full = jnp.full(ds.shape[:1], ds.shape[-1], jnp.int32)
-    acc = _local_scores(ds, im, seg_lo, seg_hi, full, axis=axis,
-                        width=width, use_kernel=use_kernel,
-                        interpret=interpret, block_p=block_p,
-                        block_d=block_d)
-    pool = _pool_from_local(acc, max_k, axis=axis, width=width,
-                            use_kernel=use_kernel, interpret=interpret)
-    keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
-    return jnp.where(keep, pool, -1)
-
-
-def _sh_stage2(sdocs, s3, doc_len, qids, *, axis: str, width: int,
+def _sh_stage2(sd_l, s3_l, doc_len, qids, *, axis: str, width: int,
                n_docs: int):
-    """Doc-sharded stage 2: local scorer accumulators + the second-stage
-    mixture, with per-query normalization bounds reduced over the mesh
-    (pmin/pmax of local min/max — exact, so bit-identical to the global
-    min/max; padded doc columns are masked out of the bounds)."""
+    """Doc-sharded stage 2 over the *partitioned* score streams: local
+    scorer accumulators + the second-stage mixture, with per-query
+    normalization bounds reduced over the mesh (pmin/pmax of local
+    min/max — exact, so bit-identical to the global min/max; padded doc
+    columns are masked out of the bounds).
+
+    ``sd_l`` carries shard-local doc ids (-1 on padding) straight from
+    ``partition_scored_postings``: the scatter-add touches only owned
+    postings — each shard fetches 1/n_shards of the stream instead of
+    scanning the full replicated one — and the compaction preserved the
+    global addition order, so each accumulator cell sees the unsharded
+    sequence of adds bit for bit (dropped non-owned adds were exact +0.0
+    at foreign cells and never existed locally)."""
     lo = jax.lax.axis_index(axis) * width
-    own = (sdocs >= lo) & (sdocs < lo + width)
-    idx = jnp.clip(sdocs - lo, 0, width - 1)
+    own = sd_l >= 0
+    idx = jnp.clip(sd_l, 0, width - 1)
 
     def one(i, s, ow):
         z = jnp.zeros((width, 3), jnp.float32)
         return z.at[i].add(jnp.where(ow[:, None], s, 0.0))
 
-    acc = jax.vmap(one)(idx, s3, own)            # (Q, width, 3)
+    acc = jax.vmap(one)(idx, s3_l, own)          # (Q, width, 3)
     a_bm25, a_lm, a_tfidf = acc[..., 0], acc[..., 1], acc[..., 2]
     gcols = lo + jnp.arange(width)               # global doc ids here
     real = (gcols < n_docs)[None, :]
@@ -580,29 +630,41 @@ class ShardedServingEngine(ServingEngine):
     accumulator shards over ``axis`` ('model'); request batches shard over
     the data-parallel axes ('pod', 'data').  ``n_docs`` is padded up to a
     multiple of the shard count with inert columns, so uneven shards need
-    no special cases and global doc ids are true row offsets.  Outputs are
-    bit-identical to the unsharded engine (and therefore to
+    no special cases and global doc ids are true row offsets.  The
+    posting and score streams are *doc-range partitioned* at gather time
+    (``stream_shard_spec``: batch over data axes, stream columns over
+    ``axis``) — each shard holds a ``shard_cap``-wide compacted stream of
+    only the postings it owns (``shard_cap ~= slack * cap / n_shards``,
+    ``ServingConfig.partition_slack``), so per-shard gather volume and
+    stage-1/-2 stream reads scale ~1/n_shards.  Outputs are bit-identical
+    to the unsharded engine (and therefore to
     ``pipeline.serve_batch_reference``) — see the per-stage bodies above
-    for why each collective preserves exact arithmetic.
+    for why partitioning and each collective preserve exact arithmetic.
 
     The AOT executable cache, ``warmup``/``warmup_shape``, ``n_compiles``
-    and the serve() surface are inherited unchanged; ``batch_multiple``
-    widens the pad grid to also divide over the data axes, which
+    and the serve() surface are inherited; ``batch_multiple`` widens the
+    pad grid to also divide over the data axes, which
     ``ShardedEngineBackend`` reports as its admission ``pad_multiple``.
+    ``serve`` is overridden to *overlap* the cross-shard pool merge with
+    stage 2: stage 1 ends at the per-shard survivors, the survivor
+    all-gather is issued as its own async dispatch, the stage-2
+    accumulator fetch runs while it is in flight, and the lexsort merge
+    lands last — six executables per padded shape instead of four, still
+    O(1) under churn.
 
     Kernel routing: the Pallas kernels run *inside* the shard_map stage
     bodies on the kernel path (TPU, or ``REPRO_FORCE_KERNEL=1`` in
-    interpret mode).  Each shard hands ``impact_scan`` its local doc
-    slice — stream doc ids relabeled to shard-local coordinates, the
-    traced per-query ρ vector unchanged (the ρ mask is defined on the
-    *global* impact-ordered stream, which stays replicated), and the
-    gather stage's segment bounds shifted by the shard offset so posting
-    blocks whose doc range misses the shard are grid-skipped — and the
-    per-shard local scores feed the blocked top-k kernel
-    (``topk_select``), whose survivors ``merge_local_topk`` combines
-    exactly as on the oracle path.  Output stays bit-identical to the
-    unsharded engine (and to ``pipeline.serve_batch_reference``) on both
-    paths; see ``_local_scores``/``_pool_from_local`` for the argument.
+    interpret mode).  Each shard hands ``impact_scan`` its partitioned
+    local stream — shard-local doc ids, segment bounds computed *on the
+    local stream* in local coordinates (so posting blocks a shard does
+    not own never enter its grid), and the traced per-query ρ vector
+    translated to the local prefix length by ``owned_prefix_len`` — and
+    the per-shard local scores feed the blocked top-k kernel
+    (``topk_select``), whose survivors the split
+    ``gather_local_topk``/``merge_gathered_topk`` pair combines exactly
+    as on the oracle path.  Output stays bit-identical to the unsharded
+    engine on both paths; see ``_sh_gather``/``_sh_stage1_local`` for
+    the argument.
     """
 
     def __init__(self, index, cfg, mesh, *, axis: str = "model",
@@ -621,14 +683,21 @@ class ShardedServingEngine(ServingEngine):
         self.batch_multiple = math.lcm(cfg.pad_multiple, self.dp_size)
         self.doc_pad = bucketing.pad_length(self.n_docs, self.n_shards)
         self.shard_width = self.doc_pad // self.n_shards
+        # per-shard partitioned stream width: ~cap/n_shards with slack
+        # headroom for skewed doc-range ownership (overflow raises)
+        self.shard_cap = partition_cap(cfg.stream_cap, self.n_shards,
+                                       cfg.partition_slack)
 
         dspec = dp_axis_spec(mesh)
         b1, b2 = P(dspec), P(dspec, None)
+        pa = P(dspec, axis)          # partitioned per-query stream rows
         #: per-stage input PartitionSpecs (arg order = serve()'s)
         self._specs = {
             "gather": (P(None), P(None), P(None), P(None, None), b2),
-            "stage1": (b2, b2, b2, b2, b1),
-            "stage2": (b2, P(dspec, None, None), P(axis), b1),
+            "stage1": (pa, pa, pa, pa, pa, b1),
+            "allgather": (pa, pa),
+            "merge": (b2, b2, b1),
+            "stage2": (pa, P(dspec, axis, None), P(axis), b1),
             "rerank": (P(dspec, axis), b2),
         }
         # commit the static inputs to their mesh shardings once, so the
@@ -650,10 +719,22 @@ class ShardedServingEngine(ServingEngine):
             return compat_shard_map(fn, mesh=mesh, in_specs=in_specs,
                                     out_specs=out_specs)
 
+        self._smap = smap
         self._stat = dict(axis=axis, width=self.shard_width)
         self._s1_stat = dict(**self._stat, **self._kern)
-        self._gather = smap(self._gather, self._specs["gather"],
-                            (b2, b2, b2, b2, b2, P(dspec, None, None)))
+        self._gather = smap(
+            functools.partial(_sh_gather, cap=cfg.stream_cap,
+                              shard_cap=self.shard_cap,
+                              block_p=self.block_p,
+                              width=self.shard_width, axis=axis,
+                              n_shards=self.n_shards,
+                              slack=cfg.partition_slack,
+                              with_bounds=self.use_kernel),
+            self._specs["gather"],
+            (pa, pa, pa, pa, pa, pa, P(dspec, axis, None), b1))
+        self._allgather = smap(
+            functools.partial(_sh_allgather, axis=axis),
+            self._specs["allgather"], (b2, b2))
         self._stage2 = smap(
             functools.partial(_sh_stage2, n_docs=self.n_docs,
                               **self._stat),
@@ -662,15 +743,55 @@ class ShardedServingEngine(ServingEngine):
             functools.partial(_sh_rerank, depth=cfg.rerank_depth,
                               **self._stat),
             self._specs["rerank"], b2)
-        self._smap_s1 = lambda fn: smap(fn, self._specs["stage1"], b2)
+
+    # ----------------------------------------------- continuous serving --
+    @property
+    def supports_continuous(self) -> bool:
+        """The sharded continuous scheduler keeps one slot-table replica:
+        a data-parallel mesh would shard the slot rows over queries and
+        the host-side slot bookkeeping does not span dp groups."""
+        return self.dp_size == 1
+
+    @property
+    def continuous_unsupported_reason(self) -> str | None:
+        if self.supports_continuous:
+            return None
+        return (f"the mesh has data-parallel axes {self.dp} (dp_size="
+                f"{self.dp_size}); the sharded continuous scheduler "
+                "needs a model-only mesh — use ShardedEngineBackend's "
+                "batch-once path for data-parallel serving")
 
     def _stage1_for(self, pool_width: int):
+        """Local stage 1 (no collective): per-shard survivors at
+        kl = min(pool depth, shard_width)."""
         if self.cfg.knob == "rho":
-            return ("stage1", self._smap_s1(functools.partial(
-                _sh_stage1_rho, depth=self.cfg.rerank_depth,
-                **self._s1_stat)))
-        return (f"stage1:{pool_width}", self._smap_s1(functools.partial(
-            _sh_stage1_k, max_k=pool_width, **self._s1_stat)))
+            kl = min(self.cfg.rerank_depth, self.shard_width)
+            return ("stage1", self._smap(functools.partial(
+                _sh_stage1_local, knob="rho", kl=kl, **self._s1_stat),
+                self._specs["stage1"],
+                (P(self._specs["stage1"][0][0], self.axis),) * 2))
+        kl = min(pool_width, self.shard_width)
+        name = ("stage1" if pool_width == self.max_k
+                else f"stage1:{pool_width}")
+        return (name, self._smap(functools.partial(
+            _sh_stage1_local, knob="k", kl=kl, **self._s1_stat),
+            self._specs["stage1"],
+            (P(self._specs["stage1"][0][0], self.axis),) * 2))
+
+    def _merge_for(self, pool_width: int):
+        """The lexsort half of the pool merge (runs after the all-gather
+        has been overlapped with stage 2)."""
+        dspec = self._specs["merge"][0][0]
+        b2 = P(dspec, None)
+        if self.cfg.knob == "rho":
+            return ("merge", self._smap(functools.partial(
+                _sh_merge_rho, depth=self.cfg.rerank_depth),
+                self._specs["merge"][:2], b2))
+        name = ("merge" if pool_width == self.max_k
+                else f"merge:{pool_width}")
+        return (name, self._smap(functools.partial(
+            _sh_merge_k, max_k=pool_width),
+            self._specs["merge"], b2))
 
     def _place(self, name: str, j: int, x):
         # commit each stage input to its mesh sharding before the AOT
@@ -678,6 +799,79 @@ class ShardedServingEngine(ServingEngine):
         # and the serving path never reshards
         spec = self._specs[name.split(":")[0]][j]
         return jax.device_put(x, NamedSharding(self.mesh, spec))
+
+    def serve(self, query_terms: np.ndarray, param_vec: np.ndarray,
+              pool_width: int | None = None):
+        """Overlapped sharded pipeline: gather(+partition) → local
+        stage 1 → issue the survivor all-gather → dispatch stage 2 while
+        the collective is in flight → lexsort-merge the pool → rerank.
+
+        Timings: ``stage1_ms`` covers the local stage (dispatch to
+        blocked); ``stage2_ms`` covers stage 2 *including* whatever part
+        of the all-gather it hid; ``merge_ms`` is the residual merge
+        latency after stage 2 landed.
+        """
+        n, qlen = query_terms.shape
+        qt = bucketing.pad_rows(np.asarray(query_terms, np.int32),
+                                self.batch_multiple, fill=-1)
+        pv = bucketing.pad_rows(np.asarray(param_vec, np.int32),
+                                self.batch_multiple, fill=1)
+        qids = np.arange(qt.shape[0], dtype=np.int32)
+
+        timings = {}
+
+        def prep(name, fn, *a):
+            a = tuple(self._place(name, j, jnp.asarray(x))
+                      for j, x in enumerate(a))
+            return self._compiled(name, fn, a), a
+
+        def timed(label, name, fn, *a):
+            exe, a = prep(name, fn, *a)
+            t0 = time.perf_counter()
+            out = exe(*a)
+            jax.block_until_ready(out)
+            timings[label] = (time.perf_counter() - t0) * 1e3
+            return out
+
+        width = int(pool_width or self.max_k)
+        s1_name, s1_fn = self._stage1_for(width)
+        ds_l, im_l, seg_lo, seg_hi, gpos, sd_l, s3_l, over = timed(
+            "gather_ms", "gather", self._gather,
+            self.offsets, self.pdoc, self.pimp, self.pscore, qt)
+        v, gi = timed("stage1_ms", s1_name, s1_fn, ds_l, im_l, seg_lo,
+                      seg_hi, gpos, pv)
+        # issue the cross-shard survivor all-gather, then dispatch stage 2
+        # while it is in flight; the merge consumes the gathered pool last
+        ag_exe, ag_args = prep("allgather", self._allgather, v, gi)
+        ag_out = ag_exe(*ag_args)
+        m_name, m_fn = self._merge_for(width)
+        s2_exe, s2_args = prep("stage2", self._stage2,
+                               sd_l, s3_l, self.doc_len, qids)
+        t0 = time.perf_counter()
+        stage2 = s2_exe(*s2_args)
+        jax.block_until_ready(stage2)
+        timings["stage2_ms"] = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        if self.cfg.knob == "rho":
+            m_exe, m_args = prep(m_name, m_fn, *ag_out)
+        else:
+            m_exe, m_args = prep(m_name, m_fn, *ag_out, pv)
+        pool = m_exe(*m_args)
+        jax.block_until_ready(pool)
+        timings["merge_ms"] = (time.perf_counter() - t0) * 1e3
+        ranked = timed("rerank_ms", "rerank", self._rerank, stage2, pool)
+        ovf = int(np.asarray(over).max())
+        if ovf > 0:
+            raise RuntimeError(
+                f"partition overflow: a shard owned {ovf} more postings "
+                f"than its stream slot (shard_cap={self.shard_cap}, "
+                f"stream_cap={self.cfg.stream_cap}, n_shards="
+                f"{self.n_shards}); raise ServingConfig.partition_slack")
+        ranked = np.asarray(ranked)[:n]
+        if ranked.shape[1] < self.cfg.rerank_depth:
+            pad = self.cfg.rerank_depth - ranked.shape[1]
+            ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
+        return ranked, timings
 
 
 # ------------------------------------------------- scheduler programs --
@@ -696,6 +890,9 @@ class SchedState:
     sdocs: jax.Array     # (S, L*P) int32 stage-2 score-stream doc ids
     s3: jax.Array        # (S, L*P, 3) float32 stage-2 scorer features
     acc: jax.Array       # (S, n_docs) float32 resumable stage-1 scores
+    # sharded programs only: per-posting global stream position of the
+    # partitioned local streams (the rho bookkeeping), sentinel-padded
+    gpos: jax.Array | None = None
 
 
 def _default_chunk_p(p: int) -> int:
@@ -721,34 +918,63 @@ class SchedPrograms:
     back mid-flight (the d2h points are the admission-time stream length
     and the finalize result — the same vetted boundaries as ``serve``).
 
-    Sharded engines are refused: the slot table assumes unsharded
-    (replicated) stage buffers.
+    ``ShardedSchedPrograms`` is the mesh variant over partitioned
+    streams; construct through ``for_engine`` to get the right one (a
+    sharded engine passed to this base class is refused — the base slot
+    table assumes unsharded stage buffers).
     """
+
+    #: host-visible flag the scheduler branches on: sharded programs
+    #: advance per-slot *local* stream cursors (lpos/lend), base programs
+    #: the global ones (pos/end)
+    sharded = False
+
+    @classmethod
+    def for_engine(cls, engine: ServingEngine, *, grain: int,
+                   chunk_p: int | None = None, extra_widths=()):
+        """Construct the program set matching the engine's layout."""
+        if isinstance(engine, ShardedServingEngine):
+            return ShardedSchedPrograms(engine, grain=grain,
+                                        chunk_p=chunk_p,
+                                        extra_widths=extra_widths)
+        return SchedPrograms(engine, grain=grain, chunk_p=chunk_p)
+
+    def _slot_cap(self, engine: ServingEngine) -> int:
+        """Per-slot posting-stream width the chunk geometry tiles (the
+        sharded programs chunk the partitioned local streams)."""
+        return engine.cfg.stream_cap
 
     def __init__(self, engine: ServingEngine, *, grain: int,
                  chunk_p: int | None = None):
-        if isinstance(engine, ShardedServingEngine):
+        if (isinstance(engine, ShardedServingEngine)
+                and not isinstance(self, ShardedSchedPrograms)):
             raise TypeError(
-                "SchedPrograms supports the unsharded ServingEngine only; "
-                "the sharded engine keeps the batch-once path")
+                "SchedPrograms' base slot table assumes unsharded stage "
+                "buffers; build via SchedPrograms.for_engine (or "
+                "ShardedSchedPrograms) for a mesh engine")
         self.engine = engine
         cfg = engine.cfg
-        p = cfg.stream_cap
+        p = self._slot_cap(engine)
         self.grain = int(grain)
+        self.slot_cap = p
         self.chunk_p = int(chunk_p) if chunk_p else _default_chunk_p(p)
         if p % self.chunk_p:
             raise ValueError(
-                f"chunk_p={self.chunk_p} must divide stream_cap={p} so "
-                "chunk windows tile the posting streams exactly")
+                f"chunk_p={self.chunk_p} must divide the per-slot stream "
+                f"width {p} so chunk windows tile the posting streams "
+                "exactly")
         # segment bounds live at the coarsest granularity that still tiles
         # the chunk window, so a chunk's bounds are a contiguous gather
         self.bounds_p = (engine.block_p
                          if self.chunk_p % engine.block_p == 0
                          else self.chunk_p)
         self.n_chunks = p // self.chunk_p
+        self._build_programs()
 
+    def _build_programs(self):
+        engine, cfg = self.engine, self.engine.cfg
         self._gather_fn = functools.partial(
-            _sched_gather, cap=p, bounds_p=self.bounds_p,
+            _sched_gather, cap=cfg.stream_cap, bounds_p=self.bounds_p,
             n_docs=engine.n_docs, with_bounds=engine.use_kernel)
         self._chunk_fn = functools.partial(
             _sched_chunk, chunk_p=self.chunk_p, bounds_p=self.bounds_p,
@@ -789,11 +1015,13 @@ class SchedPrograms:
 
     def gather(self, qt: np.ndarray):
         """Gather one refill group's slot rows.  qt: (grain, L) int32,
-        -1 padded.  Returns (device row tuple, host stream lengths)."""
+        -1 padded.  Returns (device row tuple, host stream lengths,
+        host local-end matrix — None here; the sharded programs fill it
+        with per-candidate-width local stream ends)."""
         e = self.engine
         *rows, slen = self._run("sgather", self._gather_fn, e.offsets,
                                 e.pdoc, e.pimp, e.pscore, qt)
-        return tuple(rows), np.asarray(slen)
+        return tuple(rows), np.asarray(slen), None
 
     def refill(self, state: SchedState, slot_idx: np.ndarray,
                rows) -> SchedState:
@@ -842,7 +1070,7 @@ class SchedPrograms:
         g = self.grain
         state = self.init_state(slots, query_len)
         qt = np.full((g, query_len), -1, np.int32)
-        rows, _ = self.gather(qt)
+        rows, _, _ = self.gather(qt)
         state = self.refill(state, np.full(g, slots, np.int32), rows)
         zeros = np.zeros(slots, np.int32)
         state = self.chunk(state, zeros, zeros)
@@ -850,3 +1078,311 @@ class SchedPrograms:
                       np.ones(g, np.int32), np.zeros(g, np.int32))
         with e._cache_lock:
             return e.n_compiles - before
+
+
+# --------------------------------------- sharded scheduler stage bodies --
+# shard_map bodies of ``ShardedSchedPrograms``: the continuous-batching
+# slot table over doc-range-partitioned streams.  Each slot's posting
+# stream is the ``shard_cap``-wide compacted local stream from
+# ``partition_postings``; chunk windows advance a *local* cursor per
+# shard, and the global rho budget applies through the stored global
+# stream positions (``gpos``) exactly as in the batch-once sharded path.
+
+def _ssched_gather(offsets, pdoc, pimp, pscore, qt, *, cap: int,
+                   shard_cap: int, bounds_p: int, width: int, axis: str,
+                   n_shards: int, slack: float, with_bounds: bool,
+                   widths: tuple):
+    """Per-request slot rows, partitioned, plus the host metadata row.
+
+    The host schedules per-slot *local* cursors but cannot see per-shard
+    stream lengths without a transfer, so this program folds everything
+    it needs into one replicated ``meta`` matrix (a single d2h):
+    column 0 the global stream length, column 1 the partition overflow
+    (max over shards; the host raises on nonzero), columns 2.. the
+    worst-shard local stream end ``max_s count(gpos_s < min(w, slen))``
+    for every static candidate budget ``w`` in ``widths`` — the retire
+    bound for whichever budget admission later picks."""
+    lo = jax.lax.axis_index(axis) * width
+    ds, im = jass.gather_streams(offsets, pdoc, pimp, qt, cap=cap)
+    slen = jnp.sum(ds >= 0, axis=-1).astype(jnp.int32)
+    ds_l, im_l, gpos, novf = partition_postings(ds, im, lo, width=width,
+                                                cap=shard_cap)
+    if with_bounds:
+        seg_lo, seg_hi = block_doc_bounds(ds_l, block_p=bounds_p,
+                                          n_docs=width)
+    else:
+        seg_lo = seg_hi = jnp.zeros((qt.shape[0], 1), jnp.int32)
+    sdocs, s3 = jass.gather_score_streams(offsets, pdoc, pscore, qt,
+                                          cap=cap)
+    score_cap = partition_cap(sdocs.shape[-1], n_shards, slack)
+    sd_l, s3_l, sovf = partition_scored_postings(sdocs, s3, lo,
+                                                 width=width,
+                                                 cap=score_cap)
+    wvec = jnp.asarray(widths, jnp.int32)               # (W,) static grid
+    endw = jnp.minimum(wvec[None, :], slen[:, None])    # (G, W)
+    lend = jnp.sum(gpos[:, None, :] < endw[:, :, None],
+                   axis=-1).astype(jnp.int32)
+    lmax = jax.lax.pmax(lend, axis)
+    ovf = jax.lax.pmax(jnp.maximum(novf, sovf), axis)
+    meta = jnp.concatenate([slen[:, None], ovf[:, None], lmax], axis=1)
+    return ds_l, im_l, seg_lo, seg_hi, gpos, sd_l, s3_l, meta
+
+
+def _ssched_refill(ds_b, im_b, lo_b, hi_b, gp_b, sd_b, s3_b, acc,
+                   slot_idx, ds, im, lo, hi, gp, sd, s3):
+    """``_sched_refill`` plus the gpos buffer (8 buffers)."""
+    drop = dict(mode="drop")
+    return (ds_b.at[slot_idx].set(ds, **drop),
+            im_b.at[slot_idx].set(im, **drop),
+            lo_b.at[slot_idx].set(lo, **drop),
+            hi_b.at[slot_idx].set(hi, **drop),
+            gp_b.at[slot_idx].set(gp, **drop),
+            sd_b.at[slot_idx].set(sd, **drop),
+            s3_b.at[slot_idx].set(s3, **drop),
+            acc.at[slot_idx].set(0.0, **drop))
+
+
+def _ssched_chunk(ds_b, im_b, lo_b, hi_b, gp_b, acc, pos, end, *,
+                  chunk_p: int, bounds_p: int, width: int,
+                  use_kernel: bool, interpret: bool, block_d: int):
+    """One resumable stage-1 step over the partitioned slot table.
+
+    ``pos`` is the per-slot *local* chunk cursor (multiples of
+    ``chunk_p``; the host advances it to the worst-shard local end),
+    ``end`` the per-slot *global* rho budget.  The window's admitted
+    postings are those with ``gpos < end`` — a prefix of the window,
+    since gpos is increasing along the compacted stream — so the count
+    is a drop-in window rho for the same masked accumulate as the base
+    program.  A shard whose local stream ended before ``pos`` sees
+    count 0 and adds exact zeros, so slots retire at the worst shard's
+    end without per-shard host bookkeeping."""
+    lc = ds_b.shape[-1]
+    off = pos[:, None] + jnp.arange(chunk_p, dtype=jnp.int32)[None, :]
+    idx = jnp.minimum(off, lc - 1)      # dead clamp: pos < lend <= lc
+    ds = jnp.take_along_axis(ds_b, idx, axis=1)
+    im = jnp.take_along_axis(im_b, idx, axis=1)
+    gp = jnp.take_along_axis(gp_b, idx, axis=1)
+    rho_rem = jnp.sum(gp < end[:, None], axis=-1).astype(jnp.int32)
+    if use_kernel:
+        nb = chunk_p // bounds_p
+        bidx = (pos[:, None] // bounds_p
+                + jnp.arange(nb, dtype=jnp.int32)[None, :])
+        bidx = jnp.minimum(bidx, lo_b.shape[-1] - 1)
+        seg = (jnp.take_along_axis(lo_b, bidx, axis=1),
+               jnp.take_along_axis(hi_b, bidx, axis=1))
+    else:
+        seg = None
+    inc = jass.saat_scores_masked(ds, im, rho_rem, width,
+                                  use_kernel=use_kernel,
+                                  interpret=interpret, seg_bounds=seg,
+                                  block_p=bounds_p, block_d=block_d)
+    return acc + inc
+
+
+def _ssched_finalize_rho(acc, sd_b, s3_b, slot_idx, qids, doc_len, *,
+                         depth: int, axis: str, width: int, n_docs: int,
+                         use_kernel: bool, interpret: bool):
+    """Sharded stages 1b-3 for a retiring group: cross-shard pool merge
+    over the finished local accumulator rows, partitioned stage 2,
+    pmax-assembled rerank — the batch-once sharded tail on slot rows."""
+    rows = acc[slot_idx]
+    pool = _pool_from_local(rows, depth, axis=axis, width=width,
+                            use_kernel=use_kernel, interpret=interpret)
+    stage2 = _sh_stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
+                        axis=axis, width=width, n_docs=n_docs)
+    return _sh_rerank(stage2, pool, axis=axis, width=width, depth=depth)
+
+
+def _ssched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, qids, doc_len, *,
+                       depth: int, max_k: int, axis: str, width: int,
+                       n_docs: int, use_kernel: bool, interpret: bool):
+    rows = acc[slot_idx]
+    pool = _pool_from_local(rows, max_k, axis=axis, width=width,
+                            use_kernel=use_kernel, interpret=interpret)
+    keep = jnp.arange(pool.shape[-1])[None, :] < k_vec[:, None]
+    pool = jnp.where(keep, pool, -1)
+    stage2 = _sh_stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
+                        axis=axis, width=width, n_docs=n_docs)
+    return _sh_rerank(stage2, pool, axis=axis, width=width, depth=depth)
+
+
+class ShardedSchedPrograms(SchedPrograms):
+    """``SchedPrograms`` over a ``ShardedServingEngine``'s partitioned
+    streams: the same four fixed-shape programs, with chunk windows that
+    advance per-shard over the ``shard_cap``-wide local streams.
+
+    Chunk geometry derives from ``shard_cap`` (not the global
+    ``stream_cap``), so a chunk step reads ~1/n_shards of the postings a
+    replicated layout would.  Zero-compiles-under-churn carries over
+    unchanged: every program's shapes are fixed at construction, the
+    candidate-budget grid (``widths``) is static, and per-slot cursors
+    stay traced operands.  Retirement needs one extra host fact — the
+    worst-shard local stream end for the slot's budget — which the
+    gather program precomputes for every static budget and ships in the
+    single ``meta`` d2h (no mid-flight readbacks).
+
+    Bit-identity: each slot's accumulator rows receive exactly the
+    batch-once sharded engine's additions (same partitioned streams,
+    same window masks summing to the same per-posting admits), and
+    finalize runs the batch-once sharded tail verbatim.
+    """
+
+    sharded = True
+
+    def __init__(self, engine: ServingEngine, *, grain: int,
+                 chunk_p: int | None = None, extra_widths=()):
+        if not isinstance(engine, ShardedServingEngine):
+            raise TypeError("ShardedSchedPrograms needs a "
+                            "ShardedServingEngine; use SchedPrograms "
+                            "(or for_engine) for the unsharded engine")
+        if not engine.supports_continuous:
+            raise TypeError("ShardedSchedPrograms: "
+                            + engine.continuous_unsupported_reason)
+        self._extra_widths = tuple(int(w) for w in extra_widths)
+        super().__init__(engine, grain=grain, chunk_p=chunk_p)
+
+    def _slot_cap(self, engine: ServingEngine) -> int:
+        return engine.shard_cap
+
+    def lend_col(self, width: int) -> int:
+        """meta column (minus the 2-column prefix) of the local-end bound
+        for a slot whose global budget is ``min(width, slen)``."""
+        return self.width_col[min(int(width), self.engine.cfg.stream_cap)]
+
+    def _build_programs(self):
+        e, cfg = self.engine, self.engine.cfg
+        cap = cfg.stream_cap
+        # the static candidate-budget grid: every global end the
+        # scheduler can assign is min(w, slen) for one of these w —
+        # cutoff widths (rho knob), the full cap (k knob / stream
+        # exhaustion), and any fixed-sweep extras
+        ws = {min(int(c), cap) for c in cfg.cutoffs} | {cap}
+        ws |= {min(int(w), cap) for w in self._extra_widths}
+        self.widths = tuple(sorted(ws))
+        self.width_col = {w: i for i, w in enumerate(self.widths)}
+
+        axis, width = e.axis, e.shard_width
+        ss, ss3 = P(None, axis), P(None, axis, None)
+        r1, r2, sacc = P(None), P(None, None), P(None, axis)
+        #: per-program input PartitionSpecs — ``_run`` commits every host
+        #: arg to these before the AOT lookup (the executables bake their
+        #: input shardings at lowering)
+        self._arg_specs = {
+            "sgather": (P(None), P(None), P(None), P(None, None), r2),
+            "refill": (ss, ss, ss, ss, ss, ss, ss3, sacc, r1,
+                       ss, ss, ss, ss, ss, ss, ss3),
+            "chunk": (ss, ss, ss, ss, ss, sacc, r1, r1),
+            "finalize": ((sacc, ss, ss3, r1, r1, P(axis))
+                         if cfg.knob == "rho"
+                         else (sacc, ss, ss3, r1, r1, r1, P(axis))),
+        }
+        smap = e._smap
+        self._gather_fn = smap(
+            functools.partial(_ssched_gather, cap=cap,
+                              shard_cap=e.shard_cap,
+                              bounds_p=self.bounds_p, width=width,
+                              axis=axis, n_shards=e.n_shards,
+                              slack=cfg.partition_slack,
+                              with_bounds=e.use_kernel,
+                              widths=self.widths),
+            self._arg_specs["sgather"],
+            (ss, ss, ss, ss, ss, ss, ss3, r2))
+        self._refill_fn = smap(_ssched_refill, self._arg_specs["refill"],
+                               (ss, ss, ss, ss, ss, ss, ss3, sacc))
+        self._chunk_fn = smap(
+            functools.partial(_ssched_chunk, chunk_p=self.chunk_p,
+                              bounds_p=self.bounds_p, width=width,
+                              use_kernel=e.use_kernel,
+                              interpret=e.interpret, block_d=e.block_d),
+            self._arg_specs["chunk"], sacc)
+        common = dict(depth=cfg.rerank_depth, axis=axis, width=width,
+                      n_docs=e.n_docs, use_kernel=e.use_kernel,
+                      interpret=e.interpret)
+        if cfg.knob == "rho":
+            self._final_fn = smap(
+                functools.partial(_ssched_finalize_rho, **common),
+                self._arg_specs["finalize"], r2)
+        else:
+            self._final_fn = smap(
+                functools.partial(_ssched_finalize_k, max_k=e.max_k,
+                                  **common),
+                self._arg_specs["finalize"], r2)
+
+    def _run(self, name: str, fn, *args):
+        # the AOT executables bake their input shardings at lowering, so
+        # every arg — host scalars and device buffers alike — is
+        # committed to its program spec first (a no-op for buffers
+        # already placed by the previous program's out specs)
+        mesh = self.engine.mesh
+        a = tuple(jax.device_put(jnp.asarray(x), NamedSharding(mesh, s))
+                  for x, s in zip(args, self._arg_specs[name]))
+        return self.engine._compiled(name, fn, a)(*a)
+
+    def init_state(self, slots: int, query_len: int) -> SchedState:
+        """Fresh slot table over the partitioned layout: every buffer is
+        the *global* view of per-shard blocks (stream columns sharded
+        over the mesh axis) and is committed to its program sharding up
+        front.  gpos pads at the stream-cap sentinel (never < any
+        budget), local segment bounds start at the local empty interval
+        (shard_width, -1)."""
+        e = self.engine
+        s = e.n_shards
+        lc = e.shard_cap
+        nb = lc // self.bounds_p if e.use_kernel else 1
+        lp = partition_cap(query_len * e.cfg.stream_cap, s,
+                           e.cfg.partition_slack)
+        mesh, axis = e.mesh, e.axis
+
+        def put(x, spec):
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        ss, ss3, sacc = P(None, axis), P(None, axis, None), P(None, axis)
+        return SchedState(
+            ds=put(np.full((slots, s * lc), -1, np.int32), ss),
+            im=put(np.full((slots, s * lc), -1.0, np.float32), ss),
+            seg_lo=put(np.full((slots, s * nb), e.shard_width, np.int32),
+                       ss),
+            seg_hi=put(np.full((slots, s * nb), -1, np.int32), ss),
+            sdocs=put(np.full((slots, s * lp), -1, np.int32), ss),
+            s3=put(np.zeros((slots, s * lp, 3), np.float32), ss3),
+            acc=put(np.zeros((slots, e.doc_pad), np.float32), sacc),
+            gpos=put(np.full((slots, s * lc), e.cfg.stream_cap,
+                             np.int32), ss),
+        )
+
+    def gather(self, qt: np.ndarray):
+        """Partitioned slot rows + the single-d2h host metadata: returns
+        (rows, global stream lengths, (G, W) local-end matrix indexed by
+        ``lend_col``).  Raises on partition overflow."""
+        e = self.engine
+        *rows, meta = self._run("sgather", self._gather_fn, e.offsets,
+                                e.pdoc, e.pimp, e.pscore, qt)
+        m = np.asarray(meta)
+        slen, ovf, lend = m[:, 0], m[:, 1], m[:, 2:]
+        worst = int(ovf.max()) if ovf.size else 0
+        if worst > 0:
+            raise RuntimeError(
+                f"partition overflow: a shard owned {worst} more "
+                f"postings than its stream slot (shard_cap={e.shard_cap},"
+                f" stream_cap={e.cfg.stream_cap}, n_shards={e.n_shards});"
+                " raise ServingConfig.partition_slack")
+        return tuple(rows), slen, lend
+
+    def refill(self, state: SchedState, slot_idx: np.ndarray,
+               rows) -> SchedState:
+        out = self._run("refill", self._refill_fn, state.ds, state.im,
+                        state.seg_lo, state.seg_hi, state.gpos,
+                        state.sdocs, state.s3, state.acc, slot_idx,
+                        *rows)
+        ds, im, lo, hi, gp, sd, s3, acc = out
+        return SchedState(ds=ds, im=im, seg_lo=lo, seg_hi=hi, sdocs=sd,
+                          s3=s3, acc=acc, gpos=gp)
+
+    def chunk(self, state: SchedState, pos: np.ndarray,
+              end: np.ndarray) -> SchedState:
+        """Advance every active slot by one *local* chunk window (``pos``
+        is the local cursor; ``end`` stays the global rho budget)."""
+        acc = self._run("chunk", self._chunk_fn, state.ds, state.im,
+                        state.seg_lo, state.seg_hi, state.gpos,
+                        state.acc, pos, end)
+        return dataclasses.replace(state, acc=acc)

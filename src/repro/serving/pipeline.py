@@ -52,6 +52,10 @@ class ServingConfig:
     #                               REPRO_FORCE_KERNEL=1), jnp oracle else
     kernel_block_p: int = 512       # impact_scan posting-block size
     kernel_block_d: int = 2048      # impact_scan doc-tile size
+    partition_slack: float = 2.0    # per-shard stream headroom multiplier
+    #                               (sharded engine: shard stream cap =
+    #                               ~slack * cap / n_shards, overflow is
+    #                               detected and raised loudly)
 
 
 class RetrievalServer:

@@ -65,8 +65,13 @@ class ContinuousScheduler:
             raise ValueError(
                 f"grain={self.grain} exceeds slots={self.slots}: a full "
                 "retire group must fit the table or finalize can starve")
-        self.prog = SchedPrograms(engine, grain=self.grain,
-                                  chunk_p=chunk_p)
+        # for_engine picks the sharded program set on a mesh engine; the
+        # fixed arm's budget joins the static candidate-width grid so its
+        # local retire bounds are in the admission meta like any cutoff
+        self.prog = SchedPrograms.for_engine(
+            engine, grain=self.grain, chunk_p=chunk_p,
+            extra_widths=(() if fixed_param is None
+                          else (int(fixed_param),)))
         self.window = int(window) if window else 2 * self.grain
         self.co_group = bool(co_group)
         self.fixed_param = (None if fixed_param is None
@@ -116,6 +121,7 @@ class ContinuousScheduler:
                 "slots": self.slots,
                 "grain": self.grain,
                 "chunk_p": self.prog.chunk_p,
+                "sharded": self.prog.sharded,
             }
 
     # ---------------------------------------------------------- finalize --
@@ -264,7 +270,7 @@ class ContinuousScheduler:
         if self._state is None:
             self._state = self.prog.init_state(self.slots, self.query_len)
         qt = self._rows(group)
-        rows, slen = self.prog.gather(qt)
+        rows, slen, lend = self.prog.gather(qt)
         with self._lock:
             taken = [self.table.acquire() for _ in group]
             self.n_refill_calls += 1
@@ -292,8 +298,22 @@ class ContinuousScheduler:
                 s.chunks = 0
                 sl = int(slen[i])
                 s.end = min(s.width, sl) if self.knob == "rho" else sl
+                if self.prog.sharded:
+                    # the worst shard's local stream end for this slot's
+                    # budget, precomputed in the admission meta; the
+                    # local cursor retires against it (lend == 0 exactly
+                    # when end == 0 — global position 0 is owned by some
+                    # shard whenever any posting is admitted)
+                    col = self.prog.lend_col(
+                        s.width if self.knob == "rho"
+                        else self.server.cfg.stream_cap)
+                    s.lpos = 0
+                    s.lend = int(lend[i, col])
+                    done = s.lpos >= s.lend
+                else:
+                    done = s.pos >= s.end
                 self.n_admitted += 1
-                if s.pos >= s.end:     # empty stream: retire immediately
+                if done:               # empty stream: retire immediately
                     self._retire(s, t, occ)
 
     # ------------------------------------------------------------- chunk --
@@ -302,10 +322,13 @@ class ContinuousScheduler:
             act = self.table.active()
             if not act:
                 return 0
+            sharded = self.prog.sharded
             pos = np.zeros(self.slots, np.int32)
             end = np.zeros(self.slots, np.int32)
             for s in act:
-                pos[s.idx] = s.pos
+                # sharded programs window the *local* partitioned stream;
+                # the device mask still applies the global rho budget
+                pos[s.idx] = s.lpos if sharded else s.pos
                 end[s.idx] = s.end
             self.n_chunk_calls += 1
         self._state = self.prog.chunk(self._state, pos, end)
@@ -313,9 +336,14 @@ class ContinuousScheduler:
             occ = self.table.n_occupied / self.slots
             cp = self.prog.chunk_p
             for s in act:
-                s.pos = min(s.pos + cp, s.end)
                 s.chunks += 1
-                if s.pos >= s.end:
+                if sharded:
+                    s.lpos = min(s.lpos + cp, s.lend)
+                    done = s.lpos >= s.lend
+                else:
+                    s.pos = min(s.pos + cp, s.end)
+                    done = s.pos >= s.end
+                if done:
                     self._retire(s, t, occ)
         return 1
 

@@ -217,11 +217,13 @@ class ContinuousBackend:
                  slots: int = 32, grain: int | None = None,
                  chunk_p: int | None = None, window: int | None = None,
                  co_group: bool = True, fixed_param: int | None = None):
-        from repro.serving.engine import ShardedServingEngine
-        if isinstance(server.engine, ShardedServingEngine):
-            raise TypeError(
-                "ContinuousBackend supports the unsharded engine only; "
-                "use ShardedEngineBackend's batch-once path on a mesh")
+        # capability check, not a type check: the sharded engine drives
+        # the scheduler fine on a model-only mesh; the engine itself
+        # names what is missing when it cannot (e.g. data-parallel axes)
+        eng = server.engine
+        if not getattr(eng, "supports_continuous", True):
+            raise TypeError("ContinuousBackend: "
+                            + eng.continuous_unsupported_reason)
         self.server = server
         self.pad_multiple = server.engine.batch_multiple
         self.n_classes = len(server.cfg.cutoffs) + 1

@@ -1,0 +1,164 @@
+"""Doc-range partition primitives: order preservation, ragged shard
+widths, zero-posting shards, overflow accounting, and the S=1 identity.
+
+These are the pure-array contracts the sharded engine builds on
+(``partition_postings`` / ``partition_scored_postings`` /
+``partition_cap``); the end-to-end bit-identity lives in
+test_sharded_serving / test_sharded_sched."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.impact_scan.ops import owned_prefix_len
+from repro.retrieval.index import (block_doc_bounds, partition_cap,
+                                   partition_postings,
+                                   partition_scored_postings)
+
+
+def _streams(rng, qn, p, n_docs):
+    """Impact-ordered-style streams: doc ids with a -1 padded tail."""
+    ds = rng.integers(0, n_docs, (qn, p)).astype(np.int32)
+    lens = rng.integers(1, p + 1, qn)
+    ds[np.arange(p)[None, :] >= lens[:, None]] = -1
+    im = np.where(ds >= 0, rng.integers(1, 250, (qn, p)), -1.0)
+    return jnp.asarray(ds), jnp.asarray(im.astype(np.float32)), lens
+
+
+def _shard_bounds(n_docs, n_shards):
+    """Doc-range bounds with the engine's geometry: equal widths over the
+    padded doc count, so the last shard is ragged when S ∤ n_docs."""
+    width = -(-n_docs // n_shards)
+    return [(s * width, width) for s in range(n_shards)], width
+
+
+def test_partition_preserves_global_order_and_localizes_ids():
+    rng = np.random.default_rng(3)
+    ds, im, _ = _streams(rng, qn=5, p=64, n_docs=37)
+    bounds, width = _shard_bounds(37, 4)
+    cap = partition_cap(64, 4, slack=2.0)
+    for lo, w in bounds:
+        dsl, iml, gpos, ovf = partition_postings(
+            ds, im, jnp.int32(lo), width=w, cap=cap)
+        assert int(ovf.max()) == 0
+        for q in range(5):
+            row = np.asarray(ds[q])
+            own = np.nonzero((row >= lo) & (row < lo + w))[0]
+            n = len(own)
+            # owned postings land in the leading columns, in global
+            # stream order, with shard-local doc ids and original impacts
+            np.testing.assert_array_equal(np.asarray(gpos[q])[:n], own)
+            np.testing.assert_array_equal(
+                np.asarray(dsl[q])[:n], row[own] - lo)
+            np.testing.assert_array_equal(
+                np.asarray(iml[q])[:n], np.asarray(im[q])[own])
+            # padding is inert: -1 ids, -1 impacts, sentinel positions
+            assert (np.asarray(dsl[q])[n:] == -1).all()
+            assert (np.asarray(iml[q])[n:] == -1.0).all()
+            assert (np.asarray(gpos[q])[n:] == ds.shape[1]).all()
+
+
+def test_partition_shards_reconstruct_the_stream():
+    """Across shards, every real posting is owned exactly once and the
+    union of (gpos -> global doc) mappings rebuilds the stream — uneven
+    n_docs % n_shards (301 % 4) exercises the ragged last shard."""
+    rng = np.random.default_rng(7)
+    ds, im, lens = _streams(rng, qn=4, p=96, n_docs=301)
+    bounds, width = _shard_bounds(301, 4)
+    cap = partition_cap(96, 4, slack=2.0)
+    rebuilt = np.full((4, 96), -1, np.int32)
+    for lo, w in bounds:
+        dsl, _, gpos, ovf = partition_postings(
+            ds, im, jnp.int32(lo), width=w, cap=cap)
+        assert int(ovf.max()) == 0
+        g, l = np.asarray(gpos), np.asarray(dsl)
+        for q in range(4):
+            keep = l[q] >= 0
+            assert (rebuilt[q][g[q][keep]] == -1).all(), "double ownership"
+            rebuilt[q][g[q][keep]] = l[q][keep] + lo
+    np.testing.assert_array_equal(rebuilt, np.asarray(ds))
+
+
+def test_partition_gpos_prefix_matches_rho():
+    """count(gpos < rho) is the shard-local rho: scanning that local
+    prefix touches exactly the owned members of the global rho prefix."""
+    rng = np.random.default_rng(11)
+    ds, im, _ = _streams(rng, qn=6, p=80, n_docs=40)
+    dsl, _, gpos, _ = partition_postings(
+        ds, im, jnp.int32(10), width=10, cap=80)
+    for rho in (0, 1, 17, 80):
+        lr = np.asarray(owned_prefix_len(gpos, jnp.int32(rho)))
+        for q in range(6):
+            row = np.asarray(ds[q])[:rho]
+            assert lr[q] == int(((row >= 10) & (row < 20)).sum())
+
+
+def test_partition_zero_posting_shard_is_all_padding():
+    """A shard owning no postings for a query yields a pure-padding row
+    whose block bounds are all empty intervals (the kernel skips them)."""
+    ds = jnp.asarray([[3, 1, 2, -1, -1, -1, -1, -1]], jnp.int32)
+    im = jnp.where(ds >= 0, 5.0, -1.0)
+    dsl, iml, gpos, ovf = partition_postings(
+        ds, im, jnp.int32(100), width=50, cap=8)
+    assert (np.asarray(dsl) == -1).all()
+    assert (np.asarray(iml) == -1.0).all()
+    assert (np.asarray(gpos) == 8).all()
+    assert int(ovf[0]) == 0
+    lo_b, hi_b = block_doc_bounds(dsl, block_p=4, n_docs=50)
+    assert (np.asarray(lo_b) == 50).all() and (np.asarray(hi_b) == -1).all()
+
+
+def test_partition_overflow_counts_dropped_postings():
+    """cap smaller than the owned count: the kept prefix is the first
+    ``cap`` owned postings and overflow reports exactly the rest."""
+    ds = jnp.asarray([np.arange(16) % 4], jnp.int32)     # all owned
+    im = jnp.full((1, 16), 2.0, jnp.float32)
+    dsl, _, gpos, ovf = partition_postings(
+        ds, im, jnp.int32(0), width=4, cap=8)
+    assert int(ovf[0]) == 16 - 8
+    np.testing.assert_array_equal(np.asarray(gpos[0]), np.arange(8))
+    np.testing.assert_array_equal(np.asarray(dsl[0]), np.arange(8) % 4)
+
+
+def test_partition_scored_postings_matches_and_zero_pads():
+    rng = np.random.default_rng(13)
+    sd = jnp.asarray(rng.integers(-1, 30, (3, 24)).astype(np.int32))
+    s3 = jnp.asarray(rng.normal(size=(3, 24, 3)).astype(np.float32))
+    sdl, s3l, ovf = partition_scored_postings(
+        sd, s3, jnp.int32(10), width=10, cap=24)
+    assert int(ovf.max()) == 0
+    for q in range(3):
+        row = np.asarray(sd[q])
+        own = np.nonzero((row >= 10) & (row < 20))[0]
+        n = len(own)
+        np.testing.assert_array_equal(np.asarray(sdl[q])[:n], row[own] - 10)
+        np.testing.assert_array_equal(
+            np.asarray(s3l[q])[:n], np.asarray(s3[q])[own])
+        assert (np.asarray(sdl[q])[n:] == -1).all()
+        assert (np.asarray(s3l[q])[n:] == 0.0).all()   # zero pad: stage-2
+        # scatter-adds the padding tail harmlessly into doc slot 0
+
+
+def test_partition_cap_properties():
+    assert partition_cap(128, 1, 2.0) == 128          # S=1: identity
+    for cap, s, slack in ((128, 4, 2.0), (128, 2, 1.5), (96, 8, 3.0),
+                          (7, 4, 1.0)):
+        c = partition_cap(cap, s, slack)
+        assert (c % 8 == 0 or c == cap) and 0 < c <= cap
+        assert c * s >= cap or c == cap               # slack >= 1 covers
+    # headroom grows with slack, never past the full stream
+    assert partition_cap(128, 4, 1.0) <= partition_cap(128, 4, 2.0) <= 128
+
+
+def test_partition_one_shard_is_identity():
+    rng = np.random.default_rng(17)
+    ds, im, _ = _streams(rng, qn=3, p=32, n_docs=20)
+    dsl, iml, gpos, ovf = partition_postings(
+        ds, im, jnp.int32(0), width=20, cap=32)
+    np.testing.assert_array_equal(np.asarray(dsl), np.asarray(ds))
+    np.testing.assert_array_equal(np.asarray(iml), np.asarray(im))
+    assert int(ovf.max()) == 0
+    real = np.asarray(ds) >= 0
+    np.testing.assert_array_equal(
+        np.asarray(gpos)[real],
+        np.broadcast_to(np.arange(32), (3, 32))[real])
