@@ -42,7 +42,8 @@ FULL_JSON = os.path.join(ART, "BENCH_serving_full.json")
 
 #: filled by bench_continuous_scheduler / bench_paced_deadlines; the
 #: committed summary is assembled from these (deterministic fields only)
-_RECORDS: dict = {"scheduler": None, "deadline": None, "sharded": None}
+_RECORDS: dict = {"scheduler": None, "deadline": None, "sharded": None,
+                  "knobs": None}
 
 
 def _build_server():
@@ -166,33 +167,62 @@ def bench_admission_service() -> list[tuple]:
     ]
 
 
-def _build_rho_server():
-    """The continuous race's server: knob=rho (the anytime-work knob the
-    scheduler retires against) with *stubbed* content-hash classes.
+def _hash_rows(qt):
+    qt = np.asarray(qt)
+    return np.where(qt >= 0, qt, 0).sum(axis=1) + (qt >= 0).sum(axis=1)
 
-    The stub is deliberate: the committed summary carries dispatch
-    counts, and integer-hash classes make them platform-exact, where a
-    trained forest's float thresholds could flip a borderline query
-    between classes across BLAS builds and dirty the diff-checked file.
-    The cascade's forward cost is measured by bench_dynamic_vs_fixed;
-    this bench isolates what early retirement saves."""
+
+def _build_knob_server(primary: str, *, with_depth: bool = False):
+    """A continuous-race server on the chosen primary knob (rho = the
+    anytime-work knob the scheduler retires against, k = the pool-width
+    knob), classes *stubbed* as content hashes; ``with_depth`` also
+    registers the depth knob, stubbed from a decorrelated hash.
+
+    The stubs are deliberate: the committed summary carries dispatch and
+    stage-2 row counts, and integer-hash classes make them
+    platform-exact, where a trained forest's float thresholds could flip
+    a borderline query between classes across BLAS builds and dirty the
+    diff-checked file.  The cascade's forward cost is measured by
+    bench_dynamic_vs_fixed; these benches isolate what early retirement
+    and prefix-masked reranking save."""
     from benchmarks import common
+    from repro.core import knobs as knobs_lib
     from repro.serving import pipeline as sp
 
     sys_ = common.get_system()
-    cfg = sp.ServingConfig(knob="rho", cutoffs=sys_.rho_cutoffs,
-                           rerank_depth=100,
-                           stream_cap=sys_.cfg.stream_cap)
+    cuts = sys_.rho_cutoffs if primary == "rho" else sys_.k_cutoffs
+    dgrid = None
+    if with_depth:
+        pool = 100 if primary == "rho" else int(max(cuts))
+        dgrid = knobs_lib.depth_cutoffs(pool)
+    cfg = sp.ServingConfig(knob=primary, cutoffs=cuts, rerank_depth=100,
+                           stream_cap=sys_.cfg.stream_cap,
+                           depth_cutoffs=dgrid)
     server = sp.RetrievalServer(sys_.index, None, cfg)
-    n_cls = len(sys_.rho_cutoffs) + 1
+    n_cls = len(cuts) + 1
+    real = server.predict_classes
 
-    def classes_of(qt):
-        qt = np.asarray(qt)
-        h = np.where(qt >= 0, qt, 0).sum(axis=1) + (qt >= 0).sum(axis=1)
-        return (h % n_cls).astype(np.int64)
+    def classes_of(qt, knob=None):
+        if knob not in (None, primary):    # depth etc.: real registry
+            return real(qt, knob=knob)
+        return (_hash_rows(qt) % n_cls).astype(np.int64)
 
     server.predict_classes = classes_of
+    if with_depth:
+        n_dcls = len(dgrid) + 1
+
+        def pdepth(qt):
+            # decorrelated from the primary hash so mixed primary/depth
+            # buckets genuinely co-occur in one slot table
+            cls = ((_hash_rows(qt) // 3) % n_dcls).astype(np.int64)
+            return cls, server.params_of(cls, knob="depth")
+
+        server.predict_depths = pdepth
     return sys_, server
+
+
+def _build_rho_server():
+    return _build_knob_server("rho")
 
 
 def _continuous_run(server, qt, *, fixed_param=None, slots=8, grain=8):
@@ -286,6 +316,100 @@ def bench_continuous_scheduler() -> list[tuple]:
         ("serving/continuous_churn_compiles", churn_compiles,
          "PASS" if churn_compiles == 0 else "FAIL"),
     ]
+
+
+def bench_three_knob_depth() -> list[tuple]:
+    """The three-knob race: per-query depth riding the continuous
+    scheduler on each primary knob (rho and k).
+
+    The dynamic arm predicts both the primary parameter and the
+    reranking depth per query (content-hash stubs — see
+    ``_build_knob_server``); the fixed arm serves everyone at the
+    primary's reference with the depth knob off.  Committed fields: the
+    stage-2 row fraction the depth mask actually scores (the knob's
+    deterministic win — the scheduler counts rows at retirement), the
+    per-knob retirement histograms, and the MED acceptance of the
+    dynamic arm against its own full-fidelity reference."""
+    import jax.numpy as jnp
+
+    from repro.core import med as med_lib
+    from repro.online.shadow import reference_param
+
+    rec: dict = {"three_knob_grids": {},
+                 "stage2_rows_scored_fraction": {},
+                 "knob_retirement_counts": {},
+                 "three_knob_window_ratio": {},
+                 "dynamic_mean_med": {},
+                 "dynamic_inside_med_envelope": {},
+                 "three_knob_bit_identical": True}
+    rows: list[tuple] = []
+    for primary in ("rho", "k"):
+        sys_, server = _build_knob_server(primary, with_depth=True)
+        n = min(96, sys_.queries.n_queries)
+        qt = sys_.queries.terms[:n]
+        ref_p = reference_param(server.cfg)
+
+        dyn_b, dyn_out, dyn_s = _continuous_run(server, qt)
+        _, fix_server = _build_knob_server(primary)   # depth knob off
+        fix_b, fix_out, fix_s = _continuous_run(fix_server, qt,
+                                                fixed_param=ref_p)
+
+        # bit-identity of the dynamic arm vs one batch-once serve at
+        # the same (primary, depth) vectors
+        classes = np.asarray(server.predict_classes(qt))
+        dcls, depths = server.predict_depths(qt)
+        ranked_ref, _ = server.engine.serve(
+            qt, server.params_of(classes), depth_vec=depths)
+        bit_identical = all(
+            np.array_equal(res["ranked"], ranked_ref[i])
+            for i, res in enumerate(dyn_out))
+        rec["three_knob_bit_identical"] &= bool(bit_identical)
+
+        # MED of the dynamic run against the full-fidelity reference
+        # (primary at its reference, depth unmasked) — the acceptance
+        # margin is generous on purpose: hash-stub classes are a *floor*
+        # for a trained cascade, and the boolean must not flip on float
+        # eps across platforms
+        ref = fix_server.serve_fixed(qt, ref_p)["ranked"]
+        dyn = np.stack([np.asarray(r["ranked"]) for r in dyn_out])
+        med = np.asarray(med_lib.med_rbp(jnp.asarray(dyn),
+                                         jnp.asarray(ref), p=0.95))
+        mean_med = float(med.mean())
+
+        sch = dyn_b.scheduler.stats()
+        frac = sch["n_rows_scored"] / sch["n_rows_full"]
+        win_ratio = (sum(r["chunks_executed"] for r in dyn_out)
+                     / sum(r["chunks_executed"] for r in fix_out))
+        grid = server.cfg.depth_cutoffs
+        rec["three_knob_grids"][primary] = [int(c) for c in
+                                            server.cfg.cutoffs]
+        rec["three_knob_grids"][f"depth@{primary}"] = [int(d)
+                                                       for d in grid]
+        rec["stage2_rows_scored_fraction"][primary] = round(frac, 4)
+        prim_hist = {str(int(r["width"])): 0 for r in dyn_out}
+        depth_hist = {str(int(r["depth"])): 0 for r in dyn_out}
+        for r in dyn_out:
+            prim_hist[str(int(r["width"]))] += 1
+            depth_hist[str(int(r["depth"]))] += 1
+        rec["knob_retirement_counts"][primary] = prim_hist
+        rec["knob_retirement_counts"][f"depth@{primary}"] = depth_hist
+        rec["three_knob_window_ratio"][primary] = round(win_ratio, 4)
+        rec["dynamic_mean_med"][primary] = round(mean_med, 3)
+        rec["dynamic_inside_med_envelope"][primary] = bool(
+            mean_med <= 0.35)
+        rows += [
+            (f"serving/three_knob_{primary}_rows_fraction", frac,
+             f"{sch['n_rows_scored']}/{sch['n_rows_full']} stage-2 rows"
+             + (" PASS" if frac < 1.0 else " FAIL")),
+            (f"serving/three_knob_{primary}_window_ratio", win_ratio,
+             "dynamic/fixed chunk windows"),
+            (f"serving/three_knob_{primary}_mean_med", mean_med,
+             "PASS" if mean_med <= 0.35 else "FAIL"),
+            (f"serving/three_knob_{primary}_qps", n / dyn_s,
+             f"mean_depth={np.mean([r['depth'] for r in dyn_out]):.0f}"),
+        ]
+    _RECORDS["knobs"] = rec
+    return rows
 
 
 def bench_paced_deadlines() -> list[tuple]:
@@ -502,6 +626,7 @@ def summary_payload() -> dict | None:
     # sharded_vs_single_throughput, which bench-smoke excludes from the
     # exact diff (git diff -I) so the committed trajectory can move
     payload.update(_RECORDS["sharded"] or {})
+    payload.update(_RECORDS["knobs"] or {})
     return payload
 
 
@@ -532,7 +657,8 @@ def write_bench_json(rows: list[tuple], path: str | None = None) -> str:
 
 BENCHES = [bench_dynamic_vs_fixed, bench_compile_amortization,
            bench_admission_service, bench_continuous_scheduler,
-           bench_paced_deadlines, bench_sharded_vs_single]
+           bench_three_knob_depth, bench_paced_deadlines,
+           bench_sharded_vs_single]
 
 
 def main(argv=None) -> None:

@@ -69,7 +69,7 @@ LOCK_REGISTRY: tuple[LockSpec, ...] = (
     LockSpec("ContinuousScheduler", "_lock",
              ("table", "_retired", "retire_reasons", "n_admitted",
               "n_retired", "n_refill_calls", "n_chunk_calls",
-              "n_finalize_calls"),
+              "n_finalize_calls", "n_rows_scored", "n_rows_full"),
              assume_held=("_pop_group", "_retire")),
     # online loop: telemetry ring and predictor version store
     LockSpec("TelemetryBuffer", "_lock", ("_ring", "n_seen", "n_dropped")),

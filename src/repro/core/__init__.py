@@ -1,4 +1,4 @@
 """The paper's primary contribution: MED-labeled, per-query dynamic
 trade-off prediction via a left-to-right binary classifier cascade."""
 
-from repro.core import baselines, cascade, features, forest, labeling, med, mlp, tradeoff  # noqa: F401
+from repro.core import baselines, cascade, features, forest, knobs, labeling, med, mlp, tradeoff  # noqa: F401

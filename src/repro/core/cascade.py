@@ -105,15 +105,30 @@ class Cascade:
 def train_cascade(x: np.ndarray, labels: np.ndarray, *, n_cutoffs: int,
                   kind: str = "forest", seed: int = 0,
                   forest_kwargs: dict | None = None,
-                  mlp_kwargs: dict | None = None) -> Cascade:
-    """Train one binary node per cutoff boundary (Algorithm 1 data)."""
+                  mlp_kwargs: dict | None = None,
+                  warm: Cascade | None = None,
+                  warm_frac: float = 0.0) -> Cascade:
+    """Train one binary node per cutoff boundary (Algorithm 1 data).
+
+    ``warm``/``warm_frac`` warm-start forest refits: node i carries
+    ``warm_frac`` of its trees verbatim from ``warm.nodes[i]`` (see
+    ``forest.train_forest``).  Ignored for mlp nodes."""
     binary = labeling.multiclass_to_binary(labels, n_cutoffs)
+    if warm is not None and warm_frac > 0.0 and kind == "forest":
+        if warm.kind != "forest" or warm.n_cutoffs != n_cutoffs:
+            raise ValueError(
+                f"warm cascade ({warm.kind}, {warm.n_cutoffs} cutoffs) "
+                f"cannot warm-start a forest cascade with {n_cutoffs}")
+    else:
+        warm = None
     nodes, params = [], []
     for i in range(n_cutoffs):
         yi = binary[i]
         if kind == "forest":
             kw = dict(n_trees=25, max_depth=8, seed=seed + i)
             kw.update(forest_kwargs or {})
+            if warm is not None:
+                kw.update(warm=warm.nodes[i], warm_frac=warm_frac)
             f = forest_lib.train_forest(x, yi, n_classes=2, **kw)
             nodes.append(f)
             params.append(f.as_jax())

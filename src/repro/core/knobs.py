@@ -1,0 +1,119 @@
+"""Named knob registry: one trade-off framework, many knobs.
+
+The paper frames k (pool cutoff) and rho (postings budget) as two
+instances of a single per-query trade-off framework — a left-to-right
+cascade over an ordered cutoff grid, trained on judgment-free
+MED-vs-own-reference labels.  This module names that abstraction so a
+third knob (per-query *reranking depth*, bounding how deep stage 2
+scores the candidate pool) and any future one ride the same machinery:
+
+* ``KnobSpec`` — a named, validated cutoff grid with the class→value
+  mapping every layer shares (``params_of``) and the knob's reference
+  setting (``reference``: the grid maximum, which is what the shadow
+  executor re-runs at to produce labels — rho=P, k=max, depth=pool).
+* ``depth_cutoffs`` — the default depth grid as fractions of the pool
+  width, mirroring ``labeling.RHO_FRACTIONS`` for the rho grid.
+
+The cascade/threshold machinery itself (``core.cascade``,
+``core.labeling.envelope_labels``, ``core.tradeoff``) is already
+knob-agnostic — it sees only a MED table over *some* ordered grid.  A
+``KnobSpec`` is the contract that a grid means the same thing to the
+labeler, the trainer, the server's ``params_of``, and the serving
+masks (see docs/INVARIANTS.md, "Knob registry").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["KNOB_NAMES", "DEPTH_FRACTIONS", "KnobSpec", "depth_cutoffs"]
+
+#: The knobs the serving layers know how to mask.  A KnobSpec may carry
+#: any name (the registry is open by design), but these three have
+#: end-to-end plumbing: rho/k drive stage 1 (postings budget / pool
+#: cutoff), depth drives stage 2 (scored prefix of the candidate pool).
+KNOB_NAMES = ("rho", "k", "depth")
+
+#: Default depth grid as fractions of the candidate-pool width (the
+#: static rerank_depth on the rho knob, max(cutoffs) on the k knob) —
+#: the depth analogue of labeling.RHO_FRACTIONS.  Always ends at 1.0:
+#: the top class must be the full pool, which is the knob's own
+#: reference setting (masking at it is a no-op, preserving bit-identity
+#: with the depth-free path).
+DEPTH_FRACTIONS = (0.1, 0.2, 0.3, 0.5, 0.7, 0.85, 1.0)
+
+
+@dataclass(frozen=True)
+class KnobSpec:
+    """One named per-query knob: an ordered cutoff grid plus the
+    class→value mapping shared by training, serving, and labeling.
+
+    The cascade for a knob predicts an ordinal class in ``[0, c]`` where
+    ``c = n_cutoffs``; class ``i < c`` means "cutoffs[i] suffices inside
+    the envelope", class ``c`` means "no grid setting proven safe" and
+    maps to the grid maximum (the reference), exactly as the paper's
+    no-envelope class does for k.
+    """
+
+    name: str
+    cutoffs: tuple[int, ...]
+
+    def __post_init__(self):
+        cuts = tuple(int(v) for v in self.cutoffs)
+        if not cuts:
+            raise ValueError(f"knob {self.name!r}: empty cutoff grid")
+        if any(v <= 0 for v in cuts):
+            raise ValueError(
+                f"knob {self.name!r}: cutoffs must be positive, got {cuts}")
+        if list(cuts) != sorted(cuts):
+            # non-decreasing, duplicates allowed: experiment grids clamp
+            # fractional cutoffs to the pool width, so the tail of a
+            # grid can repeat the maximum
+            raise ValueError(
+                f"knob {self.name!r}: cutoffs must be non-decreasing, "
+                f"got {cuts}")
+        object.__setattr__(self, "cutoffs", cuts)
+
+    @property
+    def n_cutoffs(self) -> int:
+        return len(self.cutoffs)
+
+    @property
+    def n_classes(self) -> int:
+        return len(self.cutoffs) + 1
+
+    def reference(self) -> int:
+        """The knob's full-fidelity setting — what the shadow executor
+        re-runs at to produce judgment-free MED labels (and what the
+        fallback breaker pins to)."""
+        return self.cutoffs[-1]
+
+    def params_of(self, classes, fallback: bool = False) -> np.ndarray:
+        """Map predicted ordinal classes to concrete knob values.
+
+        Class ``i`` → ``cutoffs[min(i, c-1)]`` (the no-envelope class c
+        uses the maximum); ``fallback=True`` pins everything to the
+        reference, the drift breaker's static-max degradation.
+        """
+        classes = np.asarray(classes)
+        cuts = np.asarray(self.cutoffs, np.int64)
+        if fallback:
+            return np.full(classes.shape, cuts[-1], np.int64)
+        return cuts[np.minimum(np.maximum(classes, 0), len(cuts) - 1)]
+
+
+def depth_cutoffs(pool_width: int,
+                  fractions=DEPTH_FRACTIONS) -> tuple[int, ...]:
+    """The default reranking-depth grid for a candidate pool of
+    ``pool_width``: fractional depths, deduplicated, floored at 1, and
+    always ending exactly at ``pool_width`` (the knob's reference — the
+    top class masks nothing, so depth==max stays bit-identical to the
+    depth-free rerank)."""
+    if pool_width <= 0:
+        raise ValueError(f"pool_width must be positive, got {pool_width}")
+    vals = sorted({max(1, int(round(f * pool_width))) for f in fractions})
+    if vals[-1] != pool_width:
+        vals.append(pool_width)
+    return tuple(v for v in vals if v <= pool_width)

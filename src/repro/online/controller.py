@@ -43,6 +43,8 @@ class OnlineConfig:
     shadow_sample: int = 64        # logged queries labeled per cycle
     shadow_period_s: float = 0.02  # background pacing between cycles
     idle_only: bool = True         # gate background cycles on idleness
+    importance: bool = False       # margin-based shadow sample selection
+    pool_factor: int = 4           # oversampling factor for importance
     trainer: TrainerConfig = dataclasses.field(
         default_factory=TrainerConfig)
     drift: DriftConfig | None = None   # default: DriftConfig(target=tau)
@@ -64,19 +66,40 @@ class OnlineController:
         self.shadow = ShadowExecutor(
             server, self.telemetry, sample=self.cfg.shadow_sample,
             metric=self.cfg.metric, rbp_p=self.cfg.rbp_p,
-            seed=self.cfg.seed)
-        self.trainer = CascadeTrainer(self.cfg.trainer, server.cfg.cutoffs)
+            seed=self.cfg.seed, importance=self.cfg.importance,
+            pool_factor=self.cfg.pool_factor)
         if server.cascade is None:
             raise ValueError(
                 "OnlineController needs a server built with a trained "
                 "cascade (the boot predictor is the swap template)")
+        # per-knob adaptation state: the registry's knobs each get their
+        # own trainer / versioned store / drift monitor, all fed from the
+        # *same* shadow batch (one reference run labels every knob).  The
+        # primary knob (cfg.knob) is aliased as .trainer/.store/.monitor
+        # for back-compat; a "depth" entry exists iff the server was
+        # booted with a depth cascade (the swap template for that knob).
+        primary = server.cfg.knob
+        drift = self.cfg.drift or DriftConfig(target=self.cfg.tau)
         boot_thr = [server.cfg.threshold] * server.cascade.n_cutoffs
-        self.store = PredictorStore(server.cascade, boot_thr)
-        # serve the padded boot version from the start so every later
+        self.trainers = {primary: CascadeTrainer(self.cfg.trainer,
+                                                 server.cfg.cutoffs)}
+        self.stores = {primary: PredictorStore(server.cascade, boot_thr)}
+        self.monitors = {primary: EnvelopeMonitor(drift)}
+        if getattr(server, "depth_cascade", None) is not None:
+            self.trainers["depth"] = CascadeTrainer(
+                self.cfg.trainer, server.cfg.depth_cutoffs)
+            dthr = [server.cfg.threshold] * len(server.cfg.depth_cutoffs)
+            self.stores["depth"] = PredictorStore(
+                server.depth_cascade, dthr)
+            self.monitors["depth"] = EnvelopeMonitor(drift)
+        self.trainer = self.trainers[primary]
+        self.store = self.stores[primary]
+        self.monitor = self.monitors[primary]
+        self._primary = primary
+        # serve the padded boot versions from the start so every later
         # swap is shape-identical to what the executable was traced with
-        self.store.install(server)
-        self.monitor = EnvelopeMonitor(
-            self.cfg.drift or DriftConfig(target=self.cfg.tau))
+        for knob, store in self.stores.items():
+            store.install(server, knob=knob)
         self.n_swaps = 0
         self.n_steps = 0
         self.last_error: BaseException | None = None
@@ -84,21 +107,47 @@ class OnlineController:
         self._thread: threading.Thread | None = None
 
     # -------------------------------------------------------- one cycle --
+    def _knob_batch(self, knob: str, batch):
+        """The knob's view of a shadow batch: the primary sees it as-is;
+        secondary knobs swap in their own MED table / observed column
+        from ``med_by_knob`` (or None when the shadow didn't label
+        them)."""
+        if knob == self._primary:
+            return batch
+        sub = batch.med_by_knob.get(knob)
+        if sub is None:
+            return None
+        return dataclasses.replace(
+            batch, med=sub["med"], observed_med=sub["observed_med"],
+            served_class=sub["served_class"])
+
     def step(self) -> dict:
-        """One inline shadow -> label -> (retrain -> swap) cycle."""
+        """One inline shadow -> label -> (retrain -> swap) cycle, run
+        for every knob with adaptation state (same batch, per-knob
+        labels)."""
         self.n_steps += 1
         batch = self.shadow.run_once()
         if batch is None:
             return self.stats()
-        decision = self.monitor.observe(batch.observed_med)
-        self.server.fallback = decision.fallback
-        self.trainer.add(batch)
-        if self.trainer.should_retrain():
-            casc, thresholds = self.trainer.retrain(decision.tau)
-            self.store.publish(casc, thresholds,
-                               trained_on=self.trainer.window_size)
-            self.store.install(self.server)
-            self.n_swaps += 1
+        for knob, trainer in self.trainers.items():
+            kb = self._knob_batch(knob, batch)
+            if kb is None:
+                continue
+            decision = self.monitors[knob].observe(kb.observed_med)
+            if knob == self._primary:
+                # only the primary's monitor trips the global fallback
+                # breaker — fallback pins *every* knob to its reference
+                # (KnobSpec.params_of), so a depth-only drift must not
+                # widen stage 1; the depth monitor just drives the
+                # labeling tau of its own retrains
+                self.server.fallback = decision.fallback
+            trainer.add(kb)
+            if trainer.should_retrain():
+                casc, thresholds = trainer.retrain(decision.tau)
+                self.stores[knob].publish(casc, thresholds,
+                                          trained_on=trainer.window_size)
+                self.stores[knob].install(self.server, knob=knob)
+                self.n_swaps += 1
         return self.stats()
 
     # -------------------------------------------------- background loop --
@@ -137,8 +186,19 @@ class OnlineController:
 
     # ------------------------------------------------------------- stats --
     def stats(self) -> dict:
+        knobs = {
+            knob: {
+                "n_labels": t.n_labels,
+                "n_retrains": t.n_retrains,
+                "n_published": self.stores[knob].n_published,
+                "tau_effective": self.monitors[knob].tau,
+                "med_ema": self.monitors[knob].med_ema,
+            }
+            for knob, t in self.trainers.items()
+        }
         return {
             "n_steps": self.n_steps,
+            "knobs": knobs,
             "n_labels": self.trainer.n_labels,
             "n_retrains": self.trainer.n_retrains,
             "n_swaps": self.n_swaps,

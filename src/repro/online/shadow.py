@@ -71,6 +71,27 @@ def _label_chunk(server, qt: np.ndarray, metric: str,
     return ref, med
 
 
+def _label_chunk_depth(server, qt: np.ndarray, ref: np.ndarray,
+                       metric: str, rbp_p: float) -> np.ndarray:
+    """Depth-knob analog of ``_label_chunk``: the (n, d) MED of every
+    depth cutoff's run — the primary knob pinned at its reference, the
+    rerank masked to the depth prefix — against the same full-fidelity
+    reference.  This *is* the primary labeling code path with the knob
+    swapped (the registry's MED-vs-own-reference contract): the depth
+    reference is the full pool, where the mask is a no-op, so the
+    already-computed ``ref`` run serves as that column's identity."""
+    cfg = server.cfg
+    ref_p = reference_param(cfg)
+    full = cfg.depth_pool_width
+    dmed = np.zeros((qt.shape[0], len(cfg.depth_cutoffs)), np.float32)
+    for di, d in enumerate(cfg.depth_cutoffs):
+        if int(d) == full:
+            continue                   # no-op mask: MED(A, A) = 0
+        run = server.serve_fixed(qt, ref_p, depth=int(d))["ranked"]
+        dmed[:, di] = _med(run, ref, metric, rbp_p)
+    return dmed
+
+
 def serving_med_table(server, query_terms: np.ndarray, *,
                       batch: int = 128, metric: str = "rbp",
                       rbp_p: float = 0.95) -> np.ndarray:
@@ -101,6 +122,11 @@ class ShadowBatch:
     predictor_version: np.ndarray  # (n,) version that served each query
     t_wall: float
     max_seq: int                   # newest telemetry seq consumed
+    # secondary knobs (e.g. "depth"), labeled from the same reference
+    # run: knob -> {"med": (n, c') table, "observed_med": (n,) MED at
+    # the logged class, "served_class": (n,)}.  Empty when only the
+    # primary knob is live.
+    med_by_knob: dict = dataclasses.field(default_factory=dict)
 
 
 class ShadowExecutor:
@@ -109,31 +135,60 @@ class ShadowExecutor:
     ``run_once`` is one shadow cycle: sample unread records from the
     telemetry ring, compute the reference + per-cutoff runs and the MED
     table, featurize, and return a ``ShadowBatch`` (or None when there
-    is nothing new to label)."""
+    is nothing new to label).
+
+    ``importance=True`` labels hard queries first: each cycle reads a
+    ``pool_factor`` x oversized window of unread records, scores every
+    query's cascade *margin* (``server.predict_margin`` — distance to
+    the nearest exit threshold), and keeps the n smallest-margin
+    queries.  Label budget concentrates where the predictor is least
+    certain; the cursor advances past the whole window either way, so
+    selection is deterministic for a given telemetry stream and the
+    unselected remainder is skipped, not deferred."""
 
     def __init__(self, server, telemetry, *, sample: int = 64,
                  metric: str = "rbp", rbp_p: float = 0.95,
-                 seed: int = 0, resample: bool = False):
+                 seed: int = 0, resample: bool = False,
+                 importance: bool = False, pool_factor: int = 4):
         self.server = server
         self.telemetry = telemetry
         self.sample = sample
         self.metric = metric
         self.rbp_p = rbp_p
         self.resample = resample       # allow re-labeling old records
+        self.importance = importance
+        self.pool_factor = max(1, int(pool_factor))
         self._rng = np.random.default_rng(seed)
         self._cursor = 0               # telemetry seq consumed so far
         self.n_labeled = 0
         self.n_cycles = 0
 
-    def run_once(self, n: int | None = None) -> ShadowBatch | None:
-        n = self.sample if n is None else n
+    def _take(self, n: int):
+        """Pick this cycle's records (handles all three sampling modes)."""
         if self.resample:
-            recs = self.telemetry.sample(n, self._rng)
-        else:
+            return self.telemetry.sample(n, self._rng)
+        if not self.importance:
             # oldest-unread-first: full coverage while labeling keeps up
             # with traffic; under overload the ring overwrites the tail
             # and n_dropped accounts for it
-            recs = self.telemetry.take_unread(n, min_seq=self._cursor)
+            return self.telemetry.take_unread(n, min_seq=self._cursor)
+        pool = self.telemetry.take_unread(n * self.pool_factor,
+                                          min_seq=self._cursor)
+        if len(pool) <= n:
+            return pool
+        # consume the whole pool: unselected records are skipped for
+        # good, keeping the cursor (and thus the selection) a pure
+        # function of the telemetry stream
+        self._cursor = max(self._cursor, max(r.seq for r in pool) + 1)
+        qt = np.stack([np.asarray(r.payload, np.int32) for r in pool])
+        margin = np.asarray(self.server.predict_margin(qt))
+        # stable argsort: ties break by arrival order, deterministically
+        keep = np.sort(np.argsort(margin, kind="stable")[:n])
+        return [pool[i] for i in keep]
+
+    def run_once(self, n: int | None = None) -> ShadowBatch | None:
+        n = self.sample if n is None else n
+        recs = self._take(n)
         if not recs:
             return None
         self._cursor = max(self._cursor, max(r.seq for r in recs) + 1)
@@ -173,6 +228,21 @@ class ShadowExecutor:
                 direct = np.asarray(_med(served, ref, self.metric,
                                          self.rbp_p))
             observed[i] = direct[i]
+        med_by_knob = {}
+        if getattr(srv, "has_depth_knob", False):
+            dmed = _label_chunk_depth(srv, qt, ref, self.metric,
+                                      self.rbp_p)
+            dcls = np.array([getattr(r, "depth_class", -1)
+                             for r in recs], np.int64)
+            d_obs = np.zeros(qt.shape[0], np.float32)
+            nd = len(srv.cfg.depth_cutoffs)
+            for i in range(qt.shape[0]):
+                if 0 <= dcls[i]:
+                    d_obs[i] = dmed[i, min(int(dcls[i]), nd - 1)]
+                # else: served at full depth (knob off / fallback) —
+                # the reference itself, MED 0
+            med_by_knob["depth"] = {"med": dmed, "observed_med": d_obs,
+                                    "served_class": dcls}
         feats = np.asarray(feat_lib.query_features(
             jnp.asarray(qt), srv.stats, srv.ctf, srv.df))
         self.n_labeled += len(recs)
@@ -183,4 +253,5 @@ class ShadowExecutor:
             predictor_version=np.array(
                 [r.predictor_version for r in recs], np.int64),
             t_wall=time.perf_counter(),
-            max_seq=max(r.seq for r in recs))
+            max_seq=max(r.seq for r in recs),
+            med_by_knob=med_by_knob)

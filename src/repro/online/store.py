@@ -129,10 +129,11 @@ class PredictorStore:
         with self._lock:
             return self._next_version
 
-    def install(self, server) -> int:
-        """Swap the current version into a server's live predict path.
+    def install(self, server, *, knob: str | None = None) -> int:
+        """Swap the current version into a server's live predict path
+        (``knob`` routes to a registry entry, default the primary).
         Returns the installed version number."""
         v = self.current()
         server.swap_predictor(v.node_params, v.thresholds,
-                              version=v.version)
+                              version=v.version, knob=knob)
         return v.version

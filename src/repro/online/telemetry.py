@@ -46,6 +46,10 @@ class TelemetryRecord:
     chunks_executed: int = 0       # stage-1 chunk dispatches this request
     chunks_max: int = 0            # padded maximum (stream_cap / chunk_p)
     slot_occupancy: float = 0.0    # table occupancy at retirement
+    # depth knob (nan/-1 when off): the reranking depth actually served
+    # and the depth-cascade class behind it
+    depth: float = float("nan")
+    depth_class: int = -1
 
 
 class TelemetryBuffer:
@@ -81,6 +85,10 @@ class TelemetryBuffer:
             chunks_executed=int(result.get("chunks_executed", 0)),
             chunks_max=int(result.get("chunks_max", 0)),
             slot_occupancy=float(result.get("slot_occupancy", 0.0)),
+            depth=(float("nan") if result.get("depth") is None
+                   else float(result["depth"])),
+            depth_class=(-1 if result.get("depth_class") is None
+                         else int(result["depth_class"])),
         ))
 
     def append(self, rec: TelemetryRecord) -> None:

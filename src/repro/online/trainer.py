@@ -2,14 +2,23 @@
 
 The offline pipeline (``core.experiment``) trains once from a frozen MED
 table; the online trainer keeps a bounded window of the shadow executor's
-label batches and refits the whole cascade (``core.cascade.train_cascade``
-+ ``tune_thresholds``) whenever enough *new* labels have accumulated.
-Full refits — not warm-started gradient steps — are deliberate: the
-cascade nodes are small forests that train in milliseconds at serving
-feature dimensionality, a fresh fit forgets the stale distribution at
-exactly the window rate, and the resulting parameters are pad-compatible
-with the hot-swap template as long as ``forest_kwargs`` (n_trees,
-max_depth) stay fixed, which this module enforces by construction.
+label batches and refits the cascade (``core.cascade.train_cascade`` +
+``tune_thresholds``) whenever enough *new* labels have accumulated.
+
+Refits are window-sized, optionally *warm-started*: with
+``warm_frac > 0`` each forest node carries that fraction of its trees
+verbatim from the previous fit and regrows only the remainder on the
+new window (``forest.train_forest(warm=...)``).  The carried trees damp
+fit-to-fit variance between overlapping windows and cut refit cost by
+``warm_frac``, while the regrown majority still forgets a stale
+distribution at roughly the window rate.  ``warm_frac=0`` (the default)
+is the previous behavior — a fully fresh fit each time.  Either way the
+resulting parameters are pad-compatible with the hot-swap template as
+long as ``forest_kwargs`` (n_trees, max_depth) stay fixed, which this
+module enforces by construction: ``PredictorStore.publish`` re-checks
+the shape contract before any swap, so a warm-started fit installs into
+the live jitted predict executable without a recompile, bit-compatibly
+with a cold one.
 
 The labeling tau is passed per retrain (the drift monitor owns it), so
 envelope tightening/widening takes effect on the next refit without
@@ -39,6 +48,7 @@ class TrainerConfig:
     threshold_grid: tuple = (0.6, 0.7, 0.75, 0.8, 0.85, 0.9)
     min_compliance: float = 0.95
     seed: int = 0
+    warm_frac: float = 0.0         # fraction of trees carried per refit
 
 
 class CascadeTrainer:
@@ -49,6 +59,7 @@ class CascadeTrainer:
         self.cutoffs = tuple(cutoffs)
         self._batches: collections.deque = collections.deque()
         self._n_window = 0
+        self._prev = None              # last fitted cascade (warm source)
         self.labels_since_fit = 0
         self.n_labels = 0
         self.n_retrains = 0
@@ -89,14 +100,18 @@ class CascadeTrainer:
         while staying deterministic for a given retrain index."""
         x, med = self.window()
         labels = np.asarray(labeling.envelope_labels(med, tau))
+        warm = (self._prev if self.cfg.warm_frac > 0.0
+                and self.cfg.kind == "forest" else None)
         casc = cascade_lib.train_cascade(
             x, labels, n_cutoffs=len(self.cutoffs), kind=self.cfg.kind,
             seed=self.cfg.seed + 1000 * (self.n_retrains + 1),
-            forest_kwargs=self.cfg.forest_kwargs)
+            forest_kwargs=self.cfg.forest_kwargs,
+            warm=warm, warm_frac=self.cfg.warm_frac)
         thresholds = cascade_lib.tune_thresholds(
             casc, x, med, self.cutoffs, tau,
             grid=self.cfg.threshold_grid,
             min_compliance=self.cfg.min_compliance)
         self.n_retrains += 1
         self.labels_since_fit = 0
+        self._prev = casc
         return casc, thresholds

@@ -79,6 +79,25 @@ class _PendingCompile:
         self.err: BaseException | None = None
 
 
+def _pad_ranked(ranked: np.ndarray, depth: int) -> np.ndarray:
+    """Pad a ranked matrix out to ``depth`` columns with the explicit
+    ``-1`` no-document sentinel (the same value rerank_pool emits for
+    exhausted pools), so every serve path returns a fixed
+    ``(n, rerank_depth)`` shape.
+
+    Reachable only when the candidate pool is *narrower* than the final
+    list — ``ServingConfig`` forbids that on the k knob's shared pool
+    (``rerank_depth <= max(cutoffs)``), so in practice this fires on the
+    per-bucket reference path and on ``serve_fixed`` calls whose fixed
+    param is below ``rerank_depth``.  Tested in
+    tests/test_serving_engine.py::test_ranked_pad_is_explicit_sentinel.
+    """
+    if ranked.shape[1] >= depth:
+        return ranked
+    pad = depth - ranked.shape[1]
+    return np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
+
+
 # --------------------------------------------------------------- stages --
 # Module-level so the engine's AOT cache keys stay stable; static config
 # enters via functools.partial, per-query parameters stay traced.
@@ -138,6 +157,25 @@ def _stage2(sdocs, s3, doc_len, qids, *, n_docs: int):
 
 def _stage_rerank(stage2, pool, *, depth: int):
     return gold.rerank_pool(stage2, pool, depth)
+
+
+def _depth_mask(pool, depth_vec):
+    """The depth knob's traced mask: restrict stage 2 to each query's
+    top-``depth_vec[q]`` stage-1 candidates.  The pool is rank-ordered
+    (select_pool emits descending stage-1 score), so a prefix mask *is*
+    the scored-depth bound — the exact idiom of the k knob's pool-width
+    mask, and a no-op when depth_vec equals the static pool width (the
+    knob's reference), which is what keeps depth==max bit-identical to
+    the depth-free executables."""
+    keep = jnp.arange(pool.shape[-1])[None, :] < depth_vec[:, None]
+    return jnp.where(keep, pool, -1)
+
+
+def _stage_rerank_dyn(stage2, pool, depth_vec, *, depth: int):
+    """``_stage_rerank`` with a traced per-query reranking depth: the
+    third knob.  Static shapes are identical to the depth-free stage
+    (one executable per padded shape; the depth enters as data)."""
+    return gold.rerank_pool(stage2, _depth_mask(pool, depth_vec), depth)
 
 
 # ----------------------------------------------------- scheduler stages --
@@ -207,22 +245,26 @@ def _sched_chunk(ds_b, im_b, lo_b, hi_b, acc, pos, end, *, chunk_p: int,
     return acc + inc
 
 
-def _sched_finalize_rho(acc, sd_b, s3_b, slot_idx, qids, doc_len, *,
+def _sched_finalize_rho(acc, sd_b, s3_b, slot_idx, dvec, qids, doc_len, *,
                         depth: int, n_docs: int, use_kernel: bool,
                         interpret: bool):
     """Stages 1b-3 for a retiring group: pool selection over the finished
     accumulator rows, then stage-2 + rerank exactly as the batch path
-    (qids are the request's arrival index, so stage-2 noise matches)."""
+    (qids are the request's arrival index, so stage-2 noise matches).
+
+    ``dvec`` is the traced per-slot reranking depth; a scheduler without
+    a depth knob passes the static pool width, making the mask a no-op
+    (bit-identical to the depth-free program, same executable count)."""
     rows = acc[slot_idx]
     pool = topk_lib.select_pool(rows, depth, use_kernel=use_kernel,
                                 interpret=interpret)
     stage2 = _stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
                      n_docs=n_docs)
-    return gold.rerank_pool(stage2, pool, depth)
+    return gold.rerank_pool(stage2, _depth_mask(pool, dvec), depth)
 
 
-def _sched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, qids, doc_len, *,
-                      depth: int, max_k: int, n_docs: int,
+def _sched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, dvec, qids,
+                      doc_len, *, depth: int, max_k: int, n_docs: int,
                       use_kernel: bool, interpret: bool):
     rows = acc[slot_idx]
     pool = topk_lib.select_pool(rows, max_k, use_kernel=use_kernel,
@@ -231,7 +273,7 @@ def _sched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, qids, doc_len, *,
     pool = jnp.where(keep, pool, -1)
     stage2 = _stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
                      n_docs=n_docs)
-    return gold.rerank_pool(stage2, pool, depth)
+    return gold.rerank_pool(stage2, _depth_mask(pool, dvec), depth)
 
 
 class ServingEngine:
@@ -277,6 +319,8 @@ class ServingEngine:
         self._stage2 = functools.partial(_stage2, n_docs=self.n_docs)
         self._rerank = functools.partial(_stage_rerank,
                                          depth=cfg.rerank_depth)
+        self._rerank_dyn = functools.partial(_stage_rerank_dyn,
+                                             depth=cfg.rerank_depth)
 
     def _stage1_for(self, pool_width: int):
         """stage1 fn + cache name for a given static pool width (the
@@ -339,12 +383,21 @@ class ServingEngine:
 
     # --------------------------------------------------------- serving --
     def serve(self, query_terms: np.ndarray, param_vec: np.ndarray,
-              pool_width: int | None = None):
+              pool_width: int | None = None,
+              depth_vec: np.ndarray | None = None):
         """Batch-once pipeline.  param_vec: (n,) predicted k or rho.
 
         ``pool_width`` (k knob only) overrides the shared pool's static
         width — serve_fixed uses it to honor fixed params beyond the
         cutoff grid with a dedicated executable instead of a silent clamp.
+
+        ``depth_vec`` (the third knob) is a per-query reranking depth: a
+        traced prefix mask over the rank-ordered candidate pool before
+        stage-2 rerank.  None keeps the depth-free executables exactly
+        as before; a vector dispatches the ``rerank_dyn`` variant (one
+        extra executable per padded shape, still O(1) under churn), and
+        a vector pinned to the static pool width is bit-identical to
+        None.
 
         Returns (ranked (n, rerank_depth) np.ndarray, timings dict in ms).
         """
@@ -353,6 +406,10 @@ class ServingEngine:
                                 self.batch_multiple, fill=-1)
         pv = bucketing.pad_rows(np.asarray(param_vec, np.int32),
                                 self.batch_multiple, fill=1)
+        if depth_vec is not None:
+            depth_vec = bucketing.pad_rows(
+                np.asarray(depth_vec, np.int32), self.batch_multiple,
+                fill=1)
         qids = np.arange(qt.shape[0], dtype=np.int32)
 
         timings = {}
@@ -377,34 +434,43 @@ class ServingEngine:
                      pv)
         stage2 = timed("stage2_ms", "stage2", self._stage2,
                        sdocs, s3, self.doc_len, qids)
-        ranked = timed("rerank_ms", "rerank", self._rerank, stage2, pool)
-        ranked = np.asarray(ranked)[:n]
-        if ranked.shape[1] < self.cfg.rerank_depth:  # pool narrower than
-            pad = self.cfg.rerank_depth - ranked.shape[1]  # the final list
-            ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
+        if depth_vec is None:
+            ranked = timed("rerank_ms", "rerank", self._rerank, stage2,
+                           pool)
+        else:
+            ranked = timed("rerank_ms", "rerank_dyn", self._rerank_dyn,
+                           stage2, pool, depth_vec)
+        ranked = _pad_ranked(np.asarray(ranked)[:n], self.cfg.rerank_depth)
         return ranked, timings
 
-    def warmup_shape(self, batch_size: int, query_len: int) -> int:
+    def warmup_shape(self, batch_size: int, query_len: int, *,
+                     with_depth: bool = False) -> int:
         """Pre-compile the full pipeline for one padded batch size (the
-        unit the learned warmup policy requests).  Returns executables
-        compiled (0 when the shape was already warm)."""
+        unit the learned warmup policy requests).  ``with_depth`` also
+        compiles the dynamic-depth rerank variant (servers with a depth
+        knob pass it so the first depth-predicting batch finds a warm
+        executable).  Returns executables compiled (0 when the shape was
+        already warm)."""
         with self._cache_lock:
             before = self.n_compiles
         b = self.padded_batch(int(batch_size))
         qt = np.full((b, query_len), -1, np.int32)
         pv = np.ones(b, np.int32)
         self.serve(qt, pv)
+        if with_depth:
+            self.serve(qt, pv, depth_vec=np.ones(b, np.int32))
         with self._cache_lock:
             return self.n_compiles - before
 
-    def warmup(self, batch_sizes, query_len: int) -> int:
+    def warmup(self, batch_sizes, query_len: int, *,
+               with_depth: bool = False) -> int:
         """Pre-compile the pipeline for each padded batch size in
         ``batch_sizes`` (the configured pad-multiple grid).  Returns the
         number of executables compiled."""
         with self._cache_lock:
             before = self.n_compiles
         for b in sorted({self.padded_batch(int(b)) for b in batch_sizes}):
-            self.warmup_shape(b, query_len)
+            self.warmup_shape(b, query_len, with_depth=with_depth)
         with self._cache_lock:
             return self.n_compiles - before
 
@@ -623,6 +689,15 @@ def _sh_rerank(stage2, pool, *, axis: str, width: int, depth: int):
     return jax.vmap(one)(s, pool)
 
 
+def _sh_rerank_dyn(stage2, pool, depth_vec, *, axis: str, width: int,
+                   depth: int):
+    """``_sh_rerank`` with the traced per-query reranking depth: the
+    prefix mask runs on the replicated pool before the pmax score
+    assembly, so masked members never cost a collective word."""
+    return _sh_rerank(stage2, _depth_mask(pool, depth_vec), axis=axis,
+                      width=width, depth=depth)
+
+
 class ShardedServingEngine(ServingEngine):
     """The single-dispatch engine over a device mesh.
 
@@ -699,6 +774,7 @@ class ShardedServingEngine(ServingEngine):
             "merge": (b2, b2, b1),
             "stage2": (pa, P(dspec, axis, None), P(axis), b1),
             "rerank": (P(dspec, axis), b2),
+            "rerank_dyn": (P(dspec, axis), b2, b1),
         }
         # commit the static inputs to their mesh shardings once, so the
         # per-call device_put in _place short-circuits instead of
@@ -743,6 +819,10 @@ class ShardedServingEngine(ServingEngine):
             functools.partial(_sh_rerank, depth=cfg.rerank_depth,
                               **self._stat),
             self._specs["rerank"], b2)
+        self._rerank_dyn = smap(
+            functools.partial(_sh_rerank_dyn, depth=cfg.rerank_depth,
+                              **self._stat),
+            self._specs["rerank_dyn"], b2)
 
     # ----------------------------------------------- continuous serving --
     @property
@@ -801,10 +881,16 @@ class ShardedServingEngine(ServingEngine):
         return jax.device_put(x, NamedSharding(self.mesh, spec))
 
     def serve(self, query_terms: np.ndarray, param_vec: np.ndarray,
-              pool_width: int | None = None):
+              pool_width: int | None = None,
+              depth_vec: np.ndarray | None = None):
         """Overlapped sharded pipeline: gather(+partition) → local
         stage 1 → issue the survivor all-gather → dispatch stage 2 while
         the collective is in flight → lexsort-merge the pool → rerank.
+
+        ``depth_vec`` follows the base engine's contract: None keeps the
+        depth-free rerank, a vector dispatches ``rerank_dyn`` (the
+        replicated pool masked before the pmax score assembly), and
+        depth==pool-width is bit-identical to None.
 
         Timings: ``stage1_ms`` covers the local stage (dispatch to
         blocked); ``stage2_ms`` covers stage 2 *including* whatever part
@@ -816,6 +902,10 @@ class ShardedServingEngine(ServingEngine):
                                 self.batch_multiple, fill=-1)
         pv = bucketing.pad_rows(np.asarray(param_vec, np.int32),
                                 self.batch_multiple, fill=1)
+        if depth_vec is not None:
+            depth_vec = bucketing.pad_rows(
+                np.asarray(depth_vec, np.int32), self.batch_multiple,
+                fill=1)
         qids = np.arange(qt.shape[0], dtype=np.int32)
 
         timings = {}
@@ -859,7 +949,12 @@ class ShardedServingEngine(ServingEngine):
         pool = m_exe(*m_args)
         jax.block_until_ready(pool)
         timings["merge_ms"] = (time.perf_counter() - t0) * 1e3
-        ranked = timed("rerank_ms", "rerank", self._rerank, stage2, pool)
+        if depth_vec is None:
+            ranked = timed("rerank_ms", "rerank", self._rerank, stage2,
+                           pool)
+        else:
+            ranked = timed("rerank_ms", "rerank_dyn", self._rerank_dyn,
+                           stage2, pool, depth_vec)
         ovf = int(np.asarray(over).max())
         if ovf > 0:
             raise RuntimeError(
@@ -867,10 +962,7 @@ class ShardedServingEngine(ServingEngine):
                 f"than its stream slot (shard_cap={self.shard_cap}, "
                 f"stream_cap={self.cfg.stream_cap}, n_shards="
                 f"{self.n_shards}); raise ServingConfig.partition_slack")
-        ranked = np.asarray(ranked)[:n]
-        if ranked.shape[1] < self.cfg.rerank_depth:
-            pad = self.cfg.rerank_depth - ranked.shape[1]
-            ranked = np.pad(ranked, ((0, 0), (0, pad)), constant_values=-1)
+        ranked = _pad_ranked(np.asarray(ranked)[:n], self.cfg.rerank_depth)
         return ranked, timings
 
 
@@ -1040,24 +1132,24 @@ class SchedPrograms:
         return dataclasses.replace(state, acc=acc)
 
     def finalize(self, state: SchedState, slot_idx: np.ndarray,
-                 pvec: np.ndarray, qids: np.ndarray) -> np.ndarray:
+                 pvec: np.ndarray, dvec: np.ndarray,
+                 qids: np.ndarray) -> np.ndarray:
         """Stages 1b-3 for a retiring group; returns host ranked lists
         (grain, rerank_depth).  ``pvec`` is the traced pool-width vector
-        (k knob; ignored for rho, where the budget was applied in-chunk)."""
+        (k knob; ignored for rho, where the budget was applied in-chunk);
+        ``dvec`` the traced per-slot reranking depth (the scheduler fills
+        the static pool width when no depth knob is live — a no-op mask,
+        bit-identical to the depth-free program)."""
         e = self.engine
         if e.cfg.knob == "rho":
             r = self._run("finalize", self._final_fn, state.acc,
-                          state.sdocs, state.s3, slot_idx, qids, e.doc_len)
+                          state.sdocs, state.s3, slot_idx, dvec, qids,
+                          e.doc_len)
         else:
             r = self._run("finalize", self._final_fn, state.acc,
-                          state.sdocs, state.s3, slot_idx, pvec, qids,
-                          e.doc_len)
-        ranked = np.asarray(r)
-        if ranked.shape[1] < e.cfg.rerank_depth:
-            pad = e.cfg.rerank_depth - ranked.shape[1]
-            ranked = np.pad(ranked, ((0, 0), (0, pad)),
-                            constant_values=-1)
-        return ranked
+                          state.sdocs, state.s3, slot_idx, pvec, dvec,
+                          qids, e.doc_len)
+        return _pad_ranked(np.asarray(r), e.cfg.rerank_depth)
 
     def warmup(self, slots: int, query_len: int) -> int:
         """Compile all four programs.  Safe mid-flight: the dummy refill
@@ -1075,7 +1167,8 @@ class SchedPrograms:
         zeros = np.zeros(slots, np.int32)
         state = self.chunk(state, zeros, zeros)
         self.finalize(state, np.zeros(g, np.int32),
-                      np.ones(g, np.int32), np.zeros(g, np.int32))
+                      np.ones(g, np.int32), np.ones(g, np.int32),
+                      np.zeros(g, np.int32))
         with e._cache_lock:
             return e.n_compiles - before
 
@@ -1179,23 +1272,27 @@ def _ssched_chunk(ds_b, im_b, lo_b, hi_b, gp_b, acc, pos, end, *,
     return acc + inc
 
 
-def _ssched_finalize_rho(acc, sd_b, s3_b, slot_idx, qids, doc_len, *,
-                         depth: int, axis: str, width: int, n_docs: int,
-                         use_kernel: bool, interpret: bool):
+def _ssched_finalize_rho(acc, sd_b, s3_b, slot_idx, dvec, qids, doc_len,
+                         *, depth: int, axis: str, width: int,
+                         n_docs: int, use_kernel: bool, interpret: bool):
     """Sharded stages 1b-3 for a retiring group: cross-shard pool merge
     over the finished local accumulator rows, partitioned stage 2,
-    pmax-assembled rerank — the batch-once sharded tail on slot rows."""
+    pmax-assembled rerank — the batch-once sharded tail on slot rows.
+    ``dvec`` is the traced per-slot reranking depth (static pool width
+    when no depth knob is live — a no-op mask)."""
     rows = acc[slot_idx]
     pool = _pool_from_local(rows, depth, axis=axis, width=width,
                             use_kernel=use_kernel, interpret=interpret)
     stage2 = _sh_stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
                         axis=axis, width=width, n_docs=n_docs)
-    return _sh_rerank(stage2, pool, axis=axis, width=width, depth=depth)
+    return _sh_rerank(stage2, _depth_mask(pool, dvec), axis=axis,
+                      width=width, depth=depth)
 
 
-def _ssched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, qids, doc_len, *,
-                       depth: int, max_k: int, axis: str, width: int,
-                       n_docs: int, use_kernel: bool, interpret: bool):
+def _ssched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, dvec, qids,
+                       doc_len, *, depth: int, max_k: int, axis: str,
+                       width: int, n_docs: int, use_kernel: bool,
+                       interpret: bool):
     rows = acc[slot_idx]
     pool = _pool_from_local(rows, max_k, axis=axis, width=width,
                             use_kernel=use_kernel, interpret=interpret)
@@ -1203,7 +1300,8 @@ def _ssched_finalize_k(acc, sd_b, s3_b, slot_idx, k_vec, qids, doc_len, *,
     pool = jnp.where(keep, pool, -1)
     stage2 = _sh_stage2(sd_b[slot_idx], s3_b[slot_idx], doc_len, qids,
                         axis=axis, width=width, n_docs=n_docs)
-    return _sh_rerank(stage2, pool, axis=axis, width=width, depth=depth)
+    return _sh_rerank(stage2, _depth_mask(pool, dvec), axis=axis,
+                      width=width, depth=depth)
 
 
 class ShardedSchedPrograms(SchedPrograms):
@@ -1272,9 +1370,9 @@ class ShardedSchedPrograms(SchedPrograms):
             "refill": (ss, ss, ss, ss, ss, ss, ss3, sacc, r1,
                        ss, ss, ss, ss, ss, ss, ss3),
             "chunk": (ss, ss, ss, ss, ss, sacc, r1, r1),
-            "finalize": ((sacc, ss, ss3, r1, r1, P(axis))
+            "finalize": ((sacc, ss, ss3, r1, r1, r1, P(axis))
                          if cfg.knob == "rho"
-                         else (sacc, ss, ss3, r1, r1, r1, P(axis))),
+                         else (sacc, ss, ss3, r1, r1, r1, r1, P(axis))),
         }
         smap = e._smap
         self._gather_fn = smap(

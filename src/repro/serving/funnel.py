@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cascade as cascade_lib
+from repro.core import knobs as knobs_lib
 from repro.core import labeling, med
 from repro.models.recsys import bst as BS
 from repro.models.recsys import retrieval_tower as RT
@@ -42,6 +43,20 @@ class FunnelConfig:
     eval_depth: int = 50
     tau: float = 0.05
     rbp_p: float = 0.9
+    depth_cutoffs: tuple[int, ...] | None = None  # reranking-depth grid
+    #                                 (third knob); must end at
+    #                                 max(cutoffs) — the widest pool a
+    #                                 request can be served from — so
+    #                                 the top class masks nothing
+
+    def __post_init__(self):
+        knobs_lib.KnobSpec("k", tuple(self.cutoffs))
+        if self.depth_cutoffs is not None:
+            spec = knobs_lib.KnobSpec("depth", tuple(self.depth_cutoffs))
+            if spec.reference() != max(self.cutoffs):
+                raise ValueError(
+                    f"funnel depth grid must end at max(cutoffs)="
+                    f"{max(self.cutoffs)}, got {spec.reference()}")
 
 
 def request_features(user_feats: jnp.ndarray,
@@ -114,8 +129,13 @@ def _bst_scores(bst_params, bst_cfg, hist_items, cand: jnp.ndarray,
 
 
 def funnel_gold_runs(cfg: FunnelConfig, tower_params, bst_params,
-                     user_feats, hist_items):
-    """Gold run A (stage-2 over the deep pool) + per-k candidate runs."""
+                     user_feats, hist_items, cutoffs=None):
+    """Gold run A (stage-2 over the deep pool) + per-cutoff candidate
+    runs.  ``cutoffs`` defaults to the k grid; passing another knob's
+    grid (e.g. ``cfg.depth_cutoffs``) produces that knob's runs through
+    the *same* prefix-mask code path — in the funnel both k and depth
+    bound a prefix of the stage-1 pool order, which is exactly the
+    registry's claim that one framework drives every knob."""
     pool_ids, pool_vals = RT.retrieve_topk(tower_params, cfg.tower,
                                            user_feats, cfg.pool_depth)
     s2 = _bst_scores(bst_params, cfg.bst, hist_items, pool_ids, pool_vals)
@@ -128,23 +148,26 @@ def funnel_gold_runs(cfg: FunnelConfig, tower_params, bst_params,
         live = jnp.take_along_axis(masked, order, axis=1) > -jnp.inf
         return jnp.where(live, ids, -1).astype(jnp.int32)
 
+    cuts = cfg.cutoffs if cutoffs is None else tuple(cutoffs)
     gold = rank(cfg.pool_depth)
-    runs = {k: rank(k) for k in cfg.cutoffs}
+    runs = {k: rank(k) for k in cuts}
     return gold, runs
 
 
-def label_requests(cfg: FunnelConfig, gold, runs) -> np.ndarray:
+def label_requests(cfg: FunnelConfig, gold, runs,
+                   cutoffs=None) -> np.ndarray:
+    cuts = cfg.cutoffs if cutoffs is None else tuple(cutoffs)
     table = np.stack(
         [np.asarray(med.med_rbp(gold, runs[k], p=cfg.rbp_p))
-         for k in cfg.cutoffs], axis=1)
+         for k in cuts], axis=1)
     return np.asarray(labeling.envelope_labels(table, cfg.tau)), table
 
 
 @functools.partial(jax.jit, static_argnames=("tower_cfg", "bst_cfg",
                                              "max_k", "eval_depth"))
 def _serve_single_dispatch(tower_params, bst_params, user_feats,
-                           hist_items, k_vec, *, tower_cfg, bst_cfg,
-                           max_k: int, eval_depth: int):
+                           hist_items, k_vec, depth_vec, *, tower_cfg,
+                           bst_cfg, max_k: int, eval_depth: int):
     """Batch-once funnel serving: run the towers and the stage-2 model
     once at a static shared pool width; the predicted per-request k is a
     traced prefix mask over that shared pool, so every k bucket in the
@@ -154,13 +177,19 @@ def _serve_single_dispatch(tower_params, bst_params, user_feats,
     global maximum), so stage-2 compute still scales with what the
     cascade asked for; the executable count stays bounded by the cutoff
     grid instead of growing with distinct per-batch class combinations.
-    Each request's stage-1 normalization spans only its own k prefix
-    (norm_width), so its ranking is independent of batch composition."""
+    Each request's stage-1 normalization spans only its own served
+    prefix (norm_width), so its ranking is independent of batch
+    composition.
+
+    ``depth_vec`` is the traced per-request reranking depth (the third
+    knob): the served prefix is ``min(k, depth)``, so pinning depth to
+    the grid maximum reduces to the k-only program bit-identically."""
+    eff = jnp.minimum(k_vec, depth_vec)
     ids, vals = RT.retrieve_topk(tower_params, tower_cfg, user_feats,
                                  max_k)
     s2 = _bst_scores(bst_params, bst_cfg, hist_items, ids, vals,
-                     norm_width=k_vec)
-    masked = jnp.where(jnp.arange(max_k)[None, :] < k_vec[:, None],
+                     norm_width=eff)
+    masked = jnp.where(jnp.arange(max_k)[None, :] < eff[:, None],
                        s2, -jnp.inf)
     order = jnp.argsort(-masked, axis=1)[:, :eval_depth]
     ranked = jnp.take_along_axis(ids, order, axis=1)
@@ -175,39 +204,73 @@ class Funnel:
     bst_params: dict
     cascade: cascade_lib.Cascade
     threshold: float = 0.75
+    depth_cascade: cascade_lib.Cascade | None = None
+
+    def __post_init__(self):
+        if (self.depth_cascade is not None
+                and self.cfg.depth_cutoffs is None):
+            raise ValueError("depth_cascade given but cfg.depth_cutoffs "
+                             "is None — declare the depth grid")
 
     # The predict/execute split is the serving.service.Backend contract:
     # ``predict`` is the admission-side cascade (overlappable with the
     # previous batch's dispatch), ``execute`` the stage-1/2 funnel proper.
 
-    def predict(self, user_feats, hist_items) -> np.ndarray:
-        """Pre-retrieval features -> predicted class per request."""
+    @property
+    def has_depth_knob(self) -> bool:
+        return self.cfg.depth_cutoffs is not None
+
+    def predict(self, user_feats, hist_items,
+                knob: str = "k") -> np.ndarray:
+        """Pre-retrieval features -> predicted class per request, for
+        the named knob.  A declared depth knob with no cascade predicts
+        the no-envelope class (-> full depth, a no-op mask)."""
+        casc = self.cascade if knob == "k" else self.depth_cascade
+        if knob == "depth" and casc is None:
+            return np.full(np.asarray(user_feats).shape[0],
+                           len(self.cfg.depth_cutoffs), np.int32)
         feats = request_features(jnp.asarray(user_feats),
                                  jnp.asarray(hist_items))
         return np.asarray(cascade_lib.predict_batched(
-            self.cascade, feats, self.threshold))
+            casc, feats, self.threshold))
 
-    def params_of(self, classes: np.ndarray) -> np.ndarray:
-        return np.array(self.cfg.cutoffs)[
-            np.minimum(classes, len(self.cfg.cutoffs) - 1)]
+    def params_of(self, classes: np.ndarray,
+                  knob: str = "k") -> np.ndarray:
+        cuts = (self.cfg.cutoffs if knob == "k"
+                else self.cfg.depth_cutoffs)
+        return knobs_lib.KnobSpec(knob, tuple(cuts)).params_of(classes)
 
-    def execute(self, user_feats, hist_items,
-                classes: np.ndarray) -> dict:
-        """Run the funnel at the predicted per-request depths."""
+    def execute(self, user_feats, hist_items, classes: np.ndarray,
+                depth_classes: np.ndarray | None = None) -> dict:
+        """Run the funnel at the predicted per-request pool cutoffs and
+        (when the depth knob is live) reranking depths."""
         ks = self.params_of(np.asarray(classes))
+        if depth_classes is not None:
+            depths = self.params_of(np.asarray(depth_classes),
+                                    knob="depth")
+        else:
+            # depth knob off: every request at the full pool (no-op mask)
+            depths = np.full_like(ks, max(self.cfg.cutoffs))
         ranked = np.asarray(_serve_single_dispatch(
             self.tower_params, self.bst_params,
             jnp.asarray(user_feats), jnp.asarray(hist_items),
-            jnp.asarray(ks, jnp.int32),
+            jnp.asarray(ks, jnp.int32), jnp.asarray(depths, jnp.int32),
             tower_cfg=self.cfg.tower, bst_cfg=self.cfg.bst,
             max_k=int(ks.max()),
             eval_depth=self.cfg.eval_depth))
         out = np.full((np.asarray(user_feats).shape[0],
                        self.cfg.eval_depth), -1, np.int32)
         out[:, :ranked.shape[1]] = ranked[:, :self.cfg.eval_depth]
-        return {"ranked": out, "k": ks, "classes": np.asarray(classes),
-                "mean_k": float(ks.mean())}
+        res = {"ranked": out, "k": ks, "classes": np.asarray(classes),
+               "mean_k": float(ks.mean())}
+        if depth_classes is not None:
+            res["depths"] = depths
+            res["depth_classes"] = np.asarray(depth_classes)
+        return res
 
     def serve(self, user_feats, hist_items) -> dict:
+        dcls = (self.predict(user_feats, hist_items, knob="depth")
+                if self.has_depth_knob else None)
         return self.execute(user_feats, hist_items,
-                            self.predict(user_feats, hist_items))
+                            self.predict(user_feats, hist_items),
+                            depth_classes=dcls)

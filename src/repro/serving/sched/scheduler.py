@@ -79,6 +79,12 @@ class ContinuousScheduler:
         self.on_results = on_results
         self.clock = clock
         self.knob = server.cfg.knob
+        # the depth knob retires each slot at its predicted reranking
+        # depth; the fixed arm and depth-off configs use the static pool
+        # width (a no-op mask — bit-identical to the depth-free program)
+        self.full_depth = int(server.cfg.depth_pool_width)
+        self.use_depth = (fixed_param is None
+                          and getattr(server, "has_depth_knob", False))
         self.query_len = query_len
         self._est = queue.cfg.service_estimate_ms / 1e3
         self._state = None             # SchedState; tick-thread only
@@ -91,6 +97,12 @@ class ContinuousScheduler:
         self.n_refill_calls = 0
         self.n_chunk_calls = 0
         self.n_finalize_calls = 0
+        # stage-2 work accounting under the depth knob: candidate-pool
+        # rows admitted into the rerank vs the depth-free pool rows.
+        # Pure host arithmetic over admission-time predictions, so the
+        # counters are deterministic across runs and platforms.
+        self.n_rows_scored = 0
+        self.n_rows_full = 0
 
     # -------------------------------------------------------------- tick --
     def tick(self, now: float | None = None) -> int:
@@ -116,6 +128,8 @@ class ContinuousScheduler:
                 "n_refill_calls": self.n_refill_calls,
                 "n_chunk_calls": self.n_chunk_calls,
                 "n_finalize_calls": self.n_finalize_calls,
+                "n_rows_scored": self.n_rows_scored,
+                "n_rows_full": self.n_rows_full,
                 "retire_reasons": dict(self.retire_reasons),
                 "chunks_max": self.prog.n_chunks,
                 "slots": self.slots,
@@ -134,11 +148,13 @@ class ContinuousScheduler:
         pad = len(g)
         idx = np.full(self.grain, g[0].idx, np.int32)
         pvec = np.ones(self.grain, np.int32)
+        dvec = np.ones(self.grain, np.int32)
         qids = np.full(self.grain, g[0].qid, np.int32)
         idx[:pad] = [s.idx for s in g]
         pvec[:pad] = [s.width for s in g]
+        dvec[:pad] = [s.depth for s in g]
         qids[:pad] = [s.qid for s in g]
-        ranked = self.prog.finalize(self._state, idx, pvec, qids)
+        ranked = self.prog.finalize(self._state, idx, pvec, dvec, qids)
         t_done = self.clock()
         reqs, results = [], []
         for i, s in enumerate(g):
@@ -148,6 +164,9 @@ class ContinuousScheduler:
                 "class": (None if self.fixed_param is not None
                           else int(s.pred_class)),
                 "width": float(s.width),
+                "depth": float(s.depth),
+                "depth_class": (int(s.depth_class) if self.use_depth
+                                else None),
                 "predictor_version": s.version,
                 "queue_ms": (s.t_admit - r.t_submit) * 1e3,
                 "predict_ms": s.predict_ms,
@@ -168,6 +187,13 @@ class ContinuousScheduler:
                             service_ms=(t_done - t0) * 1e3)
         with self._lock:
             for s in g:
+                # pool rows the rerank actually scored for this slot vs
+                # the depth-free pool (k: the predicted pool width,
+                # clamped to the static pool; rho: the static depth)
+                full = (min(s.width, self.full_depth)
+                        if self.knob == "k" else self.full_depth)
+                self.n_rows_scored += min(s.depth, full)
+                self.n_rows_full += full
                 self.table.release(s)
             self.n_finalize_calls += 1
         return len(g)
@@ -284,6 +310,11 @@ class ContinuousScheduler:
                                     self.server.cfg.stream_cap)
         else:
             widths = np.asarray(self.server.params_of(classes))
+        if self.use_depth:
+            dclasses, depths = self.server.predict_depths(
+                qt[: len(group)])
+        else:
+            dclasses, depths = None, None
         with self._lock:
             occ = self.table.n_occupied / self.slots
             for i, (s, r) in enumerate(zip(taken, group)):
@@ -291,6 +322,10 @@ class ContinuousScheduler:
                 s.qid = int(r.seq)
                 s.pred_class = int(classes[i])
                 s.width = int(widths[i])
+                s.depth = (int(depths[i]) if depths is not None
+                           else self.full_depth)
+                s.depth_class = (int(dclasses[i])
+                                 if dclasses is not None else -1)
                 s.version = int(ver)
                 s.predict_ms = predict_ms
                 s.t_admit = t
@@ -396,5 +431,13 @@ class ContinuousScheduler:
             for w in range(m, top + 1, m):
                 self.server.predict_classes(np.full((w, ql), -1,
                                                     np.int32))
+        if self.use_depth and "depth" in getattr(self.server,
+                                                 "_predict_fns", {}):
+            # the depth cascade runs on admitted groups (<= grain rows,
+            # padded to the batch grid) — one extra predict executable
+            m = engine.batch_multiple
+            w = bucketing.pad_length(self.grain, m)
+            self.server.predict_classes(np.full((w, ql), -1, np.int32),
+                                        knob="depth")
         with engine._cache_lock:
             return engine.n_compiles - before

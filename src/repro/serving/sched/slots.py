@@ -28,6 +28,10 @@ class Slot:
     qid: int = 0                      # arrival index -> stage-2 noise key
     pred_class: int = 0               # cascade class at admission
     width: int = 0                    # predicted param (rho or k)
+    depth: int = 0                    # predicted reranking depth (the
+    #                                 static pool width when the depth
+    #                                 knob is off — a no-op mask)
+    depth_class: int = -1             # depth-cascade class (-1: knob off)
     version: int = 0                  # predictor version at admission
     end: int = 0                      # postings to execute (<= stream len)
     pos: int = 0                      # postings executed so far
@@ -47,6 +51,8 @@ class Slot:
     def reset(self) -> None:
         self.req = None
         self.qid = self.pred_class = self.width = 0
+        self.depth = 0
+        self.depth_class = -1
         self.version = self.end = self.pos = self.chunks = 0
         self.lend = self.lpos = 0
         self.predict_ms = self.t_admit = self.t_retire = 0.0

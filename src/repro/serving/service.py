@@ -127,11 +127,19 @@ class EngineBackend:
 
     def execute(self, qt, pred) -> tuple[list[dict], dict]:
         classes, ver = pred
-        widths = self.server.params_of(np.asarray(classes))
-        ranked, timings = self.server.engine.serve(qt, widths)
+        server = self.server
+        widths = server.params_of(np.asarray(classes))
+        dclasses, depths = (server.predict_depths(qt)
+                            if getattr(server, "has_depth_knob", False)
+                            else (None, None))
+        ranked, timings = server.engine.serve(qt, widths,
+                                              depth_vec=depths)
         results = [
             {"ranked": ranked[i], "class": int(classes[i]),
-             "width": float(widths[i]), "predictor_version": ver}
+             "width": float(widths[i]), "predictor_version": ver,
+             "depth": (float(depths[i]) if depths is not None else None),
+             "depth_class": (int(dclasses[i]) if dclasses is not None
+                             else None)}
             for i in range(qt.shape[0])
         ]
         return results, timings
@@ -139,10 +147,15 @@ class EngineBackend:
     def warmup_shape(self, padded_size: int) -> int | None:
         if not self.query_len:
             return None                # no batch seen yet to size queries
-        n = self.server.engine.warmup_shape(padded_size, self.query_len)
+        with_depth = getattr(self.server, "has_depth_knob", False)
+        n = self.server.engine.warmup_shape(padded_size, self.query_len,
+                                            with_depth=with_depth)
+        dummy = np.full((padded_size, self.query_len), -1, np.int32)
         if self.server.cascade is not None:
-            self.server.predict_classes(
-                np.full((padded_size, self.query_len), -1, np.int32))
+            self.server.predict_classes(dummy)
+        if with_depth and "depth" in getattr(self.server,
+                                             "_predict_fns", {}):
+            self.server.predict_classes(dummy, knob="depth")
         return n
 
     @property
@@ -158,11 +171,12 @@ class EngineBackend:
         return getattr(self.server, "predictor_version", 0)
 
     def swap_predictor(self, node_params, thresholds=None, *,
-                       version: int | None = None) -> int:
-        """Hot-swap the cascade weights in the server's jitted predict
-        path (see ``pipeline.RetrievalServer.swap_predictor``)."""
+                       version: int | None = None,
+                       knob: str | None = None) -> int:
+        """Hot-swap a knob's cascade weights in the server's jitted
+        predict path (see ``pipeline.RetrievalServer.swap_predictor``)."""
         return self.server.swap_predictor(node_params, thresholds,
-                                          version=version)
+                                          version=version, knob=knob)
 
 
 class ShardedEngineBackend(EngineBackend):
@@ -258,9 +272,10 @@ class ContinuousBackend:
         return getattr(self.server, "predictor_version", 0)
 
     def swap_predictor(self, node_params, thresholds=None, *,
-                       version: int | None = None) -> int:
+                       version: int | None = None,
+                       knob: str | None = None) -> int:
         return self.server.swap_predictor(node_params, thresholds,
-                                          version=version)
+                                          version=version, knob=knob)
 
 
 class FunnelBackend:
@@ -301,11 +316,16 @@ class FunnelBackend:
     def execute(self, batch, classes) -> tuple[list[dict], dict]:
         n, uf, hist, cls = self._pad(*batch, classes)
         t0 = time.perf_counter()
-        out = self.funnel.execute(uf, hist, cls)
+        dcls = (self.funnel.predict(uf, hist, knob="depth")
+                if getattr(self.funnel, "has_depth_knob", False)
+                else None)
+        out = self.funnel.execute(uf, hist, cls, depth_classes=dcls)
         timings = {"funnel_ms": (time.perf_counter() - t0) * 1e3}
         results = [
             {"ranked": out["ranked"][i], "class": int(classes[i]),
-             "width": float(out["k"][i])}
+             "width": float(out["k"][i]),
+             "depth": (float(out["depths"][i]) if dcls is not None
+                       else None)}
             for i in range(n)
         ]
         return results, timings
@@ -844,7 +864,8 @@ class RetrievalService:
             return self._outstanding
 
     def swap_predictor(self, node_params, thresholds=None, *,
-                       version: int | None = None) -> int:
+                       version: int | None = None,
+                       knob: str | None = None) -> int:
         """Hot-swap hook: delegate to the backend when it supports
         swapping (EngineBackend / ShardedEngineBackend)."""
         fn = getattr(self.backend, "swap_predictor", None)
@@ -852,7 +873,7 @@ class RetrievalService:
             raise TypeError(
                 f"backend {type(self.backend).__name__} has no "
                 "swap_predictor hook")
-        return fn(node_params, thresholds, version=version)
+        return fn(node_params, thresholds, version=version, knob=knob)
 
     def stop(self, drain: bool = True) -> None:
         if drain:

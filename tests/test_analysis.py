@@ -331,7 +331,7 @@ def test_service_stop_during_inflight_swap_has_no_ordering_violation(
     # instrument before any service thread starts
     with S.lock_order(server, server.engine, service,
                       service.queue) as graph:
-        live_params, _ = server._live
+        live_params, _ = server._live[server.cfg.knob]
         swaps = {"n": 0}
 
         def swapper():

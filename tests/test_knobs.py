@@ -1,0 +1,106 @@
+"""Knob registry (core.knobs): named cutoff grids shared by every
+per-query knob (rho, k, depth), KnobSpec validation/params_of semantics,
+depth-grid derivation, and the same-cascade-machinery contract."""
+
+import numpy as np
+import pytest
+
+from repro.core import cascade as cascade_lib
+from repro.core import knobs as knobs_lib
+from repro.core import labeling
+
+
+# ------------------------------------------------------------- KnobSpec --
+
+def test_knob_names_cover_the_three_knobs():
+    assert knobs_lib.KNOB_NAMES == ("rho", "k", "depth")
+
+
+def test_knobspec_registry_is_open():
+    """Any name is a legal KnobSpec (the registry is open by design) —
+    only the three KNOB_NAMES have end-to-end serving plumbing."""
+    spec = knobs_lib.KnobSpec("budget", (1, 2, 3))
+    assert spec.reference() == 3
+
+
+def test_knobspec_rejects_empty_and_nonpositive():
+    with pytest.raises(ValueError, match="empty"):
+        knobs_lib.KnobSpec("k", ())
+    with pytest.raises(ValueError, match="positive"):
+        knobs_lib.KnobSpec("k", (0, 10))
+
+
+def test_knobspec_rejects_decreasing_grid():
+    with pytest.raises(ValueError, match="non-decreasing"):
+        knobs_lib.KnobSpec("rho", (8, 4, 16))
+
+
+def test_knobspec_allows_clamped_duplicates():
+    """Experiment grids clamp fractional cutoffs to the pool width, so
+    repeated maxima are legal (non-decreasing, not strictly ascending)."""
+    spec = knobs_lib.KnobSpec("k", (20, 50, 100, 100, 100))
+    assert spec.n_cutoffs == 5 and spec.n_classes == 6
+    assert spec.reference() == 100
+
+
+@pytest.mark.parametrize("name", knobs_lib.KNOB_NAMES)
+def test_params_of_maps_classes_through_the_grid(name):
+    spec = knobs_lib.KnobSpec(name, (10, 20, 40))
+    classes = np.array([0, 1, 2, 3, -1, 99])
+    got = spec.params_of(classes)
+    # in-grid classes index the grid; the no-envelope class (and any
+    # clamped overflow) maps to the reference; negatives clamp to 0
+    np.testing.assert_array_equal(got, [10, 20, 40, 40, 10, 40])
+
+
+def test_params_of_fallback_pins_every_query_to_reference():
+    spec = knobs_lib.KnobSpec("depth", (5, 10, 30))
+    classes = np.array([0, 1, 2, 3])
+    np.testing.assert_array_equal(
+        spec.params_of(classes, fallback=True), np.full(4, 30))
+
+
+# --------------------------------------------------------- depth grids --
+
+def test_depth_cutoffs_end_exactly_at_pool_width():
+    cuts = knobs_lib.depth_cutoffs(30)
+    assert cuts[-1] == 30
+    assert list(cuts) == sorted(cuts)
+    assert all(1 <= c <= 30 for c in cuts)
+
+
+def test_depth_cutoffs_tiny_pool_dedupes():
+    cuts = knobs_lib.depth_cutoffs(3)
+    assert cuts[-1] == 3 and len(set(cuts)) == len(cuts)
+
+
+def test_depth_cutoffs_custom_fractions():
+    assert knobs_lib.depth_cutoffs(100, fractions=(0.25, 0.5, 1.0)) \
+        == (25, 50, 100)
+
+
+# ------------------------------------- shared cascade machinery contract --
+
+def test_every_knob_trains_through_the_same_cascade_path():
+    """The registry's claim made literal: one labeling + training +
+    threshold-tuning code path drives a cascade for each knob's grid —
+    only the KnobSpec (name + cutoffs) differs."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(160, 6)).astype(np.float32)
+    grids = {"rho": (8, 16, 32), "k": (10, 20, 40),
+             "depth": knobs_lib.depth_cutoffs(30, (0.2, 0.5, 1.0))}
+    for name, cuts in grids.items():
+        spec = knobs_lib.KnobSpec(name, cuts)
+        # judgment-free labels: MED-vs-own-reference table, monotone in
+        # the knob (larger parameter -> closer to reference)
+        med = np.sort(rng.uniform(0, 0.2, (160, spec.n_cutoffs)),
+                      axis=1)[:, ::-1].copy()
+        labels = np.asarray(labeling.envelope_labels(med, tau=0.1))
+        casc = cascade_lib.train_cascade(
+            x, labels, n_cutoffs=spec.n_cutoffs,
+            forest_kwargs=dict(n_trees=3, max_depth=3))
+        thr = cascade_lib.tune_thresholds(casc, x, med, cuts, tau=0.1)
+        classes = np.asarray(cascade_lib.predict_batched(casc, x, thr))
+        params = spec.params_of(classes)
+        assert params.shape == (160,)
+        assert set(params.tolist()) <= set(cuts)

@@ -281,7 +281,8 @@ def test_swap_rejects_shape_mismatch(small_system):
     with pytest.raises(ValueError, match="mismatch|structure"):
         server.swap_predictor(other.node_params)
     with pytest.raises(ValueError, match="thresholds"):
-        server.swap_predictor(server._live[0], thresholds=[0.5, 0.5])
+        server.swap_predictor(server._live[server.cfg.knob][0],
+                              thresholds=[0.5, 0.5])
 
 
 def test_swap_requires_a_cascade(small_system):
@@ -316,6 +317,202 @@ def test_compile_count_constant_under_swaps_and_mixed_batches(
     assert rec.new_compiles == 0
     assert server.engine.n_compiles == base
     assert server.predictor_version == store.current().version
+
+
+# --------------------------------------------- importance sampling (sat) --
+
+def test_importance_sampling_deterministic_and_margin_greedy(small_system):
+    """importance=True labels the smallest-margin (hardest) queries
+    first, the selection is a pure function of the telemetry stream
+    (two executors over the same ring pick identical records), and the
+    cursor consumes the whole oversized pool."""
+    casc = _cascade(small_system)
+    server = _server(small_system, casc)
+    buf = TelemetryBuffer(capacity=64)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=16, pad_multiple=8), telemetry=buf)
+    service.serve_all(list(small_system.queries.terms[:32]))
+
+    a = ShadowExecutor(server, buf, sample=8, importance=True,
+                       pool_factor=2, seed=0)
+    b = ShadowExecutor(server, buf, sample=8, importance=True,
+                       pool_factor=2, seed=99)      # seed-independent
+    ba, bb = a.run_once(), b.run_once()
+    np.testing.assert_array_equal(ba.features, bb.features)
+    np.testing.assert_array_equal(ba.med, bb.med)
+    # the 8 selected have the smallest margins in the 16-record pool
+    pool = buf.snapshot()[:16]
+    qt = np.stack([np.asarray(r.payload) for r in pool])
+    margin = np.asarray(server.predict_margin(qt))
+    picked = np.sort(np.argsort(margin, kind="stable")[:8])
+    np.testing.assert_array_equal(
+        ba.features,
+        np.asarray(ShadowExecutor(server, buf, sample=16,
+                                  seed=0).run_once().features)[picked])
+    # the pool is consumed whole: cycle 2 labels records 16.., and a
+    # third cycle finds nothing unread (unselected skipped for good)
+    assert a.run_once().max_seq >= 16
+    assert a.run_once() is None
+
+
+def test_predict_margin_zero_without_cascade(small_system):
+    server = _server(small_system, None)
+    m = server.predict_margin(small_system.queries.terms[:4])
+    np.testing.assert_array_equal(m, np.zeros(4, np.float32))
+
+
+# ------------------------------------------------- warm refits (sat) --
+
+def test_warm_refit_carries_trees_and_stays_swap_compatible(small_system):
+    """A warm_frac=0.5 refit carries the first half of every node's
+    trees verbatim, regrows the rest, and publishes through the
+    PredictorStore template (same shapes after padding) — installing it
+    hot-swaps with zero recompiles."""
+    sys_ = small_system
+    casc_a = _cascade(sys_, seed=0)
+    labels = np.random.default_rng(5).integers(
+        0, casc_a.n_cutoffs + 1, sys_.features.shape[0])
+    casc_w = cascade_lib.train_cascade(
+        sys_.features, labels, n_cutoffs=casc_a.n_cutoffs, seed=7,
+        forest_kwargs=FOREST_KW, warm=casc_a, warm_frac=0.5)
+    n_carry = round(0.5 * FOREST_KW["n_trees"])
+    for old, new in zip(casc_a.nodes, casc_w.nodes):
+        w = min(old.feature.shape[1], new.feature.shape[1])
+        np.testing.assert_array_equal(new.feature[:n_carry, :w],
+                                      old.feature[:n_carry, :w])
+        np.testing.assert_array_equal(new.leaf[:n_carry, :w],
+                                      old.leaf[:n_carry, :w])
+        # the regrown tail is fresh (trained on different labels)
+        assert not np.array_equal(new.feature[n_carry:, :w],
+                                  old.feature[n_carry:, :w])
+
+    server = _server(sys_, casc_a)
+    qt = sys_.queries.terms[:16]
+    server.serve_batch(qt)
+    base = server.engine.n_compiles
+    store = PredictorStore(casc_a, [server.cfg.threshold] * casc_a.n_cutoffs)
+    store.publish(casc_w, [server.cfg.threshold] * casc_w.n_cutoffs)
+    store.install(server)                        # warm fit: same shapes
+    server.serve_batch(qt)
+    assert server.engine.n_compiles == base
+
+
+def test_warm_refit_rejects_incompatible_template(small_system):
+    sys_ = small_system
+    casc_a = _cascade(sys_, seed=0)
+    y = np.ones(sys_.features.shape[0], np.int64)
+    with pytest.raises(ValueError, match="swap-compatible"):
+        forest_lib.train_forest(
+            sys_.features, y % 2, n_classes=2, n_trees=4, max_depth=6,
+            warm=casc_a.nodes[0], warm_frac=0.5)  # deeper than warm
+
+
+def test_trainer_warm_frac_uses_previous_fit(small_system):
+    """CascadeTrainer(warm_frac>0) carries trees from its own previous
+    retrain — fit 2's first trees equal fit 1's."""
+    from repro.online.shadow import ShadowBatch
+    from repro.online.trainer import CascadeTrainer, TrainerConfig
+
+    sys_ = small_system
+    tr = CascadeTrainer(
+        TrainerConfig(window=64, min_labels=16, retrain_every=16,
+                      forest_kwargs=FOREST_KW, warm_frac=0.5),
+        sys_.k_cutoffs)
+    rng = np.random.default_rng(0)
+
+    def batch(lo):
+        n = 16
+        med = np.sort(rng.uniform(0, 0.2, (n, len(sys_.k_cutoffs))),
+                      axis=1)[:, ::-1].copy()
+        return ShadowBatch(
+            features=np.asarray(sys_.features[lo:lo + n]), med=med,
+            observed_med=med[:, -1], served_class=np.zeros(n, np.int64),
+            predictor_version=np.zeros(n, np.int64), t_wall=0.0,
+            max_seq=lo + n)
+
+    tr.add(batch(0))
+    c1, _ = tr.retrain(tau=0.1)
+    tr.add(batch(16))
+    c2, _ = tr.retrain(tau=0.1)
+    n_carry = round(0.5 * FOREST_KW["n_trees"])
+    w = min(c1.nodes[0].feature.shape[1], c2.nodes[0].feature.shape[1])
+    np.testing.assert_array_equal(c2.nodes[0].feature[:n_carry, :w],
+                                  c1.nodes[0].feature[:n_carry, :w])
+
+
+# --------------------------------------------- depth knob online (sat) --
+
+def _depth_server(sys_, casc, seed=0):
+    from repro.core import knobs as knobs_lib
+
+    cuts = sys_.k_cutoffs
+    cfg = serve_lib.ServingConfig(
+        knob="k", cutoffs=cuts, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap,
+        depth_cutoffs=knobs_lib.depth_cutoffs(int(max(cuts))))
+    dlabels = np.random.default_rng(seed + 50).integers(
+        0, len(cfg.depth_cutoffs) + 1, sys_.features.shape[0])
+    dcasc = cascade_lib.train_cascade(
+        sys_.features, dlabels, n_cutoffs=len(cfg.depth_cutoffs),
+        seed=seed + 50, forest_kwargs=FOREST_KW)
+    return serve_lib.RetrievalServer(sys_.index, casc, cfg,
+                                     depth_cascade=dcasc)
+
+
+def test_shadow_labels_the_depth_knob_from_the_same_reference(
+        small_system):
+    """One shadow cycle labels *both* knobs from a single reference run:
+    med_by_knob['depth'] carries the (n, d) depth table plus the
+    observed MED at each record's logged depth class."""
+    casc = _cascade(small_system)
+    server = _depth_server(small_system, casc)
+    buf = TelemetryBuffer(capacity=64)
+    service = RetrievalService(
+        EngineBackend(server),
+        AdmissionConfig(max_batch=16, pad_multiple=8), telemetry=buf)
+    service.serve_all(list(small_system.queries.terms[:16]))
+    recs = buf.snapshot()
+    grid = set(server.cfg.depth_cutoffs)
+    assert all(int(r.depth) in grid for r in recs)   # depths logged
+    batch = ShadowExecutor(server, buf, sample=16, seed=0).run_once()
+    sub = batch.med_by_knob["depth"]
+    nd = len(server.cfg.depth_cutoffs)
+    assert sub["med"].shape == (16, nd)
+    assert (sub["med"][:, -1] == 0).all()   # full depth == the reference
+    for i, r in enumerate(recs):
+        assert sub["served_class"][i] == r.depth_class
+        if 0 <= r.depth_class:
+            assert sub["observed_med"][i] == \
+                sub["med"][i, min(r.depth_class, nd - 1)]
+
+
+def test_controller_adapts_every_knob(small_system):
+    """The per-knob controller retrains and hot-swaps both the primary
+    and the depth cascade from the same shadow batches."""
+    casc = _cascade(small_system)
+    server = _depth_server(small_system, casc)
+    service = RetrievalService(
+        EngineBackend(server,
+                      query_len=small_system.queries.terms.shape[1]),
+        AdmissionConfig(max_batch=16, pad_multiple=8),
+        telemetry=TelemetryBuffer(capacity=128))
+    ctrl = OnlineController(service, server, OnlineConfig(
+        tau=0.05, shadow_sample=16,
+        trainer=TrainerConfig(min_labels=16, retrain_every=16, window=64,
+                              forest_kwargs=FOREST_KW)))
+    assert set(ctrl.trainers) == {"k", "depth"}
+    for lo in (0, 16, 32):
+        service.serve_all(list(small_system.queries.terms[lo:lo + 16]))
+        ctrl.step()
+    st = ctrl.stats()
+    assert st["knobs"]["k"]["n_retrains"] >= 2
+    assert st["knobs"]["depth"]["n_retrains"] >= 2
+    assert st["knobs"]["depth"]["n_published"] >= 3   # boot + retrains
+    # both live entries swapped in; the service still serves
+    assert set(server._live) == {"k", "depth"}
+    out = service.serve_all(list(small_system.queries.terms[:5]))
+    assert len(out) == 5 and all(r["depth"] is not None for r in out)
 
 
 # --------------------------------------------------------- drift monitor --

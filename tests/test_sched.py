@@ -38,8 +38,14 @@ def _server(sys_, knob="rho", class_shift=None, **cfg_kw):
     server = serve_lib.RetrievalServer(sys_.index, None, cfg)
     n_cls = len(cuts) + 1
     shift = class_shift if class_shift is not None else {"v": 0}
-    server.predict_classes = (
-        lambda qt: ((_hash_rows(qt) + shift["v"]) % n_cls).astype(np.int64))
+    real = server.predict_classes
+
+    def stub(qt, knob=None):
+        if knob not in (None, cfg.knob):      # depth etc.: real registry
+            return real(qt, knob=knob)
+        return ((_hash_rows(qt) + shift["v"]) % n_cls).astype(np.int64)
+
+    server.predict_classes = stub
     return server, shift
 
 
@@ -128,6 +134,98 @@ def test_mid_flight_hot_swap_bit_identity(small_system):
     ranked_ref, _ = server.engine.serve(qt, widths)
     for i, res in enumerate(out):
         np.testing.assert_array_equal(res["ranked"], ranked_ref[i])
+
+
+# ------------------------------------------- depth knob under churn --
+
+def _depth_server(sys_, knob):
+    """Continuous-scheduler server with the depth knob live, depth
+    classes stubbed as a pure function of query content (same idiom as
+    the primary-knob stub — survives regrouping)."""
+    from repro.core import knobs as knobs_lib
+    pool = 30 if knob == "rho" else int(max(sys_.k_cutoffs))
+    server, _ = _server(sys_, knob,
+                        depth_cutoffs=knobs_lib.depth_cutoffs(pool))
+    grid = server.cfg.depth_cutoffs
+
+    def pdepth(qt):
+        cls = (_hash_rows(qt) % (len(grid) + 1)).astype(np.int64)
+        return cls, server.params_of(cls, knob="depth")
+
+    server.predict_depths = pdepth
+    return server, pdepth
+
+
+@pytest.mark.parametrize("knob", ["rho", "k"])
+def test_mixed_depth_churn_bit_identity(small_system, knob):
+    """Per-slot retirement at each query's predicted depth under churn
+    is bit-identical to one batch-once serve with the same depth vector
+    — and the stage-2 row accounting is the deterministic counter the
+    bench diffs."""
+    server, pdepth = _depth_server(small_system, knob)
+    qt = small_system.queries.terms[:40]
+    classes = np.asarray(server.predict_classes(qt))
+    dcls, depths = pdepth(qt)
+    assert len(set(depths.tolist())) > 1           # genuinely mixed
+    ranked_ref, _ = server.engine.serve(qt, server.params_of(classes),
+                                        depth_vec=depths)
+
+    backend = ContinuousBackend(server, slots=16, grain=4, window=8)
+    svc = RetrievalService(backend)
+    out = svc.serve_all(list(qt), deadline_ms=1e6)
+    for i, res in enumerate(out):
+        np.testing.assert_array_equal(res["ranked"], ranked_ref[i])
+        assert res["depth"] == depths[i]
+        assert res["depth_class"] == dcls[i]
+    sch = backend.scheduler.stats()
+    widths = np.asarray(server.params_of(classes))
+    rows, full = server._rows_scored(widths, depths)
+    assert sch["n_rows_scored"] == int(rows.sum())
+    assert sch["n_rows_full"] == int(full.sum())
+    assert sch["n_rows_scored"] < sch["n_rows_full"]   # real savings
+
+
+def test_mixed_depth_churn_compiles_nothing(small_system):
+    """Depth churn acceptance: after warmup, admit/retire cycles with
+    per-query depths spanning the whole grid compile zero executables
+    (the depth vector is traced, like rho/k)."""
+    server, _ = _depth_server(small_system, "rho")
+    L = small_system.queries.terms.shape[1]
+    backend = ContinuousBackend(server, query_len=L, slots=8, grain=4)
+    svc = RetrievalService(backend)
+    assert backend.scheduler.warmup() > 0
+    rng = np.random.default_rng(11)
+    qpool = small_system.queries.terms
+    with S.compile_sentinel(server.engine):
+        for cycle in range(12):
+            n = 1 + cycle % 8
+            rows = qpool[rng.integers(0, qpool.shape[0], n)]
+            svc.serve_all(list(rows), deadline_ms=1e6)
+    sch = backend.scheduler.stats()
+    assert sch["n_retired"] == sum(1 + c % 8 for c in range(12))
+    assert sch["n_rows_scored"] <= sch["n_rows_full"]
+
+
+def test_depth_pinned_to_max_matches_depth_free_scheduler(small_system):
+    """A depth server whose every prediction is the full pool retires
+    bit-identically to a scheduler with no depth knob at all."""
+    from repro.core import knobs as knobs_lib
+    server, _ = _server(small_system, "rho")
+    deep, _ = _server(small_system, "rho",
+                      depth_cutoffs=knobs_lib.depth_cutoffs(30))
+    # no stub: with no depth cascade, predict_depths answers the
+    # no-envelope class -> full pool for every query
+    qt = small_system.queries.terms[:24]
+    a = RetrievalService(
+        ContinuousBackend(server, slots=8, grain=4)).serve_all(
+        list(qt), deadline_ms=1e6)
+    b_backend = ContinuousBackend(deep, slots=8, grain=4)
+    b = RetrievalService(b_backend).serve_all(list(qt), deadline_ms=1e6)
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra["ranked"], rb["ranked"])
+        assert rb["depth"] == deep.cfg.depth_pool_width
+    sch = b_backend.scheduler.stats()
+    assert sch["n_rows_scored"] == sch["n_rows_full"]  # no-op mask
 
 
 # ------------------------------------------------------- O(1) compiles --

@@ -307,6 +307,97 @@ def test_funnel_backend_warmup_shape(tiny_funnel):
     assert backend.warmup_shape(8) == 0       # already warm
 
 
+# ------------------------------------------------------- funnel depth --
+
+def test_funnel_depth_pinned_to_max_bit_identical(tiny_funnel):
+    """Funnel acceptance: a depth grid with no trained depth cascade
+    serves every request at the full pool — bit-identical to the
+    depth-free funnel (min(k, max) == k in the shared dispatch)."""
+    import dataclasses as dc
+
+    from repro.core import knobs as knobs_lib
+    from repro.serving import funnel as F
+
+    funnel, uf, hist = tiny_funnel
+    cfg = dc.replace(funnel.cfg, depth_cutoffs=knobs_lib.depth_cutoffs(
+        max(funnel.cfg.cutoffs)))
+    deep = F.Funnel(cfg, funnel.tower_params, funnel.bst_params,
+                    funnel.cascade)
+    assert deep.has_depth_knob and not funnel.has_depth_knob
+    a = funnel.serve(uf, hist)
+    b = deep.serve(uf, hist)
+    assert (b["depths"] == max(cfg.cutoffs)).all()
+    np.testing.assert_array_equal(a["ranked"], b["ranked"])
+    np.testing.assert_array_equal(a["k"], b["k"])
+
+
+def test_funnel_depth_cascade_trained_via_the_same_path(tiny_funnel):
+    """The depth cascade trains through the *same* gold-run/labeling
+    code path as k (cutoffs switched to the depth grid), and a funnel
+    serving with it emits per-request depths from that grid."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.core import cascade as cascade_lib
+    from repro.core import knobs as knobs_lib
+    from repro.serving import funnel as F
+
+    funnel, uf, hist = tiny_funnel
+    cfg = dc.replace(funnel.cfg, depth_cutoffs=knobs_lib.depth_cutoffs(
+        max(funnel.cfg.cutoffs), (0.2, 0.5, 1.0)))
+    gold, runs = F.funnel_gold_runs(
+        cfg, funnel.tower_params, funnel.bst_params, jnp.asarray(uf),
+        jnp.asarray(hist), cutoffs=cfg.depth_cutoffs)
+    labels, table = F.label_requests(cfg, gold, runs,
+                                     cutoffs=cfg.depth_cutoffs)
+    assert table.shape == (uf.shape[0], len(cfg.depth_cutoffs))
+    # deeper prefixes only get closer to the gold run (on average) —
+    # the same monotonicity the k grid's table shows
+    assert table[:, 0].mean() >= table[:, -1].mean()
+    feats = np.asarray(F.request_features(jnp.asarray(uf),
+                                          jnp.asarray(hist)))
+    dcasc = cascade_lib.train_cascade(
+        feats, labels, n_cutoffs=len(cfg.depth_cutoffs),
+        forest_kwargs=dict(n_trees=3, max_depth=3))
+    deep = F.Funnel(cfg, funnel.tower_params, funnel.bst_params,
+                    funnel.cascade, depth_cascade=dcasc)
+    out = deep.serve(uf, hist)
+    assert set(out["depths"].tolist()) <= set(cfg.depth_cutoffs)
+    assert out["ranked"].shape == (uf.shape[0], cfg.eval_depth)
+
+
+def test_funnel_depth_is_the_same_prefix_mask_as_k(tiny_funnel):
+    """Depth and k bound the same stage-1 prefix: masking at depth d is
+    bit-identical to shrinking every request's k to min(k, d)."""
+    import dataclasses as dc
+
+    from repro.core import knobs as knobs_lib
+    from repro.serving import funnel as F
+
+    funnel, uf, hist = tiny_funnel
+    cfg = dc.replace(funnel.cfg, depth_cutoffs=knobs_lib.depth_cutoffs(
+        max(funnel.cfg.cutoffs), (0.4, 1.0)))
+    deep = F.Funnel(cfg, funnel.tower_params, funnel.bst_params,
+                    funnel.cascade)
+    classes = deep.predict(uf, hist)
+    d = cfg.depth_cutoffs[0]
+    via_depth = deep.execute(uf, hist, classes,
+                             depth_classes=np.zeros(uf.shape[0],
+                                                    np.int32))
+    ks = deep.params_of(classes)
+    eff = np.minimum(ks, d)
+    # the same run with k literally shrunk to the effective prefix
+    shrunk = np.asarray(F._serve_single_dispatch(
+        deep.tower_params, deep.bst_params, uf, hist,
+        np.asarray(eff, np.int32), np.asarray(eff, np.int32),
+        tower_cfg=cfg.tower, bst_cfg=cfg.bst,
+        max_k=int(eff.max()), eval_depth=cfg.eval_depth))
+    want = np.full((uf.shape[0], cfg.eval_depth), -1, np.int32)
+    want[:, :shrunk.shape[1]] = shrunk[:, :cfg.eval_depth]
+    np.testing.assert_array_equal(via_depth["ranked"], want)
+
+
 # ------------------------------------------------------------ ServerStats --
 
 def test_server_stats_empty_percentiles_nan():

@@ -28,7 +28,14 @@ def _server(sys_, knob, cutoffs, **cfg_kw):
 
 
 def _stub_classes(server, classes):
-    server.predict_classes = lambda qt, c=np.asarray(classes): c
+    real = server.predict_classes
+
+    def stub(qt, knob=None, c=np.asarray(classes)):
+        # stub the primary knob only; secondary knobs (depth) keep the
+        # real registry behavior (no cascade -> no-envelope class)
+        return c if knob in (None, server.cfg.knob) else real(qt, knob=knob)
+
+    server.predict_classes = stub
 
 
 # ------------------------------------------------------- equivalence (a) --
@@ -212,6 +219,145 @@ def test_force_kernel_env(small_system, monkeypatch):
     assert eng.use_kernel is True and eng.interpret is True
     assert ServingEngine(small_system.index, cfg,
                          use_kernel=False).use_kernel is False
+
+
+# ------------------------------------------------- depth knob (tentpole) --
+
+def _depth_server(sys_, knob, cuts, *, kernel=False):
+    """Server with the depth knob declared (grid over the candidate
+    pool) but no depth cascade — predict_depths returns the full pool
+    width for every query, the traced mask's no-op setting."""
+    from repro.core import knobs as knobs_lib
+    kw = dict(use_kernel=True, kernel_block_p=32,
+              kernel_block_d=64) if kernel else {}
+    pool = 30 if knob == "rho" else int(max(cuts))
+    cfg = serve_lib.ServingConfig(
+        knob=knob, cutoffs=cuts, rerank_depth=30,
+        stream_cap=sys_.cfg.stream_cap,
+        depth_cutoffs=knobs_lib.depth_cutoffs(pool), **kw)
+    return serve_lib.RetrievalServer(sys_.index, None, cfg)
+
+
+@pytest.mark.parametrize("kernel", [False, True],
+                         ids=["oracle", "kernel"])
+@pytest.mark.parametrize("knob", ["k", "rho"])
+def test_depth_pinned_to_max_bit_identical(small_system, knob, kernel):
+    """Acceptance: depth pinned to the pool width is bit-identical to a
+    depth-free server on every rho/k bucket, on both engine paths."""
+    sys_ = small_system
+    cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+    plain = (_kernel_server if kernel else
+             lambda s, kn, c: _server(s, kn, c))(sys_, knob, cuts)
+    deep = _depth_server(sys_, knob, cuts, kernel=kernel)
+    n = 20
+    classes = np.arange(n) % (len(cuts) + 1)       # every bucket live
+    for server in (plain, deep):
+        _stub_classes(server, classes)
+    qt = sys_.queries.terms[:n]
+    a = plain.serve_batch(qt)
+    b = deep.serve_batch(qt)                       # rerank_dyn path
+    assert (b["depths"] == deep.cfg.depth_pool_width).all()
+    np.testing.assert_array_equal(a["ranked"], b["ranked"])
+    np.testing.assert_array_equal(a["widths"], b["widths"])
+    # full pool admitted -> the work accounting reports no savings
+    assert b["stage2_rows_scored"] == b["stage2_rows_full"]
+
+
+def test_depth_mask_equals_narrower_pool_on_k(small_system):
+    """On the k knob the depth mask keeps the rank-ordered prefix of the
+    shared pool — bit-identical to serving with a pool of that width
+    (same candidates, same stage-2 scores, same rerank)."""
+    sys_ = small_system
+    server = _depth_server(sys_, "k", sys_.k_cutoffs)
+    qt = sys_.queries.terms[:16]
+    ref_p = int(max(sys_.k_cutoffs))
+    d = server.cfg.depth_cutoffs[1]
+    masked = server.serve_fixed(qt, ref_p, depth=d)["ranked"]
+    narrow = server.serve_fixed(qt, d)["ranked"]
+    np.testing.assert_array_equal(masked, narrow)
+    if d < server.cfg.rerank_depth:
+        assert (masked[:, d:] == -1).all()
+
+
+def test_depth_truncates_the_scored_prefix_on_rho(small_system):
+    """On the rho knob the full run ranks the whole pool, so a shallow
+    depth's docs are a prefix-sized subset of it, -1 past d."""
+    sys_ = small_system
+    server = _depth_server(sys_, "rho", sys_.rho_cutoffs)
+    qt = sys_.queries.terms[:16]
+    ref_p = sys_.cfg.stream_cap
+    full = server.serve_fixed(qt, ref_p)["ranked"]
+    d = server.cfg.depth_cutoffs[0]
+    shallow = server.serve_fixed(qt, ref_p, depth=d)["ranked"]
+    assert (shallow[:, d:] == -1).all()
+    for i in range(16):
+        got = set(shallow[i][shallow[i] >= 0].tolist())
+        assert got <= set(full[i][full[i] >= 0].tolist())
+        assert len(got) == min(d, int((full[i] >= 0).sum()))
+
+
+def test_depth_adds_one_executable_then_stays_compiled(small_system):
+    """The rerank_dyn variant costs one extra executable per padded
+    shape; mixed per-query depths after that compile nothing."""
+    sys_ = small_system
+    server = _depth_server(sys_, "k", sys_.k_cutoffs)
+    qt = sys_.queries.terms[:16]
+    _stub_classes(server, np.arange(16) % 3)
+    server.serve_batch(qt)                         # warm (depth path)
+    base = server.engine.n_compiles
+    rng = np.random.default_rng(0)
+    grid = np.asarray(server.cfg.depth_cutoffs)
+    with sanitizers.hot_path(server.engine):
+        for _ in range(3):
+            dvec = grid[rng.integers(0, len(grid), 16)]
+            out, _ = server.engine.serve(
+                qt, server.params_of(np.arange(16) % 3),
+                depth_vec=dvec)
+            assert (out != -2).all()
+    assert server.engine.n_compiles == base
+
+
+# --------------------------------------------- explicit ranked pad (sat) --
+
+def test_ranked_pad_is_explicit_sentinel(small_system):
+    """A fixed param below rerank_depth yields a pool narrower than the
+    final list: the tail is the explicit -1 no-document sentinel (the
+    same value rerank_pool emits for exhausted pools), not an implicit
+    clamp."""
+    from repro.serving.engine import _pad_ranked
+    a = np.arange(6, dtype=np.int32).reshape(2, 3)
+    p = _pad_ranked(a, 5)
+    np.testing.assert_array_equal(p[:, :3], a)
+    assert p.shape == (2, 5) and (p[:, 3:] == -1).all()
+    assert _pad_ranked(a, 3) is a                  # wide enough: no-op
+    sys_ = small_system
+    server = _server(sys_, "k", sys_.k_cutoffs)
+    out = server.serve_fixed(sys_.queries.terms[:8], 5)["ranked"]
+    assert out.shape == (8, server.cfg.rerank_depth)
+    assert (out[:, 5:] == -1).all()
+    assert (out[:, :5] >= 0).all()
+
+
+# ------------------------------------------- config validation (sat) --
+
+def test_config_rejects_rerank_depth_beyond_pool(small_system):
+    with pytest.raises(ValueError, match="rerank_depth"):
+        serve_lib.ServingConfig(
+            knob="k", cutoffs=(10, 20, 40), rerank_depth=50,
+            stream_cap=small_system.cfg.stream_cap)
+
+
+def test_config_rejects_depth_grid_not_ending_at_pool(small_system):
+    with pytest.raises(ValueError, match="depth"):
+        serve_lib.ServingConfig(
+            knob="k", cutoffs=(10, 20, 40), rerank_depth=30,
+            stream_cap=small_system.cfg.stream_cap,
+            depth_cutoffs=(5, 10, 20))             # pool is 40
+    with pytest.raises(ValueError, match="depth"):
+        serve_lib.ServingConfig(
+            knob="rho", cutoffs=(8, 16, 32), rerank_depth=30,
+            stream_cap=small_system.cfg.stream_cap,
+            depth_cutoffs=(5, 10, 40))             # pool is 30
 
 
 # --------------------------------------------------------------- timings --

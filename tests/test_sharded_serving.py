@@ -126,6 +126,50 @@ _SCRIPT = textwrap.dedent("""
         (srv.engine.n_compiles, base)
     assert set(service.queue.shape_counts) <= {8, 16}
 
+    # --- depth knob on the mesh: depth pinned to the pool width is ---
+    # --- bit-identical to the depth-free single-host reference, and ---
+    # --- mixed traced depths agree between sharded and unsharded    ---
+    # --- engines (the sharded rerank_dyn spec)                      ---
+    from repro.core import knobs as knobs_lib
+
+    def make_depth_server(mesh=None, knob="k"):
+        cuts = sys_.k_cutoffs if knob == "k" else sys_.rho_cutoffs
+        pool = 30 if knob == "rho" else int(max(cuts))
+        cfg = sp.ServingConfig(knob=knob, cutoffs=cuts, rerank_depth=30,
+                               stream_cap=sys_.cfg.stream_cap,
+                               depth_cutoffs=knobs_lib.depth_cutoffs(pool))
+        srv = sp.RetrievalServer(sys_.index, None, cfg, mesh=mesh)
+        real = srv.predict_classes
+        def stub(qt, knob=None, real=real, primary=knob,
+                 n_cls=len(cuts) + 1):
+            if knob not in (None, primary):    # depth: real registry path
+                return real(qt, knob=knob)
+            return np.arange(qt.shape[0]) % n_cls
+        srv.predict_classes = stub
+        return srv
+
+    for S, knobs in ((2, ("k", "rho")), (4, ("k",))):
+        mesh = make_compat_mesh((1, S), ("data", "model"))
+        for knob in knobs:
+            deep = make_depth_server(mesh, knob)
+            qt = sys_.queries.terms[:20]
+            a = refs[knob].serve_batch(qt)     # depth-free, single host
+            b = deep.serve_batch(qt)           # depth pinned to pool max
+            assert (b["depths"] == deep.cfg.depth_pool_width).all()
+            assert np.array_equal(a["ranked"], b["ranked"]), \\
+                f"depth==max S={S} knob={knob}"
+            assert np.array_equal(a["widths"], b["widths"])
+            # mixed per-query depths: sharded == unsharded, same vector
+            single = make_depth_server(None, knob)
+            grid = np.asarray(deep.cfg.depth_cutoffs)
+            dvec = grid[np.arange(20) % len(grid)]
+            cuts = deep.cfg.cutoffs
+            widths = deep.params_of(np.arange(20) % (len(cuts) + 1))
+            ra, _ = single.engine.serve(qt, widths, depth_vec=dvec)
+            rb, _ = deep.engine.serve(qt, widths, depth_vec=dvec)
+            assert np.array_equal(ra, rb), \\
+                f"mixed depth S={S} knob={knob}"
+
     print("ALL_OK")
 """)
 
