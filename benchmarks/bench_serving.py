@@ -43,7 +43,7 @@ FULL_JSON = os.path.join(ART, "BENCH_serving_full.json")
 #: filled by bench_continuous_scheduler / bench_paced_deadlines; the
 #: committed summary is assembled from these (deterministic fields only)
 _RECORDS: dict = {"scheduler": None, "deadline": None, "sharded": None,
-                  "knobs": None}
+                  "knobs": None, "obs": None}
 
 
 def _build_server():
@@ -567,6 +567,80 @@ def bench_sharded_vs_single() -> list[tuple]:
     ]
 
 
+def bench_obs_overhead() -> list[tuple]:
+    """The observability tax, and the committed bound on it.
+
+    Runs the same continuous churn stream twice — recorder off
+    (``NULL_OBS``) vs on — and reports the wall-clock ratio.  The
+    committed record carries ``obs_overhead_bounded`` (best-of-3 ratio
+    under a generous machine-independent margin) plus the deterministic
+    ``obs_counters`` block from one clean instrumented run: submissions,
+    working ticks and retirements are pure functions of (code, stream),
+    so the counter surface is diff-checked like the dispatch counts.
+    Also asserts the instrumentation itself compiles nothing (spans wrap
+    dispatch boundaries, never traced code) and that every span closed.
+    """
+    from repro.obs import NULL_OBS, Observability
+    from repro.serving.service import ContinuousBackend, RetrievalService
+
+    sys_, server = _build_rho_server()
+    n = min(96, sys_.queries.n_queries)
+    qt = sys_.queries.terms[:n]
+
+    def run(obs):
+        backend = ContinuousBackend(server, query_len=qt.shape[1],
+                                    slots=8, grain=8)
+        svc = RetrievalService(backend, obs=obs)
+        backend.scheduler.warmup()        # compile off the timed path
+        svc.serve_all(list(qt), deadline_ms=1e9)   # warm pass
+        ts = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            svc.serve_all(list(qt), deadline_ms=1e9)
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    off_s = run(NULL_OBS)
+    obs = Observability.create(capacity=1 << 15)
+    n0 = server.engine.n_compiles
+    on_s = run(obs)
+    obs_compiles = server.engine.n_compiles - n0
+    ratio = on_s / off_s
+    bounded = ratio <= 1.5                # generous: the real tax is ~1%
+
+    # one fresh instrumented run for the deterministic counter surface
+    # (serve_all ticks inline here — no service threads — so even the
+    # working-tick count is a pure function of the stream)
+    obs1 = Observability.create(capacity=1 << 15)
+    backend = ContinuousBackend(server, query_len=qt.shape[1],
+                                slots=8, grain=8)
+    svc = RetrievalService(backend, obs=obs1)
+    backend.scheduler.warmup()
+    svc.serve_all(list(qt), deadline_ms=1e9)
+    tc = obs1.trace.counts()
+    c = obs1.metrics.counters()
+    _RECORDS["obs"] = {
+        "obs_overhead_bounded": bool(bounded),
+        "obs_zero_new_compiles": bool(obs_compiles == 0),
+        "obs_spans_balanced": bool(
+            tc["n_open"] == 0 and tc["n_begun"] == tc["n_ended"]),
+        "obs_counters": {k: int(c[k]) for k in (
+            "queue.submitted", "sched.ticks",
+            "sched.retired.rho_exhausted",
+            "sched.retired.stream_exhausted",
+            "sched.retired.pool_complete")},
+    }
+    return [
+        ("serving/obs_off_96q_us", off_s / n * 1e6, "NULL_OBS"),
+        ("serving/obs_on_96q_us", on_s / n * 1e6,
+         f"{tc['n_begun']}_spans_per_pass"),
+        ("serving/obs_overhead_ratio", ratio,
+         "PASS" if bounded else "FAIL"),
+        ("serving/obs_new_compiles", obs_compiles,
+         "PASS" if obs_compiles == 0 else "FAIL"),
+    ]
+
+
 # ----------------------------------------------------------- JSON output --
 
 def payload_from_rows(rows: list[tuple]) -> dict:
@@ -627,6 +701,7 @@ def summary_payload() -> dict | None:
     # exact diff (git diff -I) so the committed trajectory can move
     payload.update(_RECORDS["sharded"] or {})
     payload.update(_RECORDS["knobs"] or {})
+    payload.update(_RECORDS["obs"] or {})
     return payload
 
 
@@ -648,6 +723,10 @@ def write_bench_json(rows: list[tuple], path: str | None = None) -> str:
         wrote = path
     full = payload_from_rows(rows)
     full["summary"] = summary
+    # the obs record rides along even when --only skipped the rest of
+    # the suite: CI's obs-smoke diff-checks these fields against the
+    # committed summary without paying for the full bench run
+    full["obs"] = _RECORDS["obs"]
     full["scale"] = common.scale_name()
     full["unix_time"] = time.time()
     with open(FULL_JSON, "w") as f:
@@ -658,22 +737,28 @@ def write_bench_json(rows: list[tuple], path: str | None = None) -> str:
 BENCHES = [bench_dynamic_vs_fixed, bench_compile_amortization,
            bench_admission_service, bench_continuous_scheduler,
            bench_three_knob_depth, bench_paced_deadlines,
-           bench_sharded_vs_single]
+           bench_sharded_vs_single, bench_obs_overhead]
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny scale, interpret mode (CI)")
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose name contains this "
+                         "substring (the committed summary needs the "
+                         "full set — use for iteration, not artifacts)")
     ap.add_argument("--out", default=None,
                     help=f"JSON output path (default {BENCH_JSON})")
     args = ap.parse_args(argv)
     if args.smoke:
         os.environ["REPRO_BENCH_SCALE"] = "tiny"
 
+    benches = [b for b in BENCHES
+               if args.only is None or args.only in b.__name__]
     print("name,us_per_call,derived")
     rows: list[tuple] = []
-    for b in BENCHES:
+    for b in benches:
         for row in b():
             rows.append(row)
             name, v, derived = row

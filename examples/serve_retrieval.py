@@ -27,6 +27,7 @@ import numpy as np
 from repro.core import cascade as cascade_lib
 from repro.core import experiment as E
 from repro.core import labeling
+from repro.obs import NULL_OBS, Observability, export as obs_export
 from repro.serving import pipeline as sp
 from repro.serving.admission import AdmissionConfig
 from repro.serving.service import EngineBackend, RetrievalService
@@ -61,6 +62,8 @@ def online_demo(sys_, server, service, args) -> None:
                               window=1024,
                               forest_kwargs=dict(n_trees=8, max_depth=6))))
     n0 = server.engine.n_compiles
+    obs = service.obs
+    obs.trace.clear()                     # trace the replay only
     replay(service, adapt_qt, chunk=128, controller=ctrl)
     replay(service, adapt_qt, chunk=128, controller=ctrl)  # second pass:
     # the shadow sampler labels what the first pass only served
@@ -73,6 +76,27 @@ def online_demo(sys_, server, service, args) -> None:
           f"compiles, recovered "
           f"{(before - after) / max(before, 1e-9):.0%} of the drift")
 
+    if obs.enabled and args.trace_out:
+        # the same run, seen through the trace: export the Perfetto
+        # JSON and join one query's spans to its telemetry record
+        payload = obs_export.write_chrome_trace(args.trace_out, obs.trace)
+        n_x = sum(1 for e in payload["traceEvents"] if e["ph"] == "X")
+        kinds = sorted({e["name"] for e in payload["traceEvents"]
+                        if e["ph"] == "X"})
+        print(f"\n== trace of the replay ==\n  {n_x} spans -> "
+              f"{args.trace_out}\n  kinds: {', '.join(kinds)}")
+        recs = [r for r in service.telemetry.snapshot()
+                if r.trace_id >= 0]
+        if recs:
+            att = obs_export.latency_attribution(obs.trace,
+                                                 recs[-1].trace_id)
+            print(f"  attribution for trace_id={att['trace_id']}: "
+                  f"stages={att['stages']} shared over "
+                  f"{len(att['shared'])} batch-scoped span kinds")
+        counters = {k: v for k, v in obs.metrics.counters().items()
+                    if k.startswith(("online.", "service."))}
+        print(f"  counters: {counters}")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -83,6 +107,9 @@ def main() -> None:
     ap.add_argument("--online", action="store_true",
                     help="demo the shadow-label/retrain/hot-swap loop "
                          "under a synthetic distribution shift")
+    ap.add_argument("--trace-out", default="serve_trace.json",
+                    help="with --online: write a Perfetto trace of the "
+                         "adaptation replay here ('' disables)")
     args = ap.parse_args()
 
     sys_ = E.build_system(E.ExperimentConfig(
@@ -114,9 +141,12 @@ def main() -> None:
             rerank_depth=100, stream_cap=sys_.cfg.stream_cap))
     backend = EngineBackend(server,
                             query_len=sys_.queries.terms.shape[1])
+    # the trace demo only pays for span recording when it will export
+    obs = (Observability.create()
+           if args.online and args.trace_out else NULL_OBS)
     service = RetrievalService(backend, AdmissionConfig(
         max_batch=256, default_deadline_ms=args.deadline_ms,
-        pad_multiple=server.cfg.pad_multiple))
+        pad_multiple=server.cfg.pad_multiple), obs=obs)
     service.warmup_now([256])             # deploy-time shape
 
     qt = sys_.queries.terms[:256]

@@ -44,6 +44,12 @@ HOT_PATHS: tuple[tuple[str, tuple[str, ...] | None, tuple[str, ...]], ...] = (
     # chunk advance in between must stay free of host syncs
     ("serving/sched/scheduler.py", ("_chunk_step",), ()),
     ("kernels/", None, ()),
+    # the observability hot path: span/metric recording runs inside the
+    # serve loops (often under their locks), so it must never sync or
+    # copy — only host floats from the injected clock.  export.py is
+    # deliberately NOT hot: it runs offline, after the run.
+    ("obs/trace.py", None, ()),
+    ("obs/metrics.py", None, ()),
 )
 
 _SYNC_TAILS = {"block_until_ready", "device_get", "copy_to_host_async"}

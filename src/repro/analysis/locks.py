@@ -75,6 +75,22 @@ LOCK_REGISTRY: tuple[LockSpec, ...] = (
     LockSpec("TelemetryBuffer", "_lock", ("_ring", "n_seen", "n_dropped")),
     LockSpec("PredictorStore", "_lock",
              ("_versions", "_current", "_next_version")),
+    # observability: span ring + metrics registry.  Both sit at the END
+    # of the lock order (service -> admission -> sched -> swap -> cache
+    # -> obs): leaves that acquire nothing further, so recording under
+    # any serving lock is legal and the order stays acyclic.  The
+    # scheduler's `_tick_id` is deliberately NOT listed here — it is
+    # tick-thread-private by the single-owner contract (like `_state`).
+    LockSpec("TraceRecorder", "_lock",
+             ("_ring", "_head", "_open", "_tids",
+              "n_begun", "n_ended", "n_dropped"),
+             assume_held=("_append",)),
+    LockSpec("MetricsRegistry", "_lock", ("_metrics",),
+             # counters() reads each Counter's _value under this same
+             # held lock (metrics share the registry lock; taking it
+             # again via value() would deadlock — threading.Lock is not
+             # re-entrant)
+             assume_held=("counters",)),
 )
 
 

@@ -63,6 +63,12 @@ def main() -> None:
                          "nothing)")
     ap.add_argument("--retrain-every", type=int, default=64,
                     help="new shadow labels between cascade refits")
+    ap.add_argument("--trace-out", default="",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "here (atomic tmp+rename; '' disables)")
+    ap.add_argument("--metrics-snapshot", default="",
+                    help="append one JSONL metrics snapshot here on exit "
+                         "('' disables)")
     args = ap.parse_args()
 
     from repro.launch import mesh as mesh_lib
@@ -74,6 +80,7 @@ def main() -> None:
     from repro.core import cascade as cascade_lib
     from repro.core import experiment as E
     from repro.core import labeling, tradeoff
+    from repro.obs import NULL_OBS, Observability, export as obs_export
     from repro.online import (OnlineConfig, OnlineController,
                               TelemetryBuffer, TrainerConfig)
     from repro.serving import pipeline as sp
@@ -107,6 +114,11 @@ def main() -> None:
     if mesh is not None:
         print(f"mesh: {dict(mesh.shape)} — candidates over 'model', "
               f"batches over data axes (pad grid {backend.pad_multiple})")
+    # one observability handle threads through every layer (service,
+    # admission, engine, scheduler, online controller); disabled unless
+    # an export flag asks for it, so the default path records nothing
+    obs = (Observability.create()
+           if args.trace_out or args.metrics_snapshot else NULL_OBS)
     service = RetrievalService(
         backend,
         AdmissionConfig(max_batch=args.batch,
@@ -116,7 +128,8 @@ def main() -> None:
         # distribution, so the background thread pre-compiles it at
         # deploy time; warmup_now covers the first-boot case
         warmup=WarmupPolicy(census_path=args.census or None),
-        telemetry=TelemetryBuffer() if args.online else None)
+        telemetry=TelemetryBuffer() if args.online else None,
+        obs=obs)
     service.warmup_now([args.batch])       # deploy-time shape; the
     # warmup policy keeps compiling whatever shapes admission produces
 
@@ -177,6 +190,16 @@ def main() -> None:
     print("warmed shapes:", sorted(service.warmup.compiled),
           "| shape census:", dict(service.queue.shape_counts),
           "| census file:", args.census or "(disabled)")
+    if args.trace_out:
+        payload = obs_export.write_chrome_trace(args.trace_out, obs.trace)
+        n_x = sum(1 for e in payload["traceEvents"] if e["ph"] == "X")
+        print(f"trace: {n_x} spans -> {args.trace_out} "
+              f"(recorder {obs.trace.counts()})")
+    if args.metrics_snapshot:
+        obs_export.write_metrics_snapshot(
+            args.metrics_snapshot, obs.metrics,
+            extra={"argv_knob": args.knob, "batches": args.batches})
+        print(f"metrics snapshot -> {args.metrics_snapshot}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ import dataclasses
 import threading
 import time
 
+from repro.obs import NULL_OBS
 from repro.online.drift import DriftConfig, EnvelopeMonitor
 from repro.online.shadow import ShadowExecutor
 from repro.online.store import PredictorStore
@@ -105,6 +106,17 @@ class OnlineController:
         self.last_error: BaseException | None = None
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        # share the service's observability handle by default: online
+        # spans (shadow / refit / swap / fallback events) land in the
+        # same recorder as the serving path's
+        self.bind_obs(getattr(service, "obs", NULL_OBS))
+
+    def bind_obs(self, obs) -> None:
+        self.obs = obs
+        self._m_shadow = obs.metrics.counter("online.shadow_runs")
+        self._m_refits = obs.metrics.counter("online.refits")
+        self._m_swaps = obs.metrics.counter("online.swaps")
+        self._m_fallbacks = obs.metrics.counter("online.fallbacks")
 
     # -------------------------------------------------------- one cycle --
     def _knob_batch(self, knob: str, batch):
@@ -126,9 +138,12 @@ class OnlineController:
         for every knob with adaptation state (same batch, per-knob
         labels)."""
         self.n_steps += 1
-        batch = self.shadow.run_once()
+        trace = self.obs.trace
+        with trace.span("online.shadow", step=self.n_steps):
+            batch = self.shadow.run_once()
         if batch is None:
             return self.stats()
+        self._m_shadow.inc()
         for knob, trainer in self.trainers.items():
             kb = self._knob_batch(knob, batch)
             if kb is None:
@@ -140,13 +155,21 @@ class OnlineController:
                 # (KnobSpec.params_of), so a depth-only drift must not
                 # widen stage 1; the depth monitor just drives the
                 # labeling tau of its own retrains
+                if decision.fallback and not self.server.fallback:
+                    trace.event("online.fallback", step=self.n_steps)
+                    self._m_fallbacks.inc()
                 self.server.fallback = decision.fallback
             trainer.add(kb)
             if trainer.should_retrain():
-                casc, thresholds = trainer.retrain(decision.tau)
-                self.stores[knob].publish(casc, thresholds,
-                                          trained_on=trainer.window_size)
-                self.stores[knob].install(self.server, knob=knob)
+                with trace.span("online.refit", knob=knob,
+                                tau=round(float(decision.tau), 6)):
+                    casc, thresholds = trainer.retrain(decision.tau)
+                self._m_refits.inc()
+                with trace.span("online.swap", knob=knob):
+                    self.stores[knob].publish(
+                        casc, thresholds, trained_on=trainer.window_size)
+                    self.stores[knob].install(self.server, knob=knob)
+                self._m_swaps.inc()
                 self.n_swaps += 1
         return self.stats()
 

@@ -50,6 +50,9 @@ class TelemetryRecord:
     # and the depth-cascade class behind it
     depth: float = float("nan")
     depth_class: int = -1
+    # join key to the trace recorder's spans (the admission seq); -1
+    # when the request was served outside the admission path
+    trace_id: int = -1
 
 
 class TelemetryBuffer:
@@ -89,6 +92,7 @@ class TelemetryBuffer:
                    else float(result["depth"])),
             depth_class=(-1 if result.get("depth_class") is None
                          else int(result["depth_class"])),
+            trace_id=int(result.get("trace_id", -1)),
         ))
 
     def append(self, rec: TelemetryRecord) -> None:

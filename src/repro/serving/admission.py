@@ -36,6 +36,7 @@ import threading
 import time
 from concurrent.futures import Future
 
+from repro.obs import NULL_OBS
 from repro.serving import bucketing
 
 __all__ = ["AdmissionConfig", "Request", "Batch", "AdmissionQueue"]
@@ -57,6 +58,8 @@ class Request:
     t_submit: float
     seq: int                       # FIFO tie-break within a deadline
     future: Future
+    span: object = None            # open "request" span; seq is the
+    #                                trace_id joining spans to telemetry
 
     def sort_key(self):
         return (self.deadline, self.seq)
@@ -88,6 +91,14 @@ class AdmissionQueue:
         self._seq = itertools.count()
         self.shape_counts: collections.Counter[int] = collections.Counter()
         self.n_submitted = 0
+        self.obs = NULL_OBS
+        self._m_submitted = NULL_OBS.metrics.counter("queue.submitted")
+
+    def bind_obs(self, obs) -> None:
+        """Attach an observability handle (obs locks are leaves, so
+        recording under ``_lock`` is within the global order)."""
+        self.obs = obs
+        self._m_submitted = obs.metrics.counter("queue.submitted")
 
     # ------------------------------------------------------------ submit --
     def submit(self, payload, deadline_ms: float | None = None,
@@ -99,6 +110,8 @@ class AdmissionQueue:
         fut: Future = Future()
         req = Request(payload=payload, deadline=now + deadline_ms / 1e3,
                       t_submit=now, seq=next(self._seq), future=fut)
+        req.span = self.obs.trace.begin("request", qid=req.seq)
+        self._m_submitted.inc()
         with self._lock:
             heapq.heappush(self._heap, (req.sort_key(), req))
             self.n_submitted += 1
@@ -198,5 +211,9 @@ class AdmissionQueue:
         reqs = [heapq.heappop(self._heap)[1] for _ in range(take)]
         padded = bucketing.pad_length(len(reqs), self.cfg.pad_multiple)
         self.shape_counts[padded] += 1
+        for r in reqs:
+            # retrospective: the request's wait in the pending set
+            self.obs.trace.record("queue", r.t_submit, now, qid=r.seq,
+                                  trigger=trigger)
         return Batch(requests=reqs, padded_size=padded, t_formed=now,
                      trigger=trigger)

@@ -59,6 +59,7 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs as obs_lib
 from repro.retrieval import gold, jass
 from repro.retrieval import topk as topk_lib
 from repro.retrieval.index import (block_doc_bounds, partition_cap,
@@ -307,6 +308,13 @@ class ServingEngine:
         self._cache: dict = {}
         self._cache_lock = threading.Lock()
         self.n_compiles = 0
+        # observability: spans around dispatch boundaries (never inside
+        # traced code) + deterministic dispatch/compile counters.  obs
+        # locks are leaves in the global order, so recording under
+        # _cache_lock is legal.
+        self.trace = obs_lib.NULL_TRACE
+        self._m_dispatch = obs_lib.NULL_METRIC
+        self._m_compile = obs_lib.NULL_METRIC
 
         self._kern = dict(use_kernel=self.use_kernel,
                           interpret=self.interpret,
@@ -321,6 +329,13 @@ class ServingEngine:
                                          depth=cfg.rerank_depth)
         self._rerank_dyn = functools.partial(_stage_rerank_dyn,
                                              depth=cfg.rerank_depth)
+
+    def bind_obs(self, obs) -> None:
+        """Attach an observability handle: per-stage spans in ``serve``
+        and the scheduler programs, plus dispatch/compile counters."""
+        self.trace = obs.trace
+        self._m_dispatch = obs.metrics.counter("engine.dispatches")
+        self._m_compile = obs.metrics.counter("engine.compiles")
 
     def _stage1_for(self, pool_width: int):
         """stage1 fn + cache name for a given static pool width (the
@@ -362,6 +377,7 @@ class ServingEngine:
                 with self._cache_lock:
                     self._cache[key] = exe
                     self.n_compiles += 1
+                self._m_compile.inc()
                 entry.exe = exe
                 entry.ready.set()
                 return exe
@@ -420,10 +436,13 @@ class ServingEngine:
             a = tuple(self._place(name, j, jnp.asarray(x))
                       for j, x in enumerate(a))
             exe = self._compiled(name, fn, a)
-            t0 = time.perf_counter()
-            out = exe(*a)
-            jax.block_until_ready(out)
-            timings[label] = (time.perf_counter() - t0) * 1e3
+            self._m_dispatch.inc()
+            # one instrumentation path: the timings dict is *derived*
+            # from the span (handles carry t0/t1 even with obs off)
+            with self.trace.span("engine." + name) as sp:
+                out = exe(*a)
+                jax.block_until_ready(out)
+            timings[label] = sp.dur_ms
             return out
 
         s1_name, s1_fn = self._stage1_for(int(pool_width or self.max_k))
@@ -917,10 +936,11 @@ class ShardedServingEngine(ServingEngine):
 
         def timed(label, name, fn, *a):
             exe, a = prep(name, fn, *a)
-            t0 = time.perf_counter()
-            out = exe(*a)
-            jax.block_until_ready(out)
-            timings[label] = (time.perf_counter() - t0) * 1e3
+            self._m_dispatch.inc()
+            with self.trace.span("engine." + name) as sp:
+                out = exe(*a)
+                jax.block_until_ready(out)
+            timings[label] = sp.dur_ms
             return out
 
         width = int(pool_width or self.max_k)
@@ -933,22 +953,28 @@ class ShardedServingEngine(ServingEngine):
         # issue the cross-shard survivor all-gather, then dispatch stage 2
         # while it is in flight; the merge consumes the gathered pool last
         ag_exe, ag_args = prep("allgather", self._allgather, v, gi)
+        self._m_dispatch.inc()
         ag_out = ag_exe(*ag_args)
         m_name, m_fn = self._merge_for(width)
         s2_exe, s2_args = prep("stage2", self._stage2,
                                sd_l, s3_l, self.doc_len, qids)
-        t0 = time.perf_counter()
-        stage2 = s2_exe(*s2_args)
-        jax.block_until_ready(stage2)
-        timings["stage2_ms"] = (time.perf_counter() - t0) * 1e3
-        t0 = time.perf_counter()
+        self._m_dispatch.inc()
+        # the overlap seam: sync stage-2 FIRST, the gathered pool second
+        # (see docs/INVARIANTS.md §4) — the spans wrap the existing sync
+        # points without reordering them
+        with self.trace.span("engine.stage2") as sp:
+            stage2 = s2_exe(*s2_args)
+            jax.block_until_ready(stage2)
+        timings["stage2_ms"] = sp.dur_ms
         if self.cfg.knob == "rho":
             m_exe, m_args = prep(m_name, m_fn, *ag_out)
         else:
             m_exe, m_args = prep(m_name, m_fn, *ag_out, pv)
-        pool = m_exe(*m_args)
-        jax.block_until_ready(pool)
-        timings["merge_ms"] = (time.perf_counter() - t0) * 1e3
+        self._m_dispatch.inc()
+        with self.trace.span("engine.merge") as sp:
+            pool = m_exe(*m_args)
+            jax.block_until_ready(pool)
+        timings["merge_ms"] = sp.dur_ms
         if depth_vec is None:
             ranked = timed("rerank_ms", "rerank", self._rerank, stage2,
                            pool)
@@ -1085,7 +1111,12 @@ class SchedPrograms:
 
     def _run(self, name: str, fn, *args):
         a = tuple(jnp.asarray(x) for x in args)
-        return self.engine._compiled(name, fn, a)(*a)
+        exe = self.engine._compiled(name, fn, a)
+        self.engine._m_dispatch.inc()
+        # the span covers the *dispatch window* only (no added sync —
+        # chunk advances stay async; gather/finalize sync in the caller)
+        with self.engine.trace.span("sched." + name):
+            return exe(*a)
 
     def init_state(self, slots: int, query_len: int) -> SchedState:
         """Fresh (empty) slot table residency.  Segment bounds start at
@@ -1414,7 +1445,10 @@ class ShardedSchedPrograms(SchedPrograms):
         mesh = self.engine.mesh
         a = tuple(jax.device_put(jnp.asarray(x), NamedSharding(mesh, s))
                   for x, s in zip(args, self._arg_specs[name]))
-        return self.engine._compiled(name, fn, a)(*a)
+        exe = self.engine._compiled(name, fn, a)
+        self.engine._m_dispatch.inc()
+        with self.engine.trace.span("sched." + name):
+            return exe(*a)
 
     def init_state(self, slots: int, query_len: int) -> SchedState:
         """Fresh slot table over the partitioned layout: every buffer is

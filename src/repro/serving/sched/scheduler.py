@@ -36,6 +36,7 @@ import time
 
 import numpy as np
 
+from repro.obs import NULL_OBS
 from repro.serving import bucketing
 from repro.serving.engine import SchedPrograms
 from repro.serving.sched.slots import SlotTable
@@ -103,6 +104,22 @@ class ContinuousScheduler:
         # counters are deterministic across runs and platforms.
         self.n_rows_scored = 0
         self.n_rows_full = 0
+        # tick-thread only (like _state): the monotone tick id stamped
+        # on tick/step/slot spans; not under _lock by the same
+        # single-owner contract
+        self._tick_id = 0
+        self.bind_obs(NULL_OBS)
+
+    def bind_obs(self, obs) -> None:
+        """Attach an observability handle and pre-bind the hot-path
+        metric objects (obs locks are leaves: recording while holding
+        ``_lock`` is within the global order)."""
+        self.obs = obs
+        self._m_ticks = obs.metrics.counter("sched.ticks")
+        self._m_retired = {
+            r: obs.metrics.counter("sched.retired." + r)
+            for r in ("rho_exhausted", "stream_exhausted",
+                      "pool_complete")}
 
     # -------------------------------------------------------------- tick --
     def tick(self, now: float | None = None) -> int:
@@ -113,6 +130,13 @@ class ContinuousScheduler:
         ev = self._finalize_step(t)
         ev += self._refill_step(t)
         ev += self._chunk_step(t)
+        if ev:
+            # working ticks only: idle polls would flood the span ring
+            # and make the deterministic tick count load-dependent
+            self.obs.trace.record("tick", t, self.clock(),
+                                  tick=self._tick_id, ev=ev)
+            self._m_ticks.inc()
+            self._tick_id += 1
         return ev
 
     @property
@@ -177,14 +201,27 @@ class ContinuousScheduler:
                 "chunks_executed": s.chunks,
                 "chunks_max": self.prog.n_chunks,
                 "slot_occupancy": s.occupancy,
+                "trace_id": int(r.seq),
             })
             reqs.append(r)
+        trace = self.obs.trace
+        for i, s in enumerate(g):
+            # slot occupancy window, admission to retirement
+            trace.record("slot", s.t_admit, s.t_retire, qid=s.qid,
+                         slot=s.idx, width=int(s.width),
+                         depth=int(s.depth), chunks=int(s.chunks),
+                         retire_reason=s.retire_reason,
+                         occupancy=round(float(s.occupancy), 4))
         for r, res in zip(reqs, results):
             if not r.future.done():
                 r.future.set_result(res)
+            trace.end(r.span, retire_reason=res["retire_reason"],
+                      deadline_met=bool(res["deadline_met"]))
         if self.on_results is not None:
             self.on_results(reqs, results, t_done,
                             service_ms=(t_done - t0) * 1e3)
+        trace.record("tick.finalize", t0, self.clock(),
+                     tick=self._tick_id, n=len(g))
         with self._lock:
             for s in g:
                 # pool rows the rerank actually scored for this slot vs
@@ -230,12 +267,17 @@ class ContinuousScheduler:
             n = min(free, self.grain, len(cand))
             t0 = self.clock()
             classes, ver = self._predict(cand)
-            predict_ms = (self.clock() - t0) * 1e3
+            t1 = self.clock()
+            predict_ms = (t1 - t0) * 1e3
+            self.obs.trace.record("predict", t0, t1,
+                                  tick=self._tick_id, n=len(cand))
             keep, back = self._select(cand, classes, n)
             if back.size:
                 self.queue.requeue([cand[i] for i in back])
             self._admit([cand[i] for i in keep], classes[keep], ver,
                         predict_ms, t)
+            self.obs.trace.record("tick.refill", t0, self.clock(),
+                                  tick=self._tick_id, n=len(keep))
             ev += 1
             if len(keep) < self.grain:
                 break                  # queue drained below a full grain
@@ -348,11 +390,16 @@ class ContinuousScheduler:
                 else:
                     done = s.pos >= s.end
                 self.n_admitted += 1
+                # the request's wait in the pending set (take_urgent
+                # bypasses batch formation, so the queue span lands here)
+                self.obs.trace.record("queue", r.t_submit, t, qid=s.qid,
+                                      slot=s.idx)
                 if done:               # empty stream: retire immediately
                     self._retire(s, t, occ)
 
     # ------------------------------------------------------------- chunk --
     def _chunk_step(self, t: float) -> int:
+        t0 = self.clock()
         with self._lock:
             act = self.table.active()
             if not act:
@@ -380,6 +427,10 @@ class ContinuousScheduler:
                     done = s.pos >= s.end
                 if done:
                     self._retire(s, t, occ)
+        # host-only recording: the chunk dispatch window (the sched.chunk
+        # span inside prog.chunk covers the dispatch itself)
+        self.obs.trace.record("tick.chunk", t0, self.clock(),
+                              tick=self._tick_id, n=len(act))
         return 1
 
     def _retire(self, s, t: float, occupancy: float) -> None:
@@ -395,6 +446,7 @@ class ContinuousScheduler:
         self._retired.append(s)
         self.retire_reasons[reason] += 1
         self.n_retired += 1
+        self._m_retired[reason].inc()
 
     # ----------------------------------------------------------- control --
     def abort(self, exc: BaseException | None = None) -> None:
@@ -410,6 +462,8 @@ class ContinuousScheduler:
                         r.future.set_exception(exc)
                     else:
                         r.future.cancel()
+                if r is not None:
+                    self.obs.trace.end(r.span, aborted=True)
                 self.table.release(s)
 
     def warmup(self, query_len: int | None = None) -> int | None:

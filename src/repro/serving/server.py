@@ -37,7 +37,9 @@ class ServerStats:
     mean_param: float
     class_histogram: np.ndarray
     pct_in_envelope: float | None
-    stage_ms: dict | None = None        # mean per-stage wall-clock
+    stage_ms: dict | None = None        # per-stage wall-clock: either a
+    #                                     bare mean (legacy float) or a
+    #                                     {"mean","p99","n"} dict
     n_compiles: int | None = None       # engine executable-cache size
     queue_ms: list | None = None        # per-request admission delay
     service_ms: list | None = None      # per-batch backend execute time
@@ -71,9 +73,17 @@ class ServerStats:
                if self.pct_in_envelope is not None else "")
         stages = ""
         if self.stage_ms:
+            def one(k, v):
+                # dict form carries the p99 and sample count so a stage
+                # seen in few (or slow-tail) batches isn't misread as
+                # its mean; bare floats (legacy producers) still render
+                if isinstance(v, dict):
+                    return (f"{k.removesuffix('_ms')}="
+                            f"{v['mean']:.1f}ms"
+                            f"(p99={v['p99']:.1f} n={v['n']})")
+                return f"{k.removesuffix('_ms')}={v:.1f}ms"
             stages = " " + " ".join(
-                f"{k.removesuffix('_ms')}={v:.1f}ms"
-                for k, v in self.stage_ms.items())
+                one(k, v) for k, v in self.stage_ms.items())
         comp = (f" compiles={self.n_compiles}"
                 if self.n_compiles is not None else "")
         dl = ""

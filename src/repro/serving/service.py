@@ -39,6 +39,7 @@ deterministic mode tests and synchronous callers use.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import json
 import os
 import queue as queue_lib
@@ -48,6 +49,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.obs import NULL_OBS, NULL_TRACE
 from repro.serving.admission import AdmissionConfig, AdmissionQueue, Batch
 
 __all__ = ["Backend", "EngineBackend", "ShardedEngineBackend",
@@ -162,6 +164,11 @@ class EngineBackend:
     def n_compiles(self) -> int | None:
         return self.server.engine.n_compiles
 
+    def bind_obs(self, obs) -> None:
+        """Forward the service's observability handle to the engine
+        (per-stage spans + dispatch/compile counters)."""
+        self.server.engine.bind_obs(obs)
+
     # ------------------------------------------- online adaptation hooks --
     @property
     def predictor_version(self) -> int:
@@ -247,6 +254,11 @@ class ContinuousBackend:
                               fixed_param=fixed_param)
         self.scheduler = None          # bound by RetrievalService
 
+    def bind_obs(self, obs) -> None:
+        self.server.engine.bind_obs(obs)
+        if self.scheduler is not None:
+            self.scheduler.bind_obs(obs)
+
     def make_scheduler(self, queue, on_results):
         from repro.serving.sched import ContinuousScheduler
         self.scheduler = ContinuousScheduler(
@@ -293,6 +305,10 @@ class FunnelBackend:
         self.pad_multiple = pad_multiple
         self.n_classes = len(funnel.cfg.cutoffs) + 1
         self._warm_shapes: set[int] = set()
+        self.trace = NULL_TRACE
+
+    def bind_obs(self, obs) -> None:
+        self.trace = obs.trace
 
     def collate(self, payloads: list):
         uf = np.stack([np.asarray(p[0], np.float32) for p in payloads])
@@ -315,12 +331,12 @@ class FunnelBackend:
 
     def execute(self, batch, classes) -> tuple[list[dict], dict]:
         n, uf, hist, cls = self._pad(*batch, classes)
-        t0 = time.perf_counter()
-        dcls = (self.funnel.predict(uf, hist, knob="depth")
-                if getattr(self.funnel, "has_depth_knob", False)
-                else None)
-        out = self.funnel.execute(uf, hist, cls, depth_classes=dcls)
-        timings = {"funnel_ms": (time.perf_counter() - t0) * 1e3}
+        with self.trace.span("engine.funnel") as sp:
+            dcls = (self.funnel.predict(uf, hist, knob="depth")
+                    if getattr(self.funnel, "has_depth_knob", False)
+                    else None)
+            out = self.funnel.execute(uf, hist, cls, depth_classes=dcls)
+        timings = {"funnel_ms": sp.dur_ms}
         results = [
             {"ranked": out["ranked"][i], "class": int(classes[i]),
              "width": float(out["k"][i]),
@@ -531,7 +547,8 @@ class RetrievalService:
                  admission: AdmissionConfig | None = None,
                  warmup: WarmupPolicy | None = None,
                  handoff_depth: int = 2,
-                 telemetry=None):
+                 telemetry=None,
+                 obs=None):
         if admission is None:
             admission = AdmissionConfig(pad_multiple=backend.pad_multiple)
         elif admission.pad_multiple != backend.pad_multiple:
@@ -569,6 +586,22 @@ class RetrievalService:
         if isinstance(backend, ContinuousBackend):
             self._sched = backend.make_scheduler(self.queue,
                                                  self._note_results)
+        #: one observability handle for the whole request path: the
+        #: service binds it to the queue, the backend (which forwards to
+        #: engine/scheduler), and its own loops — so every span lives in
+        #: one recorder and every counter in one registry.  NULL_OBS
+        #: (the default) records nothing; handles still carry times.
+        self.obs = NULL_OBS if obs is None else obs
+        self.queue.bind_obs(self.obs)
+        bind = getattr(backend, "bind_obs", None)
+        if bind is not None:
+            bind(self.obs)
+        self._bseq = itertools.count()  # batch join key for trace.ctx
+        self._m_batches = self.obs.metrics.counter("service.batches")
+        self._m_met = self.obs.metrics.counter("service.deadline_met")
+        self._m_missed = self.obs.metrics.counter(
+            "service.deadline_missed")
+        self._m_cancelled = self.obs.metrics.counter("service.cancelled")
 
     # ------------------------------------------------------------ submit --
     def submit(self, payload, deadline_ms: float | None = None):
@@ -602,6 +635,7 @@ class RetrievalService:
                 # stop()-aborted, never served: tracked apart so it can't
                 # be mistaken for a deadline miss (ServerStats.deadline_met)
                 self._n_cancelled += 1
+                self._m_cancelled.inc()
 
     # ------------------------------------------------------------ inline --
     def step(self, now: float | None = None) -> int:
@@ -643,22 +677,36 @@ class RetrievalService:
 
     # --------------------------------------------------------- execution --
     def _run_batch(self, b: Batch, pre=None) -> None:
+        trace = self.obs.trace
         try:
             if pre is None:
+                bseq = next(self._bseq)
                 batch = self.backend.collate(b.payloads)
-                t0 = time.perf_counter()
-                pred = self.backend.predict(batch)
-                predict_ms = (time.perf_counter() - t0) * 1e3
+                # spans replace the perf_counter scraps: predict_ms /
+                # service_ms are *derived* from the span handles (which
+                # stamp times even with obs off), and trace.ctx tags the
+                # batch-scoped engine stage spans with the join key that
+                # latency_attribution uses to reach per-query rows
+                with trace.ctx(batch=bseq):
+                    with trace.span("predict", n=len(b)) as psp:
+                        pred = self.backend.predict(batch)
+                predict_ms = psp.dur_ms
             else:
-                batch, pred, predict_ms = pre
-            t0 = time.perf_counter()
-            results, timings = self.backend.execute(batch, pred)
-            t_done = time.perf_counter()
-            service_ms = (t_done - t0) * 1e3
+                batch, pred, predict_ms, bseq, t_ready = pre
+                # handoff wait between the admit thread's predict and
+                # this exec-thread dispatch (threaded overlap's queue)
+                trace.record("handoff", t_ready, trace.clock(),
+                             batch=bseq, n=len(b))
+            with trace.ctx(batch=bseq):
+                with trace.span("execute", n=len(b)) as esp:
+                    results, timings = self.backend.execute(batch, pred)
+            t_done = esp.t1
+            service_ms = esp.dur_ms
         except Exception as e:                 # noqa: BLE001
             for r in b.requests:
                 if not r.future.done():
                     r.future.set_exception(e)
+                trace.end(r.span, error=type(e).__name__)
             return
         queue_ms = [(b.t_formed - r.t_submit) * 1e3 for r in b.requests]
         # total spans submit -> results ready, so it also counts the
@@ -681,13 +729,19 @@ class RetrievalService:
             res["service_ms"] = service_ms
             res["total_ms"] = tms
             res["deadline_met"] = t_done <= req.deadline
+            res["trace_id"] = int(req.seq)
             enriched.append(res)
             if not req.future.done():
                 req.future.set_result(res)
+            trace.end(req.span, batch=bseq,
+                      deadline_met=bool(res["deadline_met"]))
         met = sum(1 for res in enriched if res["deadline_met"])
         with self._lock:
             self._n_deadline_met += met
             self._n_deadline_missed += len(enriched) - met
+        self._m_batches.inc()
+        self._m_met.inc(met)
+        self._m_missed.inc(len(enriched) - met)
         if self.telemetry is not None:
             # tap *after* the futures resolve: the append never adds to
             # request latency, only to the exec thread's turnaround.
@@ -726,6 +780,9 @@ class RetrievalService:
             self._records.append(rec)
             self._n_deadline_met += met
             self._n_deadline_missed += len(results) - met
+        self._m_batches.inc()
+        self._m_met.inc(met)
+        self._m_missed.inc(len(results) - met)
         if self.telemetry is not None:
             ver = getattr(self.backend, "predictor_version", 0)
             try:
@@ -778,14 +835,19 @@ class RetrievalService:
                 # census after collate so the backend can size warmup
                 # queries for shapes the background thread compiles
                 self.warmup.observe(b.padded_size)
-                t0 = time.perf_counter()
-                pred = self.backend.predict(batch)
-                predict_ms = (time.perf_counter() - t0) * 1e3
-                item = (b, (batch, pred, predict_ms))
+                bseq = next(self._bseq)
+                trace = self.obs.trace
+                with trace.ctx(batch=bseq):
+                    with trace.span("predict", n=len(b)) as psp:
+                        pred = self.backend.predict(batch)
+                # psp.t1 is when the batch became ready for handoff —
+                # _run_batch closes the handoff span against it
+                item = (b, (batch, pred, psp.dur_ms, bseq, psp.t1))
             except Exception as e:             # noqa: BLE001
                 for r in b.requests:
                     if not r.future.done():
                         r.future.set_exception(e)
+                    self.obs.trace.end(r.span, error=type(e).__name__)
                 continue
             placed = False
             while not self._stop.is_set():
@@ -798,6 +860,7 @@ class RetrievalService:
             if not placed:             # stopped mid-handoff: don't strand
                 for r in b.requests:   # waiters on an unresolved future
                     r.future.cancel()
+                    self.obs.trace.end(r.span, cancelled=True)
         self._handoff.put((self._SENTINEL, None))
 
     def _exec_loop(self) -> None:
@@ -896,6 +959,7 @@ class RetrievalService:
             while (b := self.queue.poll()) is not None:
                 for r in b.requests:
                     r.future.cancel()
+                    self.obs.trace.end(r.span, cancelled=True)
         # drain leftovers (the sentinel, plus — if a join timed out mid-
         # compile — predicted batches whose waiters must not strand)
         while not self._handoff.empty():
@@ -906,6 +970,7 @@ class RetrievalService:
             if item is not self._SENTINEL:
                 for r in item.requests:
                     r.future.cancel()
+                    self.obs.trace.end(r.span, cancelled=True)
         # persist the padded-shape census for the next run's deploy-time
         # pre-compile (no-op unless the policy was given a census_path)
         self.warmup.save_census()
@@ -948,9 +1013,17 @@ class RetrievalService:
         stage_ms = None
         rows = [r.timings for r in recs if r.timings]
         if rows:
+            # mean alone misreads sparse-timings batches (one slow batch
+            # vanishes into the average): report p99 and the sample count
+            # per stage as well, and note that stages may appear in
+            # different numbers of batches (n varies per key)
             keys = set().union(*rows)
-            stage_ms = {k: float(np.mean([r[k] for r in rows if k in r]))
-                        for k in sorted(keys)}
+            stage_ms = {}
+            for k in sorted(keys):
+                v = np.asarray([r[k] for r in rows if k in r], np.float64)
+                stage_ms[k] = {"mean": float(v.mean()),
+                               "p99": float(np.percentile(v, 99)),
+                               "n": int(v.size)}
         return ServerStats(
             n_queries=int(sum(r.n for r in recs)),
             latencies_ms=lat,
